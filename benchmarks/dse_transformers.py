@@ -1,0 +1,40 @@
+"""Beyond-paper: QADAM DSE over the assigned transformer/MoE/SSM zoo.
+
+The paper sweeps CNNs only; core/workloads.py extracts per-layer GEMMs
+from the modern architectures, so the same PPA surrogates + Pareto
+machinery rank PE types for LLM serving workloads. Reported: normalized
+perf/area + energy per PE type for three representative archs (decode
+workloads — where edge accelerators would actually run them).
+"""
+
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import emit
+from repro.configs import get as get_cfg
+from repro.core import enumerate_space, evaluate_space, normalized_report
+from repro.core.workloads import transformer_workload
+
+
+def run():
+    rows = []
+    space = enumerate_space(max_points=1500, seed=0)
+    for arch, seq in (("smollm-135m", 2048), ("rwkv6-1.6b", 2048),
+                      ("deepseek-moe-16b", 2048)):
+        cfg = get_cfg(arch)
+        wl = transformer_workload(cfg, seq=seq, batch=1, mode="decode")
+        t0 = time.perf_counter()
+        res = evaluate_space(space, wl)
+        dt = (time.perf_counter() - t0) * 1e6
+        rep = normalized_report(res, space)
+        parts = [f"{pe}:ppa={r['norm_perf_per_area']:.2f},"
+                 f"en={r['norm_energy']:.3f}"
+                 for pe, r in rep.items()]
+        rows.append(emit(f"dse_transformer_{arch}_decode{seq}", dt,
+                         ";".join(parts)))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,44 @@
+"""Fig. 2: PE types x precision -> wide spread of perf/area and energy.
+
+Paper claim: the framework identifies design points where performance per
+area and energy vary by more than 5x and 35x respectively.  We report the
+spread across the whole swept space and across the per-PE-type bests.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import (PAPER_WORKLOADS, enumerate_space, evaluate_space,
+                        normalized_report, spread)
+
+
+def run():
+    rows = []
+    space = enumerate_space(max_points=3000, seed=0)
+    for wname in ("vgg16-cifar10", "resnet20-cifar10"):
+        wl = PAPER_WORKLOADS[wname]()
+        t0 = time.perf_counter()
+        res = evaluate_space(space, wl)
+        dt = (time.perf_counter() - t0) * 1e6
+        sp = spread(res)
+        rep = normalized_report(res, space)
+        best_ppa = {k: v["norm_perf_per_area"] for k, v in rep.items()}
+        best_en = {k: v["norm_energy"] for k, v in rep.items()}
+        ppa_spread_best = max(best_ppa.values()) / min(best_ppa.values())
+        en_spread_best = max(best_en.values()) / min(best_en.values())
+        rows.append(emit(
+            f"fig2_spread_{wname}", dt,
+            f"space_ppa_spread={sp['perf_per_area_spread']:.1f}x;"
+            f"space_energy_spread={sp['energy_spread']:.1f}x;"
+            f"bests_ppa_spread={ppa_spread_best:.1f}x;"
+            f"bests_energy_spread={en_spread_best:.1f}x;"
+            f"paper_claim=ppa>5x,energy>35x"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

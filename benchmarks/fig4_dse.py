@@ -1,0 +1,65 @@
+"""Fig. 4: DSE over all paper workloads — normalized perf/area and energy
+per PE type vs the best-perf/area INT16 design.
+
+Paper claims (averages across workloads/datasets):
+  LightPE-1: 4.8x perf/area, 4.7x less energy   (up to 5.7x, Fig. 5)
+  LightPE-2: 4.1x perf/area, 4.0x less energy
+  INT16 vs best FP32: 1.8x perf/area, 1.5x less energy
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import (PAPER_WORKLOADS, enumerate_space, evaluate_space,
+                        normalized_report)
+
+WORKLOADS = ("vgg16-cifar10", "resnet20-cifar10", "resnet56-cifar10",
+             "vgg16-cifar100", "resnet20-cifar100", "resnet56-cifar100",
+             "vgg16-imagenet", "resnet34-imagenet", "resnet50-imagenet")
+
+PAPER = {"lightpe1": (4.8, 1 / 4.7), "lightpe2": (4.1, 1 / 4.0)}
+
+
+def run():
+    rows = []
+    space = enumerate_space(max_points=3000, seed=0)
+    acc = {}
+    for wname in WORKLOADS:
+        wl = PAPER_WORKLOADS[wname]()
+        t0 = time.perf_counter()
+        res = evaluate_space(space, wl)
+        dt = (time.perf_counter() - t0) * 1e6
+        rep = normalized_report(res, space)
+        parts = []
+        for pe in ("fp32", "int16", "lightpe1", "lightpe2", "int8"):
+            r = rep[pe]
+            acc.setdefault(pe, []).append((r["norm_perf_per_area"],
+                                           r["norm_energy"]))
+            parts.append(f"{pe}:ppa={r['norm_perf_per_area']:.2f},"
+                         f"en={r['norm_energy']:.3f}")
+        rows.append(emit(f"fig4_dse_{wname}", dt, ";".join(parts)))
+
+    # averages vs paper claims
+    for pe, (p_ppa, p_en) in PAPER.items():
+        a = np.array(acc[pe])
+        rows.append(emit(
+            f"fig4_avg_{pe}", 0.0,
+            f"ours_ppa={a[:, 0].mean():.2f}x(paper {p_ppa}x);"
+            f"ours_energy={a[:, 1].mean():.3f}(paper {p_en:.3f});"
+            f"max_ppa={a[:, 0].max():.2f}x(paper up to 5.7x)"))
+    fp32 = np.array(acc["fp32"])
+    int16 = np.array(acc["int16"])
+    rows.append(emit(
+        "fig4_avg_int16_vs_fp32", 0.0,
+        f"ours_ppa_ratio={(1.0 / fp32[:, 0]).mean():.2f}x(paper 1.8x);"
+        f"ours_energy_ratio={(fp32[:, 1] / int16[:, 1]).mean():.2f}x"
+        f"(paper 1.5x);note=see EXPERIMENTS.md fp32 calibration residual"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,59 @@
+"""Kernel-level benches: quant_matmul HBM-traffic accounting + wall time
+of the interpret-mode kernels vs dense jnp matmul (CPU indicative only —
+the roofline story is the bytes column)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_call
+from repro.kernels.quant_matmul.ref import (ref_quant_matmul_int4,
+                                            ref_quant_matmul_pow2)
+from repro.quant.pack import quantize_int4, quantize_pow2
+
+
+def run():
+    rows = []
+    rng = np.random.default_rng(0)
+    m, k, n = 256, 2048, 2048
+    x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(k, n)) * 0.05, jnp.float32)
+
+    dense_us = time_call(lambda a, b: a @ b, x, w)
+    dense_bytes = w.size * 2  # bf16 weights on TPU
+    rows.append(emit("qmm_dense_bf16", dense_us,
+                     f"w_bytes={dense_bytes};traffic=1.00x"))
+
+    pw4, s4 = quantize_int4(w)
+    us4 = time_call(ref_quant_matmul_int4, x, pw4, s4)
+    rows.append(emit("qmm_int4_packed", us4,
+                     f"w_bytes={pw4.size};traffic="
+                     f"{pw4.size / dense_bytes:.2f}x;rel_err="
+                     f"{float(jnp.linalg.norm(ref_quant_matmul_int4(x, pw4, s4) - x @ w) / jnp.linalg.norm(x @ w)):.3f}"))
+
+    pwp, ep = quantize_pow2(w)
+    usp = time_call(ref_quant_matmul_pow2, x, pwp, ep)
+    rows.append(emit("qmm_pow2_packed", usp,
+                     f"w_bytes={pwp.size};traffic="
+                     f"{pwp.size / dense_bytes:.2f}x;rel_err="
+                     f"{float(jnp.linalg.norm(ref_quant_matmul_pow2(x, pwp, ep) - x @ w) / jnp.linalg.norm(x @ w)):.3f}"))
+
+    # flash attention: HBM bytes of the logits the kernel keeps in VMEM
+    from repro.kernels.flash_attention.ref import ref_flash_attention
+    s_len, dh = 2048, 128
+    q = jnp.asarray(rng.normal(size=(s_len, dh)), jnp.float32)
+    kk = jnp.asarray(rng.normal(size=(s_len, dh)), jnp.float32)
+    vv = jnp.asarray(rng.normal(size=(s_len, dh)), jnp.float32)
+    us_f = time_call(ref_flash_attention, q, kk, vv)
+    logits_bytes = s_len * s_len * 4
+    tile_bytes = 128 * 128 * 4
+    rows.append(emit(
+        "flash_attn_fwd", us_f,
+        f"hbm_logits_baseline={logits_bytes};vmem_tile={tile_bytes};"
+        f"hbm_saving={logits_bytes / tile_bytes:.0f}x_per_head"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,50 @@
+"""Benchmark harness: one module per paper table/figure + roofline.
+
+Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig4] [--fast]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--fast", action="store_true",
+                    help="shrink the QAT training budget (CI mode)")
+    args = ap.parse_args()
+
+    from benchmarks import (dse_transformers, fig2_pe_spread, fig3_ppa_fit,
+                            fig4_dse, fig56_pareto, kernels_bench, roofline)
+    benches = {
+        "fig2": fig2_pe_spread.run,
+        "fig3": fig3_ppa_fit.run,
+        "fig4": fig4_dse.run,
+        "fig56": (lambda: fig56_pareto.run(steps=120)) if args.fast
+        else fig56_pareto.run,
+        "kernels": kernels_bench.run,
+        "dse_transformers": dse_transformers.run,
+        "roofline": roofline.run,
+    }
+    print("name,us_per_call,derived")
+    failed = []
+    for name, fn in benches.items():
+        if args.only and args.only not in name:
+            continue
+        try:
+            fn()
+        except Exception:  # noqa: BLE001
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        print(f"FAILED: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

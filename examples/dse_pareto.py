@@ -1,0 +1,48 @@
+"""DSE + Pareto case study over ALL paper workloads (Fig. 4 end-to-end).
+
+  PYTHONPATH=src python examples/dse_pareto.py [--workload resnet50-imagenet]
+
+Writes results/dse/<workload>.csv with one row per design point (config,
+perf/area, energy, Pareto membership) — the paper's scatter plots as data.
+"""
+
+import argparse
+import csv
+import os
+
+import numpy as np
+
+from repro.core import (PAPER_WORKLOADS, enumerate_space, evaluate_space,
+                        normalized_report, pareto_front)
+from repro.core.arch import config_rows
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--workload", default="resnet20-cifar10",
+                choices=list(PAPER_WORKLOADS))
+ap.add_argument("--max-points", type=int, default=4000)
+args = ap.parse_args()
+
+space = enumerate_space(max_points=args.max_points, seed=0)
+res = evaluate_space(space, PAPER_WORKLOADS[args.workload]())
+mask = np.asarray(pareto_front(res))
+
+os.makedirs("results/dse", exist_ok=True)
+out = f"results/dse/{args.workload}.csv"
+with open(out, "w", newline="") as f:
+    wr = csv.writer(f)
+    wr.writerow(["pe_type", "pe_rows", "pe_cols", "gbuf_kb", "spad_ifmap",
+                 "spad_filter", "spad_psum", "bandwidth_gbps",
+                 "perf_per_area", "energy_j", "latency_s", "area_mm2",
+                 "utilization", "pareto"])
+    for i, row in enumerate(config_rows(space)):
+        wr.writerow([row["pe_type_name"], row["pe_rows"], row["pe_cols"],
+                     row["gbuf_kb"], row["spad_ifmap"], row["spad_filter"],
+                     row["spad_psum"], row["bandwidth_gbps"],
+                     float(res.perf_per_area[i]), float(res.energy_j[i]),
+                     float(res.latency_s[i]), float(res.area_mm2[i]),
+                     float(res.utilization[i]), bool(mask[i])])
+print(f"wrote {out} ({mask.sum()} Pareto points of {mask.size})")
+rep = normalized_report(res, space)
+for pe, r in rep.items():
+    print(f"  {pe:9s} perf/area={r['norm_perf_per_area']:.2f}x "
+          f"energy={r['norm_energy']:.3f}x")

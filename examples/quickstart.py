@@ -1,0 +1,54 @@
+"""Quickstart: the QADAM loop in six steps.
+
+  PYTHONPATH=src python examples/quickstart.py
+
+1. enumerate the accelerator design space (PE types x sizes x buffers),
+2. "synthesize" (oracle) and fit the polynomial PPA surrogates (Fig. 3),
+3. run the DSE on a paper workload (VGG-16/CIFAR-10),
+4. extract the Pareto front + the paper's normalized report (Figs. 2/4),
+5. pick the Pareto-optimal LightPE design point,
+6. show the quantization numerics that design implies (QAT fake-quant).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (enumerate_space, evaluate_space, fit_ppa_models,
+                        normalized_report, pareto_front, r2, spread,
+                        synthesize, vgg16)
+from repro.core.arch import PE_TYPE_NAMES, config_rows
+from repro.quant import fake_quant_weight, preset
+
+# 1-2. space + surrogate fit
+space = enumerate_space(max_points=2000, seed=0)
+models = fit_ppa_models(space, degrees=(1, 2), k=4)
+truth = synthesize(space)
+pred = models.predict(space)
+print(f"PPA surrogate fit: area R2={r2(truth.area_mm2, pred.area_mm2):.4f} "
+      f"power R2={r2(truth.power_mw, pred.power_mw):.4f} "
+      f"clock R2={r2(truth.clock_ghz, pred.clock_ghz):.4f}")
+
+# 3. DSE on VGG-16 / CIFAR-10
+wl = vgg16("cifar10")
+res = evaluate_space(space, wl)
+print("design-space spread:", spread(res))
+
+# 4. Pareto + normalized report
+mask = np.asarray(pareto_front(res))
+print(f"Pareto front: {mask.sum()} / {mask.size} design points")
+rep = normalized_report(res, space)
+for pe, r in rep.items():
+    print(f"  {pe:9s} perf/area={r['norm_perf_per_area']:.2f}x "
+          f"energy={r['norm_energy']:.3f}x (vs best INT16)")
+
+# 5. the best LightPE-1 design point
+best = rep["lightpe1"]["index_best_ppa"]
+row = list(config_rows(space))[best]
+print("Pareto-optimal LightPE-1 config:", {k: row[k] for k in
+      ("pe_rows", "pe_cols", "gbuf_kb", "spad_filter", "bandwidth_gbps")})
+
+# 6. the numerics that hardware implies (what QAT trains with)
+w = jnp.asarray(np.random.default_rng(0).normal(size=(6, 4)) * 0.1,
+                jnp.float32)
+wq = fake_quant_weight(w, preset("lightpe1"))
+print("LightPE-1 weights are powers of two:\n", np.asarray(wq)[:2])

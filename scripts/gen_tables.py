@@ -1,0 +1,62 @@
+"""Generate EXPERIMENTS.md markdown tables from results/*.json."""
+import glob, json, os, sys
+sys.path.insert(0, "src")
+
+PEAK, HBM, LINK = 197e12, 819e9, 50e9
+
+def dryrun_table(mesh):
+    rows = []
+    for p in sorted(glob.glob(f"results/dryrun/*__{mesh}.json")):
+        r = json.load(open(p))
+        if r.get("status") == "skipped":
+            rows.append(f"| {r['arch']} | {r['shape']} | skipped | {r['reason'][:48]} |  |  |  |")
+            continue
+        if r.get("status") != "ok":
+            rows.append(f"| {r['arch']} | {r['shape']} | ERROR | {r.get('error','')[:40]} |  |  |  |")
+            continue
+        m = r["memory"]
+        args = m["argument_size_in_bytes"]/1e9
+        temp = m["temp_size_in_bytes"]/1e9
+        coll = r["collectives"]["total"]/1e9
+        rows.append(f"| {r['arch']} | {r['shape']} | ok | {r['compile_s']:.0f}s | "
+                    f"{args:.2f} | {temp:.2f} | {coll:.2f} |")
+    return rows
+
+def roofline_table():
+    rows = []
+    for p in sorted(glob.glob("results/dryrun/*__pod16x16.json")):
+        r = json.load(open(p))
+        if r.get("status") != "ok" or "roofline" not in r:
+            continue
+        rf = r["roofline"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {rf['compute_s']:.2e} | "
+            f"{rf['memory_s']:.2e} | {rf['collective_s']:.2e} | "
+            f"**{rf['dominant']}** | {rf['model_flops_global']:.2e} | "
+            f"{rf['useful_ratio']:.3f} | {rf['mfu']:.3f} |")
+    return rows
+
+def perf_table():
+    rows = []
+    order = ["v1_bf16_compute", "v2_ep_shard_map", "v1_kv_pad_tp",
+             "v2_int4_weights", "v3_f8_cache", "v2_block_local_attn"]
+    for p in sorted(glob.glob("results/perf/*.json")):
+        r = json.load(open(p))
+        if r.get("status") != "ok":
+            continue
+        t_c = r["flops"]/PEAK
+        t_m = r["bytes_out"]/HBM
+        t_l = r["collectives"]["total"]/LINK
+        dom = max((("compute",t_c),("memory",t_m),("collective",t_l)), key=lambda x:x[1])
+        rows.append(f"| {r['arch']} | {r['shape']} | {r['variant']} | "
+                    f"{t_c:.2e} | {t_m:.2e} | {t_l:.2e} | {dom[0]} | {max(t_c,t_m,t_l):.3f}s |")
+    return rows
+
+if __name__ == "__main__":
+    which = sys.argv[1]
+    if which == "dryrun":
+        print("\n".join(dryrun_table(sys.argv[2])))
+    elif which == "roofline":
+        print("\n".join(roofline_table()))
+    elif which == "perf":
+        print("\n".join(perf_table()))

@@ -1,0 +1,4 @@
+"""QADAM-JAX: quantization-aware accelerator modeling + DSE as a
+multi-pod JAX training/serving framework. See README.md / DESIGN.md."""
+
+__version__ = "1.0.0"

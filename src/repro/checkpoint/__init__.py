@@ -1,0 +1,2 @@
+from repro.checkpoint import manager
+from repro.checkpoint.manager import save, restore, latest_step, all_steps

@@ -1,0 +1,7 @@
+"""Architecture configs: one module per assigned arch (+ paper CNNs)."""
+
+from repro.configs.base import (ArchConfig, ARCH_IDS, ASSIGNED, get, reduced,
+                                list_archs)
+
+__all__ = ["ArchConfig", "ARCH_IDS", "ASSIGNED", "get", "reduced",
+           "list_archs"]

@@ -1,0 +1,31 @@
+"""QADAM core: quantization-aware PPA modeling + DSE (the paper's contribution).
+
+Submodules:
+  arch      — accelerator design space (PE array, buffers, PE types)
+  pe        — per-PE-type energy/area/delay models (FP32/INT16/LightPE-1/2/INT8)
+  energy    — memory-hierarchy energy constants
+  dataflow  — row-stationary analytical cost model (vmap-able)
+  synth     — synthesis oracle (stand-in for Synopsys DC + FreePDK45)
+  ppa       — polynomial-regression PPA surrogates + k-fold CV selection
+  dse       — vectorized design-space exploration + Pareto analysis
+  workloads — layer-wise workload extraction (paper CNNs + assigned archs)
+"""
+
+from repro.core.arch import (AcceleratorConfig, make_config, stack_configs,
+                             enumerate_space, PE_TYPE_NAMES, PE_TYPE_CODES)
+from repro.core.dse import (evaluate_space, pareto_front, pareto_mask,
+                            normalized_report, spread, DseResult)
+from repro.core.ppa import fit_ppa_models, PPAModels, r2, mape
+from repro.core.synth import synthesize, SynthResult
+from repro.core.workloads import (Workload, LayerSpec, PAPER_WORKLOADS,
+                                  transformer_workload, vgg16, resnet_cifar,
+                                  resnet34, resnet50)
+
+__all__ = [
+    "AcceleratorConfig", "make_config", "stack_configs", "enumerate_space",
+    "PE_TYPE_NAMES", "PE_TYPE_CODES", "evaluate_space", "pareto_front",
+    "pareto_mask", "normalized_report", "spread", "DseResult",
+    "fit_ppa_models", "PPAModels", "r2", "mape", "synthesize", "SynthResult",
+    "Workload", "LayerSpec", "PAPER_WORKLOADS", "transformer_workload",
+    "vgg16", "resnet_cifar", "resnet34", "resnet50",
+]

@@ -1,0 +1,139 @@
+"""Accelerator configuration space for QADAM.
+
+The paper's accelerator template is an Eyeriss-style spatial array:
+a 2-D grid of processing elements (PEs), a shared global buffer, and
+per-PE scratchpads for ifmap / filter / psum.  Every knob the paper
+sweeps (Sec. III-C) is a field here:
+
+  * number of PEs per row / column,
+  * global buffer size,
+  * per-PE scratchpad sizes (ifmap, filter, psum),
+  * bit precision / PE type (FP32, INT16, LightPE-1, LightPE-2),
+  * device (DRAM) bandwidth.
+
+Configs are plain NamedTuples of scalars so the whole cost model can be
+``jax.vmap``-ed over thousands of stacked design points — that is what
+makes the DSE "rapid" in the JAX port (the paper uses a C++/RTL flow
+with a regression surrogate; here the analytical model itself is the
+fast path and the polynomial surrogate is reproduced on top of it).
+"""
+
+from __future__ import annotations
+
+import itertools
+from typing import Iterable, NamedTuple, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+# PE type codes (index into the constant tables in pe.py).
+PE_FP32 = 0
+PE_INT16 = 1
+PE_LIGHTPE1 = 2  # 8-bit activations, 4-bit (power-of-two) weights, 1 shift
+PE_LIGHTPE2 = 3  # 8-bit activations, 8-bit weights, 2 shifts + add
+PE_INT8 = 4      # conventional int8 MAC (beyond-paper comparison point)
+
+PE_TYPE_NAMES = ("fp32", "int16", "lightpe1", "lightpe2", "int8")
+PE_TYPE_CODES = {name: code for code, name in enumerate(PE_TYPE_NAMES)}
+
+
+class AcceleratorConfig(NamedTuple):
+    """One hardware design point. All fields are scalars (vmap-friendly)."""
+
+    pe_rows: jnp.ndarray      # int: PEs per column of the array
+    pe_cols: jnp.ndarray      # int: PEs per row of the array
+    gbuf_kb: jnp.ndarray      # float: global buffer capacity (KB)
+    spad_ifmap: jnp.ndarray   # int: ifmap scratchpad entries (words)
+    spad_filter: jnp.ndarray  # int: filter scratchpad entries (words)
+    spad_psum: jnp.ndarray    # int: psum scratchpad entries (words)
+    pe_type: jnp.ndarray      # int: code into PE_TYPE_NAMES
+    bandwidth_gbps: jnp.ndarray  # float: DRAM bandwidth (GB/s)
+
+    @property
+    def num_pes(self):
+        return self.pe_rows * self.pe_cols
+
+
+def make_config(
+    pe_rows: int = 12,
+    pe_cols: int = 14,
+    gbuf_kb: float = 108.0,
+    spad_ifmap: int = 12,
+    spad_filter: int = 224,
+    spad_psum: int = 24,
+    pe_type: str | int = "int16",
+    bandwidth_gbps: float = 25.6,
+) -> AcceleratorConfig:
+    """Build a single design point (defaults follow Eyeriss-like values)."""
+    code = PE_TYPE_CODES[pe_type] if isinstance(pe_type, str) else int(pe_type)
+    return AcceleratorConfig(
+        pe_rows=jnp.asarray(pe_rows, jnp.float32),
+        pe_cols=jnp.asarray(pe_cols, jnp.float32),
+        gbuf_kb=jnp.asarray(gbuf_kb, jnp.float32),
+        spad_ifmap=jnp.asarray(spad_ifmap, jnp.float32),
+        spad_filter=jnp.asarray(spad_filter, jnp.float32),
+        spad_psum=jnp.asarray(spad_psum, jnp.float32),
+        pe_type=jnp.asarray(code, jnp.int32),
+        bandwidth_gbps=jnp.asarray(bandwidth_gbps, jnp.float32),
+    )
+
+
+def stack_configs(configs: Sequence[AcceleratorConfig]) -> AcceleratorConfig:
+    """Stack N design points into one batched AcceleratorConfig (for vmap)."""
+    return AcceleratorConfig(*[jnp.stack([getattr(c, f) for c in configs])
+                               for f in AcceleratorConfig._fields])
+
+
+# ---------------------------------------------------------------------------
+# The paper's design space (Sec. III-C): the grid swept for PPA model fitting
+# and for the DSE case studies.
+# ---------------------------------------------------------------------------
+
+DEFAULT_SPACE = dict(
+    pe_rows=(8, 12, 16, 24, 32),
+    pe_cols=(8, 14, 16, 28, 32),
+    gbuf_kb=(54.0, 108.0, 216.0, 432.0),
+    spad_ifmap=(12, 24),
+    spad_filter=(112, 224, 448),
+    spad_psum=(16, 24, 32),
+    pe_type=tuple(range(len(PE_TYPE_NAMES))),
+    bandwidth_gbps=(12.8, 25.6, 51.2),
+)
+
+
+def enumerate_space(space: dict | None = None,
+                    max_points: int | None = None,
+                    seed: int = 0) -> AcceleratorConfig:
+    """Enumerate (or subsample) the cartesian design space as a batched config.
+
+    Returns an AcceleratorConfig whose leaves all have leading dim N.
+    """
+    space = dict(DEFAULT_SPACE if space is None else space)
+    keys = list(AcceleratorConfig._fields)
+    axes = [space[k] for k in keys]
+    points = np.array(list(itertools.product(*axes)), dtype=np.float64)
+    if max_points is not None and len(points) > max_points:
+        rng = np.random.default_rng(seed)
+        idx = rng.choice(len(points), size=max_points, replace=False)
+        points = points[np.sort(idx)]
+    cols = {k: points[:, i] for i, k in enumerate(keys)}
+    return AcceleratorConfig(
+        pe_rows=jnp.asarray(cols["pe_rows"], jnp.float32),
+        pe_cols=jnp.asarray(cols["pe_cols"], jnp.float32),
+        gbuf_kb=jnp.asarray(cols["gbuf_kb"], jnp.float32),
+        spad_ifmap=jnp.asarray(cols["spad_ifmap"], jnp.float32),
+        spad_filter=jnp.asarray(cols["spad_filter"], jnp.float32),
+        spad_psum=jnp.asarray(cols["spad_psum"], jnp.float32),
+        pe_type=jnp.asarray(cols["pe_type"], jnp.int32),
+        bandwidth_gbps=jnp.asarray(cols["bandwidth_gbps"], jnp.float32),
+    )
+
+
+def config_rows(cfg: AcceleratorConfig) -> Iterable[dict]:
+    """Iterate a batched config as python dicts (for reports/CSV)."""
+    n = int(np.asarray(cfg.pe_rows).shape[0]) if np.ndim(cfg.pe_rows) else 1
+    arrs = {f: np.atleast_1d(np.asarray(getattr(cfg, f))) for f in cfg._fields}
+    for i in range(n):
+        row = {f: arrs[f][i].item() for f in cfg._fields}
+        row["pe_type_name"] = PE_TYPE_NAMES[int(row["pe_type"])]
+        yield row

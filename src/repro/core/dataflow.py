@@ -1,0 +1,169 @@
+"""Row-stationary (RS) dataflow cost model.
+
+Analytical model of the paper's spatial-array accelerator executing one
+conv/GEMM layer under the row-stationary dataflow (Eyeriss, [2] in the
+paper). Produces compute cycles, per-level access counts, energy, and
+latency. Written as pure jnp scalar math so it can be
+
+    jax.vmap(layer_cost, in_axes=(0, None, None))      # over layers
+    jax.vmap(..., in_axes=(None, 0, 0))                # over design points
+
+which is the DSE inner loop.
+
+Mapping summary (per Eyeriss):
+  * PE(i, j) computes a 1-D row conv: filter row i x ifmap row -> output
+    row j.  Logical array = R rows x E cols, folded / replicated onto the
+    physical pe_rows x pe_cols grid.
+  * Each PE holds q filters x c channels of one filter row in its filter
+    spad (q*c*S words), a c*S ifmap sliding window, and q partial sums.
+  * Filter weights are *stationary*; ifmap rows are multicast diagonally;
+    psums accumulate vertically.
+
+All counts are smooth monotone functions of the config (ceil-style
+quantization kept) so Pareto sweeps and property tests behave sanely.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import energy as E
+from repro.core import pe as PE
+from repro.core.arch import AcceleratorConfig
+from repro.core.workloads import LayerSpec
+
+
+class LayerCost(NamedTuple):
+    macs: jnp.ndarray
+    cycles_compute: jnp.ndarray
+    cycles_memory: jnp.ndarray
+    cycles: jnp.ndarray            # max(compute, memory) — double buffered
+    utilization: jnp.ndarray       # spatial PE utilization in [0, 1]
+    dram_bits: jnp.ndarray
+    gbuf_bits: jnp.ndarray
+    noc_bits: jnp.ndarray
+    rf_bits: jnp.ndarray
+    energy_pj: jnp.ndarray         # total layer energy (incl. DRAM)
+    energy_mac_pj: jnp.ndarray
+    energy_mem_pj: jnp.ndarray     # on-chip memory (RF + NoC + gbuf)
+    energy_dram_pj: jnp.ndarray    # off-chip DRAM (not visible to synthesis)
+
+
+def _ceil_div(a, b):
+    return jnp.ceil(a / jnp.maximum(b, 1.0))
+
+
+def layer_cost(layer: LayerSpec, cfg: AcceleratorConfig,
+               clock_ghz: jnp.ndarray) -> LayerCost:
+    """Cost of one layer on one design point at a given clock."""
+    H, W, C, K = layer.H, layer.W, layer.C, layer.K
+    R, S, stride, batch = layer.R, layer.S, layer.stride, layer.batch
+    count = layer.count
+    Eh = jnp.floor((H - R) / stride) + 1.0
+    F = jnp.floor((W - S) / stride) + 1.0
+    macs = batch * K * C * R * S * Eh * F * count
+
+    a_bits = PE.act_bits(cfg.pe_type)
+    w_bits = PE.weight_bits(cfg.pe_type)
+    p_bits = PE.psum_bits(cfg.pe_type)
+
+    # ---- per-PE tiling limited by scratchpad capacities ----------------
+    c_fit = jnp.clip(jnp.floor(cfg.spad_ifmap / S), 1.0, C)       # channels
+    q_fit = jnp.clip(jnp.minimum(jnp.floor(cfg.spad_filter / (c_fit * S)),
+                                 cfg.spad_psum), 1.0, K)          # filters
+
+    # ---- spatial mapping: logical R x E grid onto pe_rows x pe_cols ----
+    Pr, Pc = cfg.pe_rows, cfg.pe_cols
+    rows_used = jnp.minimum(R, Pr)
+    cols_used = jnp.minimum(Eh, Pc)
+    fold_r = _ceil_div(R, Pr)
+    fold_e = _ceil_div(Eh, Pc)
+    # replication of independent (filter/channel/batch) groups onto idle PEs
+    groups = _ceil_div(K, q_fit) * _ceil_div(C, c_fit) * batch
+    repl_r = jnp.clip(jnp.floor(Pr / jnp.maximum(rows_used, 1.0)), 1.0, groups)
+    groups_left = jnp.maximum(groups / repl_r, 1.0)
+    repl_c = jnp.clip(jnp.floor(Pc / jnp.maximum(cols_used, 1.0)), 1.0,
+                      groups_left)
+    util = (rows_used * repl_r / (fold_r * Pr)) * \
+           (cols_used * repl_c / (fold_e * Pc))
+    util = jnp.clip(util, 1e-3, 1.0)
+
+    active_pes = util * Pr * Pc
+    cycles_compute = macs / active_pes  # 1 MAC-equiv per PE per cycle
+
+    # ---- data volumes (words) ------------------------------------------
+    if_words = batch * C * H * W
+    fil_words = K * C * R * S
+    of_words = batch * K * Eh * F
+
+    # ---- DRAM traffic with gbuf-capacity replay factors -----------------
+    gbuf_bits_cap = cfg.gbuf_kb * 1024.0 * 8.0
+    # filters that fit in half the gbuf alongside the ifmap tile
+    k_fit_gbuf = jnp.clip(jnp.floor(0.5 * gbuf_bits_cap /
+                                    jnp.maximum(C * R * S * w_bits, 1.0)),
+                          1.0, K)
+    replay_if = _ceil_div(K, k_fit_gbuf)
+    # ifmaps (batch granularity) that fit in the other half
+    n_if_fit = jnp.clip(jnp.floor(0.5 * gbuf_bits_cap /
+                                  jnp.maximum(C * H * W * a_bits, 1.0)),
+                        1.0, batch)
+    replay_fil = _ceil_div(batch, n_if_fit)
+    dram_bits = (if_words * a_bits * replay_if
+                 + fil_words * w_bits * replay_fil
+                 + of_words * a_bits) * count
+
+    # ---- gbuf traffic ----------------------------------------------------
+    if_gbuf_reads = if_words * _ceil_div(K, q_fit * repl_r)
+    fil_gbuf_reads = fil_words * fold_e * batch
+    psum_spill = 2.0 * of_words * jnp.maximum(_ceil_div(C, c_fit) - 1.0, 0.0)
+    gbuf_bits = (if_gbuf_reads * a_bits + fil_gbuf_reads * w_bits
+                 + psum_spill * p_bits + of_words * a_bits) * count
+
+    # ---- NoC + RF traffic ------------------------------------------------
+    noc_bits = (if_gbuf_reads * a_bits + fil_gbuf_reads * w_bits
+                + psum_spill * p_bits) * count
+    # Each MAC reads one act + one weight from the spads; partial sums
+    # accumulate in the PE's register across the S filter taps AND the
+    # c channels resident in the spads, touching the psum spad once per
+    # c*S MACs (read-modify-write).
+    psum_rf_accesses = 2.0 * macs / jnp.maximum(S * c_fit, 1.0)
+    rf_bits = macs * (a_bits + w_bits) + psum_rf_accesses * p_bits
+
+    # ---- memory-bound cycles ----------------------------------------------
+    bytes_per_cycle = cfg.bandwidth_gbps / jnp.maximum(clock_ghz, 1e-6)
+    cycles_memory = (dram_bits / 8.0) / jnp.maximum(bytes_per_cycle, 1e-6)
+    cycles_compute = cycles_compute * count
+    cycles = jnp.maximum(cycles_compute, cycles_memory)
+
+    # ---- energy ------------------------------------------------------------
+    e_mac = macs * PE.mac_energy_pj(cfg.pe_type) \
+        + cycles * active_pes * PE.PE_CTRL_ENERGY_PJ
+    e_rf = (macs * E.rf_access_energy(a_bits, cfg.spad_ifmap * a_bits)
+            + macs * E.rf_access_energy(w_bits, cfg.spad_filter * w_bits)
+            + psum_rf_accesses * E.rf_access_energy(
+                p_bits, cfg.spad_psum * p_bits))
+    e_mem = (e_rf
+             + noc_bits * E.NOC_E_PER_BIT_PJ
+             + gbuf_bits * E.gbuf_energy_per_bit(cfg.gbuf_kb))
+    e_dram = dram_bits * E.DRAM_E_PER_BIT_PJ
+    return LayerCost(
+        macs=macs, cycles_compute=cycles_compute, cycles_memory=cycles_memory,
+        cycles=cycles, utilization=util, dram_bits=dram_bits,
+        gbuf_bits=gbuf_bits, noc_bits=noc_bits, rf_bits=rf_bits,
+        energy_pj=e_mac + e_mem + e_dram, energy_mac_pj=e_mac,
+        energy_mem_pj=e_mem, energy_dram_pj=e_dram)
+
+
+def network_cost(layers: LayerSpec, cfg: AcceleratorConfig,
+                 clock_ghz: jnp.ndarray) -> LayerCost:
+    """Sum layer costs over a stacked LayerSpec (vmapped over layers)."""
+    per_layer = jax.vmap(layer_cost, in_axes=(0, None, None))(
+        layers, cfg, clock_ghz)
+    summed = jax.tree.map(lambda x: jnp.sum(x, axis=0), per_layer)
+    # utilization: MAC-weighted mean, not a sum
+    util = jnp.sum(per_layer.utilization * per_layer.macs) / \
+        jnp.maximum(jnp.sum(per_layer.macs), 1.0)
+    return summed._replace(utilization=util)

@@ -1,0 +1,161 @@
+"""Design-space exploration + Pareto analysis (the paper's Sec. IV).
+
+Evaluates every design point of the accelerator space against a DNN
+workload with the row-stationary cost model, computing the paper's two
+hardware-efficiency metrics:
+
+  * performance per area  (inferences/s per mm^2)
+  * energy per inference  (J)
+
+and extracts Pareto fronts.  The evaluation is one jitted, vmapped call
+over the stacked design batch — thousands of design points per second on
+CPU, which is the "rapidly iterate over various designs" the paper asks
+of the framework.
+
+The clock for each design point comes either from the synthesis oracle
+("actual", the paper's DC flow) or from the fitted polynomial PPA
+surrogate ("predicted") — comparing the two DSE outcomes is exactly the
+paper's validation story.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.arch import (AcceleratorConfig, PE_INT16, PE_TYPE_NAMES)
+from repro.core.dataflow import network_cost
+from repro.core.ppa import PPAModels
+from repro.core.synth import synthesize
+from repro.core.workloads import Workload
+
+
+class DseResult(NamedTuple):
+    """Struct-of-arrays over N design points for one workload."""
+    latency_s: jnp.ndarray
+    energy_j: jnp.ndarray        # chip energy: MAC + on-chip mem + leakage*T
+    energy_total_j: jnp.ndarray  # chip + DRAM (beyond-paper reporting)
+    area_mm2: jnp.ndarray
+    power_mw: jnp.ndarray
+    clock_ghz: jnp.ndarray
+    perf: jnp.ndarray            # inferences / s
+    perf_per_area: jnp.ndarray   # inferences / s / mm^2
+    utilization: jnp.ndarray
+    macs: jnp.ndarray
+
+
+@jax.jit
+def _evaluate(cfg: AcceleratorConfig, clock_ghz: jnp.ndarray,
+              area_mm2: jnp.ndarray, leak_mw: jnp.ndarray, layers) -> DseResult:
+    def one(c, clk):
+        return network_cost(layers, c, clk)
+
+    cost = jax.vmap(one)(cfg, clock_ghz)
+    latency_s = cost.cycles / (clock_ghz * 1e9)
+    # The paper's energy = synthesized chip power x simulated runtime: the
+    # dynamic part is the access-count model (MAC + RF/NoC/gbuf), plus
+    # leakage x runtime. DRAM energy is invisible to a DC synthesis flow and
+    # is reported separately (energy_total_j).
+    e_chip = (cost.energy_mac_pj + cost.energy_mem_pj) * 1e-12 \
+        + leak_mw * 1e-3 * latency_s
+    e_total = e_chip + cost.energy_dram_pj * 1e-12
+    perf = 1.0 / jnp.maximum(latency_s, 1e-12)
+    return DseResult(
+        latency_s=latency_s, energy_j=e_chip, energy_total_j=e_total,
+        area_mm2=area_mm2,
+        power_mw=e_chip / jnp.maximum(latency_s, 1e-12) * 1e3,
+        clock_ghz=clock_ghz, perf=perf,
+        perf_per_area=perf / jnp.maximum(area_mm2, 1e-9),
+        utilization=cost.utilization, macs=cost.macs)
+
+
+def evaluate_space(cfg: AcceleratorConfig, workload: Workload,
+                   surrogate: PPAModels | None = None) -> DseResult:
+    """Evaluate a batched design space on one workload.
+
+    surrogate=None uses the synthesis oracle for clock/area ("actual");
+    otherwise the fitted polynomial PPA models ("predicted").
+    """
+    synth = synthesize(cfg) if surrogate is None else surrogate.predict(cfg)
+    return _evaluate(cfg, synth.clock_ghz, synth.area_mm2, synth.leakage_mw,
+                     workload.layers)
+
+
+# ---------------------------------------------------------------------------
+# Pareto analysis
+# ---------------------------------------------------------------------------
+
+def pareto_mask(objectives: jnp.ndarray) -> jnp.ndarray:
+    """Non-dominated mask. objectives: (N, D), all HIGHER-IS-BETTER.
+
+    Point i is dominated iff some j is >= on every objective and > on at
+    least one. O(N^2) broadcast — fine for the paper-scale spaces (<=20k).
+    """
+    a = objectives[:, None, :]   # i
+    b = objectives[None, :, :]   # j
+    ge = jnp.all(b >= a, axis=-1)
+    gt = jnp.any(b > a, axis=-1)
+    dominated = jnp.any(ge & gt, axis=1)
+    return ~dominated
+
+
+def pareto_front(result: DseResult,
+                 metrics: tuple = ("perf_per_area", "neg_energy_j")) -> jnp.ndarray:
+    cols = []
+    for m in metrics:
+        if m.startswith("neg_"):
+            cols.append(-getattr(result, m[4:]))
+        else:
+            cols.append(getattr(result, m))
+    return pareto_mask(jnp.stack(cols, axis=-1))
+
+
+# ---------------------------------------------------------------------------
+# The paper's normalized reporting (Figs. 4-6)
+# ---------------------------------------------------------------------------
+
+def best_index(result: DseResult, pe_type: jnp.ndarray, code: int,
+               metric: str = "perf_per_area", mode: str = "max") -> int:
+    """Index of the best design of a given PE type under a metric."""
+    vals = np.asarray(getattr(result, metric), np.float64)
+    sel = np.atleast_1d(np.asarray(pe_type)) == code
+    vals = np.where(sel, vals, -np.inf if mode == "max" else np.inf)
+    return int(np.argmax(vals) if mode == "max" else np.argmin(vals))
+
+
+def normalized_report(result: DseResult, cfg: AcceleratorConfig) -> dict:
+    """Per-PE-type best configs, normalized to the best-perf/area INT16
+    design — the exact normalization of the paper's Figs. 4-6."""
+    ref = best_index(result, cfg.pe_type, PE_INT16, "perf_per_area")
+    ref_ppa = float(result.perf_per_area[ref])
+    ref_energy = float(result.energy_j[ref])
+    report = {}
+    for code, name in enumerate(PE_TYPE_NAMES):
+        sel = np.atleast_1d(np.asarray(cfg.pe_type)) == code
+        if not sel.any():
+            continue
+        i_ppa = best_index(result, cfg.pe_type, code, "perf_per_area")
+        i_en = best_index(result, cfg.pe_type, code, "energy_j", "min")
+        report[name] = dict(
+            best_perf_per_area=float(result.perf_per_area[i_ppa]),
+            norm_perf_per_area=float(result.perf_per_area[i_ppa]) / ref_ppa,
+            best_energy_j=float(result.energy_j[i_en]),
+            norm_energy=float(result.energy_j[i_en]) / ref_energy,
+            # energy of the best-perf/area config (Fig. 4 plots both axes
+            # for the same set of design points)
+            energy_at_best_ppa=float(result.energy_j[i_ppa]) / ref_energy,
+            index_best_ppa=i_ppa, index_best_energy=i_en,
+        )
+    return report
+
+
+def spread(result: DseResult) -> dict:
+    """Fig. 2: how much perf/area and energy vary across the space."""
+    ppa = np.asarray(result.perf_per_area, np.float64)
+    en = np.asarray(result.energy_j, np.float64)
+    return dict(perf_per_area_spread=float(ppa.max() / max(ppa.min(), 1e-30)),
+                energy_spread=float(en.max() / max(en.min(), 1e-30)))

@@ -1,0 +1,59 @@
+"""Memory-hierarchy energy / area constants (45 nm) for the QADAM model.
+
+Level ratios follow Eyeriss (ISCA'16): with a 16-bit RF access normalized
+to ~1x an int16 MAC, the inter-PE NoC is ~2x, the global buffer ~6x, and
+DRAM ~200x.  Everything is expressed per *bit* so quantization-aware
+precision choices (the paper's point) flow straight into the energy model:
+an 8-bit activation access costs half a 16-bit one, a 4-bit LightPE-1
+weight a quarter.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# pJ per bit moved at each level (16-bit reference access in parens).
+NOC_E_PER_BIT_PJ = 2.0 / 16.0       # inter-PE network hop       (2 pJ / 16b)
+GBUF_E_PER_BIT_PJ = 5.0 / 16.0      # 108 KB-class SRAM          (5 pJ / 16b)
+DRAM_E_PER_BIT_PJ = 200.0 / 16.0    # LPDDR-class               (200 pJ / 16b)
+
+GBUF_REF_KB = 108.0                 # gbuf energy scales ~sqrt(capacity)
+
+# Scratchpad (RF-class) access: a fixed wordline/decoder component plus a
+# per-bit component, both scaling ~sqrt(capacity) — so the narrow, small
+# LightPE spads are much cheaper per access than wide FP32/INT16 ones.
+# Reference: 1 pJ for a 16-bit access to a 4096-bit (256x16) spad.
+RF_C0_PJ = 0.20                     # per-access (decoder/wordline)
+RF_C1_PJ_PER_BIT = 0.65 / 16.0      # per bit read/written
+RF_REF_CAP_BITS = 4096.0
+
+
+def rf_access_energy(bits_per_access, cap_bits):
+    """Energy of one scratchpad access (pJ)."""
+    import jax.numpy as jnp
+    scale = jnp.sqrt(jnp.maximum(cap_bits, 64.0) / RF_REF_CAP_BITS)
+    return (RF_C0_PJ + bits_per_access * RF_C1_PJ_PER_BIT) * scale
+
+# Area (um^2 per bit) for the SRAM macros.
+GBUF_AREA_PER_BIT_UM2 = 0.22        # dense SRAM
+GBUF_PERIPHERY_UM2 = 45000.0        # decoders/sense amps, ~fixed
+NOC_AREA_PER_PE_UM2 = 120.0         # router + wiring share per PE
+IO_AREA_UM2 = 150000.0              # pads / PHY, fixed
+
+
+def gbuf_energy_per_bit(gbuf_kb):
+    """Global buffer access energy per bit; grows ~sqrt(capacity)."""
+    return GBUF_E_PER_BIT_PJ * jnp.sqrt(gbuf_kb / GBUF_REF_KB)
+
+
+def gbuf_area_um2(gbuf_kb):
+    bits = gbuf_kb * 1024.0 * 8.0
+    return bits * GBUF_AREA_PER_BIT_UM2 + GBUF_PERIPHERY_UM2
+
+
+def dram_energy_pj(bits):
+    return bits * DRAM_E_PER_BIT_PJ
+
+
+def noc_energy_pj(bits):
+    return bits * NOC_E_PER_BIT_PJ

@@ -1,0 +1,126 @@
+"""Processing-element models: energy / area / delay per PE type.
+
+Constants are 45 nm (FreePDK45-class) figures assembled from published
+tables — Horowitz, "Computing's energy problem" (ISSCC'14); Ding et al.,
+"LightNN" (TRETS'18, the LightPE source the paper builds on); Eyeriss
+(ISCA'16) for hierarchy ratios.  Absolute values are a calibrated stand-in
+for the paper's Synopsys DC + FreePDK45 synthesis runs (no EDA tools
+offline — see DESIGN.md §3); the *scaling* with bit width and PE type is
+first-principles, which is what produces the paper's headline ratios.
+
+Each PE holds three scratchpads and one arithmetic unit:
+  * FP32     : fp32 multiplier + fp32 adder            (act 32b / w 32b)
+  * INT16    : int16 multiplier + int32 adder          (act 16b / w 16b)
+  * LightPE-1: barrel shifter + int adder — weights are powers of two,
+               stored as 4-bit sign+exponent codes      (act 8b / w 4b)
+  * LightPE-2: two shifters + two adders — weights are sums of two
+               powers of two, stored as 8-bit codes     (act 8b / w 8b)
+  * INT8     : int8 multiplier + int24 adder (extra comparison point)
+
+All tables are indexed by the PE-type code in ``arch.py`` and looked up
+with gather so the whole model vmaps over mixed-type design batches.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.arch import PE_TYPE_NAMES
+
+_N = len(PE_TYPE_NAMES)  # fp32, int16, lightpe1, lightpe2, int8
+
+# --- datapath widths (bits) ------------------------------------------------
+#                          fp32   int16  lpe1   lpe2   int8
+ACT_BITS = jnp.array(      [32.0, 16.0,  8.0,   8.0,   8.0])
+WEIGHT_BITS = jnp.array(   [32.0, 16.0,  4.0,   8.0,   8.0])
+PSUM_BITS = jnp.array(     [32.0, 32.0,  20.0,  20.0,  24.0])
+
+# --- arithmetic energy (pJ per MAC-equivalent op, 45 nm) --------------------
+# mult: fp32 3.7, int16 0.8 (interp int8 0.2 <-> int32 3.1), int8 0.2
+# add : fp32 0.9, int32 0.10, int24 0.08, int16 0.05
+# shift (8b barrel) ~0.024; LightPE-1 MAC = 1 shift + 1 add(24b)
+# LightPE-2 MAC = 2 shifts + 2 adds (combine + accumulate)
+MAC_ENERGY_PJ = jnp.array([
+    3.7 + 0.9,              # fp32 mult + fp32 add            = 4.60
+    0.8 + 0.10,             # int16 mult + int32 add          = 0.90
+    0.024 + 0.08,           # 1 shift + int24 add             = 0.104
+    2 * 0.024 + 2 * 0.08,   # 2 shifts + 2 int24 adds         = 0.208
+    0.2 + 0.08,             # int8 mult + int24 add           = 0.28
+])
+
+# --- arithmetic area (um^2, 45 nm) ------------------------------------------
+# fp32 mult 7700 + fp32 add 4184; int16 mult ~930 (quadratic in width from
+# int8 282 / int32 3495) + int32 add ~137; shifter(8) ~90, int24 add ~100.
+MAC_AREA_UM2 = jnp.array([
+    7700.0 + 4184.0,        # fp32                            = 11884
+    930.0 + 137.0,          # int16                           = 1067
+    100.0 + 100.0,          # lightpe1: shift + add           = 200
+    150.0 + 110.0,          # lightpe2 (shared 2-term decode) = 260
+    282.0 + 100.0,          # int8                            = 382
+])
+
+# --- PE critical path (ns, 45 nm, synthesized single-cycle MAC) -------------
+# Sets the achievable clock: fp32 MAC ~2.50 ns (400 MHz), int16 ~1.25 ns,
+# shift-add ~0.70/0.85 ns, int8 mult ~0.95 ns.
+MAC_DELAY_NS = jnp.array([2.50, 1.25, 0.70, 0.72, 0.95])
+
+# --- PE control / local-interconnect overhead (um^2, pJ/cycle leakage-ish) --
+PE_CTRL_AREA_UM2 = 500.0       # FSM + NoC port, roughly constant per PE
+PE_CTRL_ENERGY_PJ = 0.05       # per active cycle
+
+# --- scratchpad (register-file class SRAM inside the PE) --------------------
+# Energy per access scales with word bits; area per bit ~0.6 um^2 (RF class).
+# Eyeriss normalization: one 16-bit RF access ~= one int16 MAC ~= 1 pJ.
+SPAD_E_PER_BIT_PJ = 1.0 / 16.0   # 1 pJ per 16-bit access
+SPAD_AREA_PER_BIT_UM2 = 0.50
+
+# --- accuracy proxy ----------------------------------------------------------
+# Mean top-1 accuracy deltas vs FP32 from the paper's Figs. 5-6 narrative
+# ("on par", gaps shrink with model size). Used only for synthetic Pareto
+# demos when no trained checkpoint is supplied; real numbers come from
+# examples/train_qat.py.
+ACC_DELTA_PP = jnp.array([0.0, -0.1, -0.9, -0.4, -0.5])
+
+
+def act_bits(pe_type):
+    return ACT_BITS[pe_type]
+
+
+def weight_bits(pe_type):
+    return WEIGHT_BITS[pe_type]
+
+
+def psum_bits(pe_type):
+    return PSUM_BITS[pe_type]
+
+
+def mac_energy_pj(pe_type):
+    return MAC_ENERGY_PJ[pe_type]
+
+
+def mac_area_um2(pe_type):
+    return MAC_AREA_UM2[pe_type]
+
+
+def mac_delay_ns(pe_type):
+    return MAC_DELAY_NS[pe_type]
+
+
+def spad_bits_per_word(pe_type):
+    """Scratchpads store: ifmap word = act bits; filter word = weight bits;
+    psum word = psum bits. Returns (ifmap, filter, psum) bit widths."""
+    return ACT_BITS[pe_type], WEIGHT_BITS[pe_type], PSUM_BITS[pe_type]
+
+
+def pe_area_um2(pe_type, spad_ifmap, spad_filter, spad_psum):
+    """Area of ONE processing element: arithmetic + scratchpads + control."""
+    ib, fb, pb = spad_bits_per_word(pe_type)
+    spad_bits = spad_ifmap * ib + spad_filter * fb + spad_psum * pb
+    return (MAC_AREA_UM2[pe_type]
+            + spad_bits * SPAD_AREA_PER_BIT_UM2
+            + PE_CTRL_AREA_UM2)
+
+
+def spad_access_energy_pj(bits):
+    """Energy of one scratchpad access of `bits` width."""
+    return bits * SPAD_E_PER_BIT_PJ

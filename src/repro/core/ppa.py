@@ -1,0 +1,186 @@
+"""Polynomial-regression PPA surrogate models (the paper's Sec. III-C).
+
+The paper fits polynomial regression models of power, performance (clock)
+and area against synthesis ground truth, selecting model complexity with
+k-fold cross validation [Mosteller & Tukey].  This module reproduces that
+methodology against the ``synth.py`` oracle:
+
+  * per-PE-type models (the paper plots Fig. 3 per PE type),
+  * full multivariate monomial basis up to a degree chosen per target by
+    k-fold CV over {1, 2, 3},
+  * ridge-regularized least squares (lstsq on the standardized design
+    matrix),
+  * fit-quality metrics (R^2, MAPE) reported by benchmarks/fig3_ppa_fit.py.
+
+Implemented with jnp end-to-end; fitting a few hundred design points is
+instant and differentiable (not that the paper needs gradients — but it
+makes the surrogate usable inside jitted DSE loops).
+"""
+
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Dict, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.arch import AcceleratorConfig, PE_TYPE_NAMES
+from repro.core.synth import SynthResult, synthesize
+
+# Regression features: every knob except pe_type (models are per PE type).
+FEATURE_FIELDS = ("pe_rows", "pe_cols", "gbuf_kb", "spad_ifmap",
+                  "spad_filter", "spad_psum", "bandwidth_gbps")
+TARGETS = ("power_mw", "clock_ghz", "area_mm2")
+
+
+def config_features(cfg: AcceleratorConfig) -> jnp.ndarray:
+    """(N, F) raw feature matrix from a batched config."""
+    cols = [jnp.atleast_1d(getattr(cfg, f)).astype(jnp.float32)
+            for f in FEATURE_FIELDS]
+    return jnp.stack(cols, axis=-1)
+
+
+def monomial_exponents(n_features: int, degree: int) -> np.ndarray:
+    """All exponent tuples with total degree in [0, degree]."""
+    exps = [e for e in itertools.product(range(degree + 1), repeat=n_features)
+            if sum(e) <= degree]
+    exps.sort(key=lambda e: (sum(e), e))
+    return np.array(exps, dtype=np.int32)
+
+
+def design_matrix(x: jnp.ndarray, exps: np.ndarray,
+                  mu: jnp.ndarray, sigma: jnp.ndarray) -> jnp.ndarray:
+    """Monomial basis on standardized features. x: (N, F) -> (N, M)."""
+    z = (x - mu) / sigma
+    # (N, 1, F) ** (1, M, F) -> prod over F -> (N, M)
+    return jnp.prod(z[:, None, :] ** jnp.asarray(exps)[None, :, :], axis=-1)
+
+
+@dataclass
+class PolyModel:
+    """One fitted polynomial y ~ poly(x) for one (pe_type, target)."""
+    degree: int
+    exps: np.ndarray
+    mu: jnp.ndarray
+    sigma: jnp.ndarray
+    coef: jnp.ndarray
+    log_target: bool = True   # fit log(y): PPA spans decades, keeps MAPE low
+
+    def predict(self, x: jnp.ndarray) -> jnp.ndarray:
+        a = design_matrix(x, self.exps, self.mu, self.sigma)
+        y = a @ self.coef
+        return jnp.exp(y) if self.log_target else y
+
+
+def _fit_coef(a: jnp.ndarray, y: jnp.ndarray, ridge: float = 1e-6):
+    m = a.shape[1]
+    ata = a.T @ a + ridge * jnp.eye(m)
+    return jnp.linalg.solve(ata, a.T @ y)
+
+
+def fit_poly(x: jnp.ndarray, y: jnp.ndarray, degree: int,
+             log_target: bool = True, ridge: float = 1e-6) -> PolyModel:
+    mu = jnp.mean(x, axis=0)
+    sigma = jnp.maximum(jnp.std(x, axis=0), 1e-6)
+    exps = monomial_exponents(x.shape[1], degree)
+    a = design_matrix(x, exps, mu, sigma)
+    t = jnp.log(jnp.maximum(y, 1e-12)) if log_target else y
+    coef = _fit_coef(a, t, ridge)
+    return PolyModel(degree=degree, exps=exps, mu=mu, sigma=sigma, coef=coef,
+                     log_target=log_target)
+
+
+def kfold_mse(x: jnp.ndarray, y: jnp.ndarray, degree: int, k: int = 5,
+              log_target: bool = True) -> float:
+    """k-fold CV mean squared error (in log space if log_target)."""
+    n = x.shape[0]
+    idx = np.arange(n)
+    rng = np.random.default_rng(0)
+    rng.shuffle(idx)
+    folds = np.array_split(idx, k)
+    errs = []
+    for f in folds:
+        mask = np.ones(n, bool)
+        mask[f] = False
+        model = fit_poly(x[mask], y[mask], degree, log_target)
+        pred = model.predict(x[f])
+        t, p = (np.log(np.maximum(np.asarray(y[f]), 1e-12)),
+                np.log(np.maximum(np.asarray(pred), 1e-12))) \
+            if log_target else (np.asarray(y[f]), np.asarray(pred))
+        errs.append(float(np.mean((t - p) ** 2)))
+    return float(np.mean(errs))
+
+
+def select_and_fit(x: jnp.ndarray, y: jnp.ndarray,
+                   degrees: Sequence[int] = (1, 2, 3), k: int = 5,
+                   log_target: bool = True) -> PolyModel:
+    """Model selection by k-fold CV (the paper's methodology), then refit."""
+    best_d, best_mse = degrees[0], float("inf")
+    for d in degrees:
+        mse = kfold_mse(x, y, d, k, log_target)
+        if mse < best_mse:
+            best_d, best_mse = d, mse
+    return fit_poly(x, y, best_d, log_target)
+
+
+@dataclass
+class PPAModels:
+    """Per-PE-type surrogates for power / clock / area."""
+    models: Dict[str, Dict[str, PolyModel]] = field(default_factory=dict)
+
+    def predict(self, cfg: AcceleratorConfig) -> SynthResult:
+        """Surrogate SynthResult for a batched config (mixed PE types OK)."""
+        x = config_features(cfg)
+        pt = np.atleast_1d(np.asarray(cfg.pe_type))
+        out = {t: np.zeros(x.shape[0], np.float64) for t in TARGETS}
+        for code, name in enumerate(PE_TYPE_NAMES):
+            sel = pt == code
+            if not sel.any() or name not in self.models:
+                continue
+            for t in TARGETS:
+                out[t][sel] = np.asarray(
+                    self.models[name][t].predict(x[sel]))
+        clock = jnp.asarray(out["clock_ghz"], jnp.float32)
+        area = jnp.asarray(out["area_mm2"], jnp.float32)
+        power = jnp.asarray(out["power_mw"], jnp.float32)
+        return SynthResult(area_mm2=area, crit_path_ns=1.0 / jnp.maximum(clock, 1e-6),
+                           clock_ghz=clock, power_mw=power,
+                           leakage_mw=2.5 * area)
+
+
+def fit_ppa_models(cfg: AcceleratorConfig,
+                   degrees: Sequence[int] = (1, 2, 3), k: int = 5) -> PPAModels:
+    """Fit per-PE-type PPA surrogates against the synthesis oracle."""
+    truth = synthesize(cfg)
+    x = config_features(cfg)
+    pt = np.atleast_1d(np.asarray(cfg.pe_type))
+    ys = {"power_mw": truth.power_mw, "clock_ghz": truth.clock_ghz,
+          "area_mm2": truth.area_mm2}
+    models: Dict[str, Dict[str, PolyModel]] = {}
+    for code, name in enumerate(PE_TYPE_NAMES):
+        sel = pt == code
+        if not sel.any():
+            continue
+        models[name] = {
+            t: select_and_fit(x[sel], jnp.atleast_1d(ys[t])[sel], degrees, k)
+            for t in TARGETS}
+    return PPAModels(models=models)
+
+
+# ---- fit-quality metrics ---------------------------------------------------
+
+def r2(y_true, y_pred) -> float:
+    y_true = np.asarray(y_true, np.float64)
+    y_pred = np.asarray(y_pred, np.float64)
+    ss_res = np.sum((y_true - y_pred) ** 2)
+    ss_tot = np.sum((y_true - y_true.mean()) ** 2)
+    return float(1.0 - ss_res / max(ss_tot, 1e-12))
+
+
+def mape(y_true, y_pred) -> float:
+    y_true = np.asarray(y_true, np.float64)
+    y_pred = np.asarray(y_pred, np.float64)
+    return float(np.mean(np.abs((y_pred - y_true) /
+                                np.maximum(np.abs(y_true), 1e-12))))

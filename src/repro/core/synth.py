@@ -1,0 +1,93 @@
+"""Synthesis oracle — the stand-in for Synopsys DC + FreePDK45.
+
+The paper obtains ground-truth power / area / timing by synthesizing each
+RTL design point.  No EDA tools exist offline, so this module plays the
+role of the synthesis flow: a gate-level-informed analytical model built
+from the 45 nm constants in ``pe.py`` / ``energy.py``, plus the second-
+order effects a synthesis run exhibits (wiring overhead growing with array
+size, clock degradation from broadcast fan-out and SRAM decoder depth,
+leakage proportional to area) and a small deterministic pseudo-noise term
+(~3%) standing in for synthesis variability.  The polynomial PPA models in
+``ppa.py`` are fit against THIS oracle exactly as the paper fits against
+DC output — the fit-quality experiment (Fig. 3) is the reproduction
+target, not the absolute pJ numbers (DESIGN.md §3).
+
+Everything is pure jnp so oracle evaluation vmaps over design batches.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from repro.core import energy as E
+from repro.core import pe as PE
+from repro.core.arch import AcceleratorConfig
+
+
+class SynthResult(NamedTuple):
+    area_mm2: jnp.ndarray
+    crit_path_ns: jnp.ndarray
+    clock_ghz: jnp.ndarray
+    power_mw: jnp.ndarray          # at nominal (70%) MAC activity
+    leakage_mw: jnp.ndarray
+
+
+_NOISE_AMP = 0.03
+
+
+def _noise(cfg: AcceleratorConfig, salt: float):
+    """Deterministic ~3% 'synthesis variability' from a config hash."""
+    h = (cfg.pe_rows * 12.9898 + cfg.pe_cols * 78.233
+         + cfg.gbuf_kb * 0.3719 + cfg.spad_ifmap * 3.1415
+         + cfg.spad_filter * 0.0711 + cfg.spad_psum * 7.919
+         + cfg.pe_type.astype(jnp.float32) * 41.417
+         + cfg.bandwidth_gbps * 1.6180 + salt * 93.9737)
+    return 1.0 + _NOISE_AMP * jnp.sin(h) * jnp.cos(h * 1.7)
+
+
+def synthesize(cfg: AcceleratorConfig) -> SynthResult:
+    n_pes = cfg.pe_rows * cfg.pe_cols
+
+    # ---- area -----------------------------------------------------------
+    pe_area = PE.pe_area_um2(cfg.pe_type, cfg.spad_ifmap, cfg.spad_filter,
+                             cfg.spad_psum)
+    wiring = 1.0 + 0.015 * jnp.log2(jnp.maximum(n_pes, 2.0))  # global routing
+    area_um2 = (n_pes * pe_area * wiring
+                + E.gbuf_area_um2(cfg.gbuf_kb)
+                + n_pes * E.NOC_AREA_PER_PE_UM2
+                + E.IO_AREA_UM2)
+    area_mm2 = area_um2 * 1e-6 * _noise(cfg, 1.0)
+
+    # ---- timing ----------------------------------------------------------
+    # MAC critical path + broadcast fan-out across columns + gbuf decoders.
+    crit = (PE.mac_delay_ns(cfg.pe_type)
+            * (1.0 + 0.02 * jnp.log2(jnp.maximum(n_pes, 2.0)))
+            + 0.035 * jnp.log2(jnp.maximum(cfg.gbuf_kb, 2.0)))
+    crit = crit * _noise(cfg, 2.0)
+    clock_ghz = 1.0 / crit
+
+    # ---- power at nominal activity ----------------------------------------
+    activity = 0.70
+    a_b = PE.act_bits(cfg.pe_type)
+    w_b = PE.weight_bits(cfg.pe_type)
+    p_b = PE.psum_bits(cfg.pe_type)
+    # per-cycle per-PE: one MAC + RF traffic (act + w reads; psum RMW hits
+    # the spad ~once per c*S~12 MACs — register accumulation, cf. dataflow)
+    pe_pj_per_cycle = (PE.mac_energy_pj(cfg.pe_type)
+                       + E.rf_access_energy(a_b, cfg.spad_ifmap * a_b)
+                       + E.rf_access_energy(w_b, cfg.spad_filter * w_b)
+                       + (2.0 / 12.0) * E.rf_access_energy(
+                           p_b, cfg.spad_psum * p_b)
+                       + PE.PE_CTRL_ENERGY_PJ)
+    # gbuf serves ~one ifmap word per column + one filter word per row / cycle
+    gbuf_pj_per_cycle = (cfg.pe_cols * a_b + cfg.pe_rows * w_b) \
+        * E.gbuf_energy_per_bit(cfg.gbuf_kb)
+    dyn_mw = activity * clock_ghz * (n_pes * pe_pj_per_cycle
+                                     + gbuf_pj_per_cycle)  # pJ * GHz = mW
+    leak_mw = 3.5 * area_mm2  # 45 nm leakage density
+    power_mw = (dyn_mw + leak_mw) * _noise(cfg, 3.0)
+    return SynthResult(area_mm2=area_mm2, crit_path_ns=crit,
+                       clock_ghz=clock_ghz, power_mw=power_mw,
+                       leakage_mw=leak_mw)

@@ -1,0 +1,230 @@
+"""Layer-wise DNN workload extraction.
+
+The paper feeds QADAM "layer-wise DNN configurations" for VGG-16 and
+ResNet-20/34/50/56 (CIFAR-10/100 + ImageNet).  Those exact CNNs are built
+here, plus — beyond the paper — GEMM workload extraction for the assigned
+transformer / MoE / SSM architectures so the same DSE runs over the modern
+zoo (DESIGN.md §2).
+
+A workload is a stack of layer specs (conv or GEMM-as-1x1-conv) with a
+``count`` multiplicity, kept as parallel jnp arrays so the dataflow cost
+model evaluates all layers of a network in one vmapped call.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+
+class LayerSpec(NamedTuple):
+    """One conv layer: input HxWxC, K filters of RxS, given stride & batch.
+
+    A GEMM (M x Kd) @ (Kd x N) is the degenerate conv
+    H=1, W=M, C=Kd, K=N, R=S=stride=1  (so E=1, F=M, MACs = M*Kd*N*batch).
+    """
+
+    H: jnp.ndarray
+    W: jnp.ndarray
+    C: jnp.ndarray
+    K: jnp.ndarray
+    R: jnp.ndarray
+    S: jnp.ndarray
+    stride: jnp.ndarray
+    batch: jnp.ndarray
+    count: jnp.ndarray  # multiplicity (identical repeated layers)
+
+    def out_hw(self):
+        E = jnp.floor((self.H - self.R) / self.stride) + 1.0
+        F = jnp.floor((self.W - self.S) / self.stride) + 1.0
+        return E, F
+
+    def macs(self):
+        E, F = self.out_hw()
+        return self.batch * self.K * self.C * self.R * self.S * E * F * self.count
+
+
+class Workload(NamedTuple):
+    name: str
+    layers: LayerSpec           # stacked, leading dim = n_layers
+    layer_names: tuple
+
+
+def _stack(rows: Sequence[dict], name: str, names: Sequence[str]) -> Workload:
+    fields = LayerSpec._fields
+    arr = {f: jnp.asarray(np.array([r[f] for r in rows], np.float64), jnp.float32)
+           for f in fields}
+    return Workload(name=name, layers=LayerSpec(**arr), layer_names=tuple(names))
+
+
+def conv(H, W, C, K, R=3, S=None, stride=1, batch=1, count=1):
+    S = R if S is None else S
+    return dict(H=H + (R - 1), W=W + (S - 1),  # 'same' padding baked into H,W
+                C=C, K=K, R=R, S=S, stride=stride, batch=batch, count=count)
+
+
+def conv_valid(H, W, C, K, R, S=None, stride=1, batch=1, count=1):
+    S = R if S is None else S
+    return dict(H=H, W=W, C=C, K=K, R=R, S=S, stride=stride, batch=batch,
+                count=count)
+
+
+def gemm(M, Kd, N, batch=1, count=1):
+    return dict(H=1, W=M, C=Kd, K=N, R=1, S=1, stride=1, batch=batch,
+                count=count)
+
+
+# ---------------------------------------------------------------------------
+# The paper's CNNs
+# ---------------------------------------------------------------------------
+
+def vgg16(dataset: str = "imagenet", batch: int = 1) -> Workload:
+    if dataset == "imagenet":
+        hw, n_cls, fc_in = 224, 1000, 7 * 7 * 512
+        fcs = [(fc_in, 4096), (4096, 4096), (4096, n_cls)]
+    else:  # cifar10 / cifar100
+        hw = 32
+        n_cls = 100 if dataset == "cifar100" else 10
+        fcs = [(512, 512), (512, n_cls)]
+    rows, names = [], []
+    cfg = [(64, 2), (128, 2), (256, 3), (512, 3), (512, 3)]
+    c, h = 3, hw
+    for blk, (k, reps) in enumerate(cfg):
+        for r in range(reps):
+            rows.append(conv(h, h, c, k, 3, batch=batch))
+            names.append(f"conv{blk + 1}_{r + 1}")
+            c = k
+        h //= 2  # maxpool
+    for i, (m, n) in enumerate(fcs):
+        rows.append(gemm(1, m, n, batch=batch))
+        names.append(f"fc{i + 1}")
+    return _stack(rows, f"vgg16-{dataset}", names)
+
+
+def resnet_cifar(depth: int, dataset: str = "cifar10", batch: int = 1) -> Workload:
+    """ResNet-20/56 for CIFAR (He et al.): 3 stages of n=(depth-2)/6 blocks."""
+    n = (depth - 2) // 6
+    n_cls = 100 if dataset == "cifar100" else 10
+    rows = [conv(32, 32, 3, 16, 3, batch=batch)]
+    names = ["stem"]
+    c, h = 16, 32
+    for stage, k in enumerate((16, 32, 64)):
+        for b in range(n):
+            s = 2 if (stage > 0 and b == 0) else 1
+            rows.append(conv(h // s if s == 1 else h, h // s if s == 1 else h,
+                             c, k, 3, stride=s, batch=batch))
+            h = h // s
+            rows.append(conv(h, h, k, k, 3, batch=batch))
+            names += [f"s{stage}b{b}c1", f"s{stage}b{b}c2"]
+            if s == 2 or c != k:
+                rows.append(conv(h * s, h * s, c, k, 1, stride=s, batch=batch))
+                names.append(f"s{stage}b{b}sc")
+            c = k
+    rows.append(gemm(1, 64, n_cls, batch=batch))
+    names.append("fc")
+    return _stack(rows, f"resnet{depth}-{dataset}", names)
+
+
+def resnet34(batch: int = 1) -> Workload:
+    rows = [conv_valid(230, 230, 3, 64, 7, stride=2, batch=batch)]
+    names = ["stem"]
+    c, h = 64, 56
+    for stage, (k, reps) in enumerate([(64, 3), (128, 4), (256, 6), (512, 3)]):
+        for b in range(reps):
+            s = 2 if (stage > 0 and b == 0) else 1
+            rows.append(conv(h, h, c, k, 3, stride=s, batch=batch))
+            h = h // s
+            rows.append(conv(h, h, k, k, 3, batch=batch))
+            names += [f"s{stage}b{b}c1", f"s{stage}b{b}c2"]
+            if c != k:
+                rows.append(conv(h * s, h * s, c, k, 1, stride=s, batch=batch))
+                names.append(f"s{stage}b{b}sc")
+            c = k
+    rows.append(gemm(1, 512, 1000, batch=batch))
+    names.append("fc")
+    return _stack(rows, "resnet34-imagenet", names)
+
+
+def resnet50(batch: int = 1) -> Workload:
+    rows = [conv_valid(230, 230, 3, 64, 7, stride=2, batch=batch)]
+    names = ["stem"]
+    c, h = 64, 56
+    for stage, (k, reps) in enumerate([(64, 3), (128, 4), (256, 6), (512, 3)]):
+        for b in range(reps):
+            s = 2 if (stage > 0 and b == 0) else 1
+            rows.append(conv(h, h, c, k, 1, batch=batch))          # reduce
+            rows.append(conv(h, h, k, k, 3, stride=s, batch=batch))
+            h = h // s
+            rows.append(conv(h, h, k, 4 * k, 1, batch=batch))      # expand
+            names += [f"s{stage}b{b}c1", f"s{stage}b{b}c2", f"s{stage}b{b}c3"]
+            if c != 4 * k:
+                rows.append(conv(h * s, h * s, c, 4 * k, 1, stride=s, batch=batch))
+                names.append(f"s{stage}b{b}sc")
+            c = 4 * k
+    rows.append(gemm(1, 2048, 1000, batch=batch))
+    names.append("fc")
+    return _stack(rows, "resnet50-imagenet", names)
+
+
+PAPER_WORKLOADS = {
+    "vgg16-cifar10": lambda batch=1: vgg16("cifar10", batch),
+    "vgg16-cifar100": lambda batch=1: vgg16("cifar100", batch),
+    "vgg16-imagenet": lambda batch=1: vgg16("imagenet", batch),
+    "resnet20-cifar10": lambda batch=1: resnet_cifar(20, "cifar10", batch),
+    "resnet20-cifar100": lambda batch=1: resnet_cifar(20, "cifar100", batch),
+    "resnet56-cifar10": lambda batch=1: resnet_cifar(56, "cifar10", batch),
+    "resnet56-cifar100": lambda batch=1: resnet_cifar(56, "cifar100", batch),
+    "resnet34-imagenet": lambda batch=1: resnet34(batch),
+    "resnet50-imagenet": lambda batch=1: resnet50(batch),
+}
+
+
+# ---------------------------------------------------------------------------
+# Beyond the paper: transformer-family GEMM extraction (assigned archs)
+# ---------------------------------------------------------------------------
+
+def transformer_workload(cfg, seq: int, batch: int, mode: str = "train",
+                         name: str | None = None) -> Workload:
+    """Extract per-layer GEMMs from a repro.configs ArchConfig-like object.
+
+    mode: 'train'/'prefill' use full seq; 'decode' uses one token against a
+    seq-long KV cache (attention GEMMs become matrix-vector).
+    Counts forward MACs only (training multiplies by 3 in the cost model if
+    requested by the caller).
+    """
+    d, L = cfg.d_model, cfg.n_layers
+    hq, hkv = cfg.n_heads, cfg.kv_heads
+    dh = getattr(cfg, "head_dim", d // max(hq, 1))
+    tokens = 1 if mode == "decode" else seq
+    kvlen = seq
+    rows, names = [], []
+
+    def add(tag, M, Kd, N, count=1):
+        rows.append(gemm(M, Kd, N, batch=batch, count=count))
+        names.append(tag)
+
+    attn_layers = getattr(cfg, "attn_layers", L if hq > 0 else 0)
+    if attn_layers:
+        add("wq", tokens, d, hq * dh, attn_layers)
+        add("wk", tokens, d, hkv * dh, attn_layers)
+        add("wv", tokens, d, hkv * dh, attn_layers)
+        add("wo", tokens, hq * dh, d, attn_layers)
+        # attention score/value GEMMs (per head, batched over heads)
+        add("qk", tokens, dh, kvlen, attn_layers * hq)
+        add("av", tokens, kvlen, dh, attn_layers * hq)
+    # FFN
+    n_dense = getattr(cfg, "dense_layers", L if cfg.moe_experts == 0 else 0)
+    n_moe = L - n_dense if cfg.moe_experts else 0
+    if n_dense:
+        add("ffn_in", tokens, d, cfg.d_ff * 2, n_dense)   # gate+up (SwiGLU)
+        add("ffn_out", tokens, cfg.d_ff, d, n_dense)
+    if n_moe:
+        topk = cfg.moe_topk + getattr(cfg, "moe_shared", 0)
+        add("moe_in", tokens * topk, d, cfg.moe_d_ff * 2, n_moe)
+        add("moe_out", tokens * topk, cfg.moe_d_ff, d, n_moe)
+        add("router", tokens, d, cfg.moe_experts, n_moe)
+    # embeddings / head
+    add("lm_head", tokens, d, cfg.vocab, 1)
+    return _stack(rows, name or f"{cfg.name}-{mode}", names)

@@ -1,0 +1,2 @@
+from repro.data.pipeline import DataPipeline, lm_pipeline, cifar_pipeline
+from repro.data import synthetic

@@ -1,0 +1,119 @@
+"""Deterministic synthetic datasets (no datasets ship offline — DESIGN.md §6).
+
+Two generators, both stateless functions of (seed, step) so the pipeline
+state checkpoints as a single integer and restarts reproduce the exact
+stream on any host layout:
+
+  * token_batch      — LM streams with learnable structure: a zipfian
+    unigram mixed with a hidden deterministic bigram transition table, so
+    cross-entropy has meaningful headroom below the unigram entropy and
+    training curves actually bend.
+  * image_batch      — CIFAR-like 32x32x3 class-conditional images:
+    per-class procedural sinusoid/gradient templates + noise; linearly
+    separable enough to train small CNNs to high accuracy in minutes on
+    CPU, hard enough that quantization-induced accuracy gaps show up
+    (the paper's Figs. 5-6 orderings).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# LM token streams
+# ---------------------------------------------------------------------------
+
+def _zipf_probs(vocab: int, alpha: float = 1.1) -> np.ndarray:
+    ranks = np.arange(1, vocab + 1, dtype=np.float64)
+    p = ranks ** (-alpha)
+    return (p / p.sum()).astype(np.float32)
+
+
+def token_batch(seed: int, step: int, batch: int, seq: int, vocab: int,
+                bigram_frac: float = 0.7):
+    """Returns {'tokens': (B, S) int32, 'labels': (B, S) int32}.
+
+    labels[t] = tokens[t+1] (next-token prediction); the stream mixes
+    zipfian draws with a fixed permutation bigram: with prob bigram_frac,
+    next = perm[cur] — a learnable deterministic structure.
+    """
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), step)
+    kz, kb, k0 = jax.random.split(key, 3)
+    probs = jnp.asarray(_zipf_probs(vocab))
+    perm = jax.random.permutation(jax.random.PRNGKey(seed + 999), vocab)
+
+    zipf = jax.random.choice(kz, vocab, (batch, seq + 1), p=probs)
+    use_bigram = jax.random.bernoulli(kb, bigram_frac, (batch, seq + 1))
+
+    def step_fn(carry, xs):
+        cur = carry
+        z, ub = xs
+        nxt = jnp.where(ub, perm[cur], z)
+        return nxt, nxt
+
+    first = jax.random.choice(k0, vocab, (batch,), p=probs)
+    _, toks = jax.lax.scan(step_fn, first,
+                           (zipf.T, use_bigram.T))
+    toks = jnp.concatenate([first[None], toks], axis=0).T  # (B, S+2)->use S+1
+    toks = toks[:, :seq + 1].astype(jnp.int32)
+    return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+
+# ---------------------------------------------------------------------------
+# CIFAR-like images
+# ---------------------------------------------------------------------------
+
+def _class_templates(n_classes: int, hw: int = 32) -> np.ndarray:
+    """(C, hw, hw, 3) smooth per-class patterns, deterministic."""
+    rng = np.random.default_rng(20220513)
+    yy, xx = np.mgrid[0:hw, 0:hw].astype(np.float64) / hw
+    temps = []
+    for c in range(n_classes):
+        f1, f2 = rng.uniform(1, 5, 2)
+        ph1, ph2 = rng.uniform(0, 2 * np.pi, 2)
+        ang = rng.uniform(0, np.pi)
+        u = np.cos(ang) * xx + np.sin(ang) * yy
+        chans = []
+        for ch in range(3):
+            phc = rng.uniform(0, 2 * np.pi)
+            chans.append(np.sin(2 * np.pi * f1 * u + ph1 + phc)
+                         + 0.5 * np.cos(2 * np.pi * f2 * yy + ph2 + phc))
+        temps.append(np.stack(chans, -1))
+    t = np.stack(temps)
+    return (t / np.abs(t).max()).astype(np.float32)
+
+
+_TEMPLATE_CACHE: dict = {}
+
+
+def image_batch(seed: int, step: int, batch: int, n_classes: int = 10,
+                hw: int = 32, noise: float = 0.6, augment: bool = True):
+    """Returns {'images': (B, hw, hw, 3) f32, 'labels': (B,) int32}."""
+    if (n_classes, hw) not in _TEMPLATE_CACHE:
+        _TEMPLATE_CACHE[(n_classes, hw)] = jnp.asarray(
+            _class_templates(n_classes, hw))
+    templates = _TEMPLATE_CACHE[(n_classes, hw)]
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), step)
+    ky, kn, ks, kf = jax.random.split(key, 4)
+    labels = jax.random.randint(ky, (batch,), 0, n_classes)
+    imgs = templates[labels]
+    if augment:
+        # random shifts (translation aug) + horizontal flips
+        shift = jax.random.randint(ks, (batch, 2), -3, 4)
+        imgs = jax.vmap(lambda im, sh: jnp.roll(im, sh, axis=(0, 1)))(
+            imgs, shift)
+        flip = jax.random.bernoulli(kf, 0.5, (batch,))
+        imgs = jnp.where(flip[:, None, None, None], imgs[:, :, ::-1], imgs)
+    imgs = imgs + noise * jax.random.normal(kn, imgs.shape)
+    return {"images": imgs.astype(jnp.float32),
+            "labels": labels.astype(jnp.int32)}
+
+
+def eval_image_set(seed: int, n: int, n_classes: int = 10, hw: int = 32,
+                   noise: float = 0.6):
+    """Fixed held-out set (no augmentation)."""
+    return image_batch(seed + 10_000_019, 0, n, n_classes, hw, noise,
+                       augment=False)

@@ -1,0 +1,7 @@
+"""Pallas TPU kernels (interpret=True-validated on CPU; see each
+subpackage's ref.py for the pure-jnp oracle)."""
+
+from repro.kernels.fake_quant import fake_quant, fake_quant_any
+from repro.kernels.flash_attention import (flash_attention,
+                                           flash_attention_bh)
+from repro.kernels.quant_matmul import quant_matmul, quant_matmul_any

@@ -1,0 +1,1 @@
+from repro.kernels.fake_quant.fake_quant import fake_quant, fake_quant_any

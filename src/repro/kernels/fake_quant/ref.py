@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the fused fake-quant Pallas kernel (forward only)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.quant.fake_quant import POW2_LEVELS
+
+
+def ref_fake_quant_affine(w: jnp.ndarray, scale: jnp.ndarray,
+                          bits: int) -> jnp.ndarray:
+    """w: (K, N); scale: (N,) per-channel. Quantize-dequantize forward."""
+    qmax = 2.0 ** (bits - 1) - 1.0
+    q = jnp.clip(jnp.round(w / scale[None, :]), -qmax, qmax)
+    return q * scale[None, :]
+
+
+def ref_fake_quant_pow2(w: jnp.ndarray, e_max: jnp.ndarray) -> jnp.ndarray:
+    """w: (K, N); e_max: (N,). LightPE-1 pow2 rounding forward."""
+    e_min = e_max[None, :] - (POW2_LEVELS - 1)
+    mag = jnp.maximum(jnp.abs(w), 1e-12)
+    e = jnp.clip(jnp.round(jnp.log2(mag)), e_min, e_max[None, :])
+    return jnp.sign(w) * jnp.exp2(e)

@@ -1,0 +1,95 @@
+"""Pallas TPU kernel: flash attention forward (online softmax, q x kv
+tiled in VMEM).
+
+The graph-level KV-chunking in models/flash_attn.py bounds peak memory
+but still streams every logit tile through HBM (EXPERIMENTS.md §Perf
+appendix). This kernel keeps the (bq, bk) logit tile AND the running
+(m, l, acc) state in VMEM scratch across the kv-block grid dimension —
+the logits never exist in HBM, which removes the dominant prefill/decode
+byte term on real hardware.
+
+Grid: (nq, nk), kv innermost so the scratch accumulators carry across
+the kv steps of one q block. Causal masking from absolute block offsets
+(program_id x block size + iota); fully-masked kv blocks are still
+visited (masked) — a production variant would shrink the grid per q row.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BQ = 128
+DEFAULT_BK = 128
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+            *, bq, bk, nk, scale, causal):
+    kb = pl.program_id(1)
+
+    @pl.when(kb == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[...].astype(jnp.float32) * scale        # (bq, d)
+    k = k_ref[...].astype(jnp.float32)                # (bk, d)
+    logits = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)           # (bq, bk)
+    if causal:
+        qb = pl.program_id(0)
+        qpos = qb * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = kb * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        logits = jnp.where(kpos <= qpos, logits, -1e30)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(logits, axis=-1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(logits - m_new[:, None])
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot(
+        p, v_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(kb == nk - 1)
+    def _write():
+        o_ref[...] = (acc_ref[...]
+                      / jnp.maximum(l_ref[...], 1e-30)[:, None]
+                      ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "scale", "bq", "bk",
+                                             "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, scale: float = 0.0,
+                    bq: int = DEFAULT_BQ, bk: int = DEFAULT_BK,
+                    interpret: bool = False):
+    """q: (Sq, D); k, v: (Skv, D) -> (Sq, D) f32. One head; vmap over
+    (batch, heads) in ops.py. Sq % bq == 0, Skv % bk == 0."""
+    sq, d = q.shape
+    skv = k.shape[0]
+    assert sq % bq == 0 and skv % bk == 0, (sq, skv, bq, bk)
+    nq, nk = sq // bq, skv // bk
+    sc = scale or (1.0 / float(np.sqrt(d)))
+    kernel = functools.partial(_kernel, bq=bq, bk=bk, nk=nk, scale=sc,
+                               causal=causal)
+    return pl.pallas_call(
+        kernel,
+        grid=(nq, nk),
+        in_specs=[pl.BlockSpec((bq, d), lambda i, j: (i, 0)),
+                  pl.BlockSpec((bk, d), lambda i, j: (j, 0)),
+                  pl.BlockSpec((bk, d), lambda i, j: (j, 0))],
+        out_specs=pl.BlockSpec((bq, d), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((sq, d), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bq,), jnp.float32),
+                        pltpu.VMEM((bq,), jnp.float32),
+                        pltpu.VMEM((bq, d), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v)

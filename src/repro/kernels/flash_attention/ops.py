@@ -1,0 +1,47 @@
+"""jit'd wrapper: batched/multi-head flash attention with padding."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import (DEFAULT_BK,
+                                                           DEFAULT_BQ,
+                                                           flash_attention)
+
+
+def _round_up(x, m):
+    return (x + m - 1) // m * m
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "scale", "bq", "bk",
+                                             "interpret"))
+def flash_attention_bh(q, k, v, *, causal: bool = True, scale: float = 0.0,
+                       bq: int = DEFAULT_BQ, bk: int = DEFAULT_BK,
+                       interpret: bool = False):
+    """q: (B, H, Sq, D); k, v: (B, H, Skv, D) -> (B, H, Sq, D) f32.
+
+    Pads Sq/Skv to block multiples; padded kv rows are masked out by the
+    causal mask (they sit beyond every real query position), padded q rows
+    are sliced off.
+    """
+    b, h, sq, d = q.shape
+    skv = k.shape[2]
+    # padded kv rows are only neutralized by the causal mask (they sit
+    # beyond every real query); non-causal calls need aligned Skv
+    assert causal or skv % min(bk, _round_up(skv, 8)) == 0, \
+        "non-causal flash requires Skv % bk == 0"
+    bq_eff = min(bq, _round_up(sq, 8))
+    bk_eff = min(bk, _round_up(skv, 8))
+    sqp = _round_up(sq, bq_eff)
+    skp = _round_up(skv, bk_eff)
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, sqp - sq), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, skp - skv), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, skp - skv), (0, 0)))
+
+    fn = functools.partial(flash_attention, causal=causal, scale=scale,
+                           bq=bq_eff, bk=bk_eff, interpret=interpret)
+    out = jax.vmap(jax.vmap(fn))(qp, kp, vp)
+    return out[:, :, :sq]

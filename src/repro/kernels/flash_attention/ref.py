@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the flash_attention Pallas kernel (one head)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def ref_flash_attention(q, k, v, causal: bool = True,
+                        scale: float = 0.0) -> jnp.ndarray:
+    """q: (Sq, D); k, v: (Skv, D) -> (Sq, D). Masked softmax attention."""
+    sq, d = q.shape
+    skv = k.shape[0]
+    sc = scale or (1.0 / np.sqrt(d))
+    logits = (q.astype(jnp.float32) @ k.astype(jnp.float32).T) * sc
+    if causal:
+        qp = jnp.arange(sq)[:, None]
+        kp = jnp.arange(skv)[None, :]
+        logits = jnp.where(kp <= qp, logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    return (p @ v.astype(jnp.float32)).astype(jnp.float32)

@@ -1,0 +1,46 @@
+"""jit'd public wrapper for quant_matmul: general shapes via zero padding.
+
+Padding safety: x is padded with zeros along M and K, so padded K rows
+contribute nothing regardless of the (garbage) padded weight codes; padded
+N columns are sliced off the result.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.quant_matmul.quant_matmul import (DEFAULT_BK, DEFAULT_BM,
+                                                     DEFAULT_BN, quant_matmul)
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("mode", "bm", "bn", "bk", "interpret"))
+def quant_matmul_any(x: jnp.ndarray, w: jnp.ndarray, scale: jnp.ndarray,
+                     *, mode: str = "int4", bm: int = DEFAULT_BM,
+                     bn: int = DEFAULT_BN, bk: int = DEFAULT_BK,
+                     interpret: bool = False) -> jnp.ndarray:
+    """y = x @ dequant(w) for arbitrary (M, K, N); see quant_matmul."""
+    m, kdim = x.shape
+    n = w.shape[-1]
+    packed = mode in ("int4", "pow2")
+    k_actual = w.shape[0] * (2 if packed else 1)
+    assert kdim == k_actual, (kdim, k_actual)
+
+    bm_eff = min(bm, _round_up(m, 8))
+    mp = _round_up(m, bm_eff)
+    kp = _round_up(kdim, bk)
+    np_ = _round_up(n, bn)
+    xpad = jnp.pad(x, ((0, mp - m), (0, kp - kdim)))
+    wpad = jnp.pad(w, ((0, (kp - kdim) // (2 if packed else 1)),
+                       (0, np_ - n)))
+    spad = jnp.pad(scale, (0, np_ - n))
+    y = quant_matmul(xpad, wpad, spad, mode=mode, bm=bm_eff, bn=bn, bk=bk,
+                     interpret=interpret)
+    return y[:m, :n]

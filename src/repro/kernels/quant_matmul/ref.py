@@ -1,0 +1,29 @@
+"""Pure-jnp oracles for the quant_matmul Pallas kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.quant.pack import (dequantize_int4, dequantize_int8,
+                              dequantize_pow2)
+
+
+def ref_quant_matmul_int4(x: jnp.ndarray, packed: jnp.ndarray,
+                          scale: jnp.ndarray) -> jnp.ndarray:
+    """x: (M, K) float; packed: (K//2, N) uint8 int4 codes; scale: (N,)."""
+    w = dequantize_int4(packed, scale)
+    return (x.astype(jnp.float32) @ w).astype(jnp.float32)
+
+
+def ref_quant_matmul_pow2(x: jnp.ndarray, packed: jnp.ndarray,
+                          e_max: jnp.ndarray) -> jnp.ndarray:
+    """x: (M, K); packed: (K//2, N) uint8 pow2 codes; e_max: (N,)."""
+    w = dequantize_pow2(packed, e_max)
+    return (x.astype(jnp.float32) @ w).astype(jnp.float32)
+
+
+def ref_quant_matmul_int8(x: jnp.ndarray, q: jnp.ndarray,
+                          scale: jnp.ndarray) -> jnp.ndarray:
+    """x: (M, K); q: (K, N) int8; scale: (N,)."""
+    w = dequantize_int8(q, scale)
+    return (x.astype(jnp.float32) @ w).astype(jnp.float32)

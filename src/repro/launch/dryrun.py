@@ -1,0 +1,316 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this builds the production mesh, the step function
+(train_step / prefill_step / serve_step), FSDP+TP+EP shardings, and
+ShapeDtypeStruct inputs; then
+
+    lowered  = jax.jit(step, in_shardings=..., out_shardings=...).lower(...)
+    compiled = lowered.compile()
+    print(compiled.memory_analysis())    # proves it fits per-device HBM
+    print(compiled.cost_analysis())      # FLOPs / bytes for the roofline
+
+and parses the optimized HLO for collective-op payload bytes (all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute) — the
+collective roofline term.  Results land in results/dryrun/*.json, read by
+benchmarks/roofline.py and EXPERIMENTS.md.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-32b --shape train_4k [--multi-pod]
+  python -m repro.launch.dryrun --all [--multi-pod]
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get as get_cfg, list_archs
+from repro.launch import shapes as SH
+from repro.launch import hlo_analysis as HA
+from repro.launch.mesh import dp_axes, make_production_mesh
+from repro.launch.sharding import (make_cache_shardings,
+                                   make_param_shardings)
+from repro.models import family_module
+from repro.models.layers import activation_sharding
+from repro.optim import adamw, constant
+from repro.train.trainer import make_train_step, state_shardings_for, TrainState
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16}
+
+_COLL_RE = re.compile(
+    r"=\s*((?:\w+\[[^\]]*\][^ ]*|\([^)]*\)))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum payload bytes of collective ops in optimized HLO, by op kind."""
+    out: dict = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        shape_str, kind = m.group(1), m.group(2)
+        b = _shape_bytes(shape_str)
+        out[kind] = out.get(kind, 0) + b
+        out.setdefault(kind + "_count", 0)
+        out[kind + "_count"] += 1
+    out["total"] = sum(v for k, v in out.items()
+                       if not k.endswith("_count") and k != "total")
+    return out
+
+
+def _dp(mesh):
+    return dp_axes(mesh)
+
+
+def _maybe_dp(mesh, dim: int):
+    n = 1
+    for a in _dp(mesh):
+        n *= mesh.shape[a]
+    return _dp(mesh) if dim % n == 0 else None
+
+
+def build_cell(arch: str, shape_name: str, mesh):
+    """Returns (step_fn, in_shardings, input_specs, donate) for one cell."""
+    cfg = get_cfg(arch)
+    mod = family_module(cfg)
+    shape = SH.SHAPES[shape_name]
+    key = jax.random.PRNGKey(0)
+
+    if shape.kind == "train":
+        dp = _dp(mesh)
+        dp_total = int(np.prod([mesh.shape[a] for a in dp]))
+        # microbatch must stay divisible by the DP shard count
+        n_micro = min(SH.TRAIN_MICROBATCHES.get(cfg.name, 8),
+                      max(shape.batch // dp_total, 1))
+        opt = adamw(constant(1e-4))
+        step = make_train_step(cfg, mod, opt, n_micro=n_micro, dp=dp)
+        state_shardings = state_shardings_for(cfg, mod, mesh, opt, key)
+        params_shape = jax.eval_shape(lambda k: mod.init_params(cfg, k), key)
+        opt_shape = jax.eval_shape(opt.init, params_shape)
+        state_spec = TrainState(params=params_shape, opt_state=opt_shape,
+                                step=jax.ShapeDtypeStruct((), jnp.int32))
+        batch = SH.batch_specs(cfg, shape)
+        batch_shardings = jax.tree.map(
+            lambda x: NamedSharding(
+                mesh, P(_maybe_dp(mesh, x.shape[0]),
+                        *(None,) * (len(x.shape) - 1))), batch)
+        return (step, (state_shardings, batch_shardings),
+                (state_spec, batch), (0,))
+
+    params_shape = jax.eval_shape(lambda k: mod.init_params(cfg, k), key)
+    # serving runs bf16 weights (halves HBM vs the f32 training master copy)
+    params_shape = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(
+            x.shape, jnp.bfloat16 if x.dtype == jnp.float32 else x.dtype),
+        params_shape)
+    p_shardings = make_param_shardings(cfg, params_shape, mesh, "serve")
+    cache_shape = SH.cache_shape(cfg, mod, shape)
+    # long-context: KV heads that don't divide the model axis -> shard the
+    # cache SEQUENCE dim over model (and, when batch==1, also over data)
+    seq_shard = (cfg.kv_heads and cfg.kv_heads % mesh.shape["model"] != 0)
+    c_shardings = make_cache_shardings(cfg, cache_shape, mesh,
+                                       seq_shard=bool(seq_shard))
+
+    if shape.kind == "prefill":
+        toks = SH.prefill_token_specs(cfg, shape)
+        if cfg.family == "encdec":
+            def step(params, batch, cache):
+                logits, cache, enc = mod.prefill(params, batch, cfg, cache)
+                return logits, cache
+            tok_shardings = jax.tree.map(
+                lambda x: NamedSharding(
+                    mesh, P(_maybe_dp(mesh, x.shape[0]),
+                            *(None,) * (len(x.shape) - 1))), toks)
+        elif cfg.family == "vlm":
+            def step(params, tokens, positions, cache):
+                return mod.prefill(params, tokens, cfg, cache, positions)
+            pos = jax.ShapeDtypeStruct((shape.batch, shape.seq, 3),
+                                       jnp.int32)
+            bp = _maybe_dp(mesh, shape.batch)
+            return (step,
+                    (p_shardings, NamedSharding(mesh, P(bp, None)),
+                     NamedSharding(mesh, P(bp, None, None)), c_shardings),
+                    (params_shape, toks, pos, cache_shape), (3,))
+        else:
+            def step(params, tokens, cache):
+                return mod.prefill(params, tokens, cfg, cache)
+            tok_shardings = NamedSharding(
+                mesh, P(_maybe_dp(mesh, shape.batch), None))
+        return (step, (p_shardings, tok_shardings, c_shardings),
+                (params_shape, toks, cache_shape), (2,))
+
+    # decode
+    tok = SH.decode_token_specs(cfg, shape)
+    tok_sharding = NamedSharding(mesh, P(_maybe_dp(mesh, shape.batch), None))
+    extra = SH.decode_extra_specs(cfg, shape)
+    if cfg.family == "encdec":
+        def step(params, token, enc_out, cache):
+            return mod.decode_step(params, token, enc_out, cfg, cache)
+        enc_sharding = NamedSharding(
+            mesh, P(_maybe_dp(mesh, shape.batch), None, None))
+        return (step, (p_shardings, tok_sharding, enc_sharding, c_shardings),
+                (params_shape, tok, extra["enc_out"], cache_shape), (3,))
+    if cfg.family == "vlm":
+        def step(params, token, positions, cache):
+            return mod.decode_step(params, token, cfg, cache, positions)
+        pos_sharding = NamedSharding(
+            mesh, P(_maybe_dp(mesh, shape.batch), None, None))
+        return (step, (p_shardings, tok_sharding, pos_sharding, c_shardings),
+                (params_shape, tok, extra["positions"], cache_shape), (3,))
+
+    def step(params, token, cache):
+        return mod.decode_step(params, token, cfg, cache)
+    return (step, (p_shardings, tok_sharding, c_shardings),
+            (params_shape, tok, cache_shape), (2,))
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool = False,
+             save: bool = True, verbose: bool = True) -> dict:
+    cfg = get_cfg(arch)
+    shape = SH.SHAPES[shape_name]
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    result = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+              "kind": shape.kind}
+    if not SH.shape_runs(cfg, shape):
+        result["status"] = "skipped"
+        result["reason"] = ("no decode step" if not cfg.has_decode else
+                            "long_500k needs sub-quadratic attention")
+        if save:
+            _save(result)
+        return result
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    dp = dp_axes(mesh)
+    dp_total = int(np.prod([mesh.shape[a] for a in dp]))
+    t0 = time.time()
+    try:
+        with mesh, activation_sharding(dp, dp_total):
+            step, in_shardings, specs, donate = build_cell(
+                arch, shape_name, mesh)
+            lowered = jax.jit(step, in_shardings=in_shardings,
+                              donate_argnums=donate).lower(*specs)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+            hlo = compiled.as_text()
+        # trip-count-aware per-device accounting (see hlo_analysis.py;
+        # raw cost_analysis counts while bodies ONCE and is kept for ref)
+        ana = HA.analyze(hlo)
+        n_dev = int(np.prod(list(mesh.shape.values())))
+        result.update(
+            status="ok", lower_s=round(t_lower, 2),
+            compile_s=round(t_compile, 2), devices=n_dev,
+            flops=float(ana["flops"]),
+            bytes_out=float(ana["bytes_out"]),
+            raw_flops_once=float(cost.get("flops", -1)),
+            raw_bytes_once=float(cost.get("bytes accessed", -1)),
+            memory={k: int(getattr(mem, k, 0)) for k in
+                    ("argument_size_in_bytes", "output_size_in_bytes",
+                     "temp_size_in_bytes", "generated_code_size_in_bytes")},
+            collectives=ana["collectives"],
+            whiles=ana["whiles"],
+            hlo_instructions=hlo.count("\n"),
+        )
+        _save_hlo(result, hlo)
+        if verbose:
+            coll = ana["collectives"]
+            print(f"[{arch} x {shape_name} x {mesh_name}] OK "
+                  f"lower {t_lower:.1f}s compile {t_compile:.1f}s")
+            print("  memory_analysis:", result["memory"])
+            print(f"  flops/dev={result['flops']:.3e} "
+                  f"bytes_out/dev={result['bytes_out']:.3e}")
+            print(f"  collectives: { {k: round(v/1e6, 1) for k, v in coll.items() if not k.endswith('_count')} } MB")
+    except Exception as e:  # noqa: BLE001 — record failures as data
+        result["status"] = "error"
+        result["error"] = f"{type(e).__name__}: {e}"[:2000]
+        result["traceback"] = traceback.format_exc()[-4000:]
+        if verbose:
+            print(f"[{arch} x {shape_name} x {mesh_name}] FAIL: "
+                  f"{result['error'][:300]}")
+    if save:
+        _save(result)
+    return result
+
+
+def _save_hlo(result: dict, hlo: str) -> None:
+    import gzip
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    fn = (f"{result['arch']}__{result['shape']}__{result['mesh']}"
+          ".hlo.gz")
+    with gzip.open(os.path.join(RESULTS_DIR, fn), "wt") as f:
+        f.write(hlo)
+
+
+def _save(result: dict) -> None:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    fn = f"{result['arch']}__{result['shape']}__{result['mesh']}.json"
+    with open(os.path.join(RESULTS_DIR, fn), "w") as f:
+        json.dump(result, f, indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None,
+                    choices=list(SH.SHAPES) + [None])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    archs = list_archs() if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SH.SHAPES) if (args.all or args.shape is None) \
+        else [args.shape]
+    statuses = []
+    for arch in archs:
+        for shape in shapes:
+            fn = os.path.join(
+                RESULTS_DIR,
+                f"{arch}__{shape}__"
+                f"{'pod2x16x16' if args.multi_pod else 'pod16x16'}.json")
+            if args.skip_existing and os.path.exists(fn):
+                st = json.load(open(fn)).get("status")
+                if st in ("ok", "skipped"):
+                    statuses.append((arch, shape, st + " (cached)"))
+                    continue
+            r = run_cell(arch, shape, args.multi_pod)
+            statuses.append((arch, shape, r["status"]))
+    print("\n=== dry-run summary ===")
+    for a, s, st in statuses:
+        print(f"{a:24s} {s:12s} {st}")
+    bad = [s for s in statuses if s[2] == "error"]
+    raise SystemExit(1 if bad else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,207 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Perf hillclimbing runner (EXPERIMENTS.md §Perf).
+
+Each chosen cell has an ordered list of variants (cumulative — each
+iteration keeps the previous changes).  A variant = ArchConfig overrides
++ step options (serve-quantized weights, cache dtype, mixed precision).
+Lower + compile exactly like the dry-run, write trip-count-corrected
+roofline terms to results/perf/.
+
+  PYTHONPATH=src python -m repro.launch.perf [--cell qwen3-32b:decode_32k]
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get as get_cfg
+from repro.launch import hlo_analysis as HA
+from repro.launch import shapes as SH
+from repro.launch.mesh import dp_axes, make_production_mesh
+from repro.launch.sharding import make_cache_shardings, make_param_shardings
+from repro.models import family_module
+from repro.models.layers import activation_sharding, compute_dtype
+from repro.optim import adamw, constant
+from repro.train.trainer import (TrainState, make_train_step,
+                                 state_shardings_for)
+from repro.serve.engine import quantize_params
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "perf")
+
+# ---------------------------------------------------------------------------
+# The three hillclimbed cells (chosen per EXPERIMENTS.md §Roofline):
+#   deepseek train_4k : most collective-bound (29.1s coll vs 0.55s compute)
+#   gemma3 train_4k   : worst useful-FLOPs fraction among trains (0.24)
+#   qwen3 decode_32k  : memory-bound decode — the paper's LightPE serving
+#                       story (packed weights / quantized cache)
+# ---------------------------------------------------------------------------
+
+CELLS = {
+    ("deepseek-moe-16b", "train_4k"): [
+        ("v1_bf16_compute", dict(mixed_precision=True), {}),
+        ("v2_ep_shard_map",
+         dict(mixed_precision=True, moe_ep_shard_map=True), {}),
+        ("v3_int8_dispatch",
+         dict(mixed_precision=True, moe_ep_shard_map=True,
+              moe_ep_int8_payload=True), {}),
+    ],
+    ("gemma3-1b", "train_4k"): [
+        ("v1_bf16_compute", dict(mixed_precision=True), {}),
+        ("v2_block_local_attn",
+         dict(mixed_precision=True, attn_block_local=True), {}),
+    ],
+    ("qwen3-32b", "prefill_32k"): [
+        ("v1_flash_prefill", dict(attn_flash=True), {}),
+    ],
+    ("qwen3-32b", "decode_32k"): [
+        ("v0_native_dtype_attn", dict(), {}),
+        ("v1_kv_pad_tp", dict(kv_replicate_to=16), {}),
+        ("v1b_f8_cache_seqshard", dict(),
+         {"cache_dtype": "float8_e4m3fn"}),
+        ("v2_int4_weights", dict(kv_replicate_to=16),
+         {"serve_quant": "int4"}),
+        ("v3_f8_cache", dict(kv_replicate_to=16),
+         {"serve_quant": "int4", "cache_dtype": "float8_e4m3fn"}),
+    ],
+}
+
+
+def build_variant(arch, shape_name, mesh, cfg_overrides, options):
+    cfg = get_cfg(arch).replace(**cfg_overrides)
+    mod = family_module(cfg)
+    shape = SH.SHAPES[shape_name]
+    key = jax.random.PRNGKey(0)
+
+    if shape.kind == "train":
+        dp = dp_axes(mesh)
+        dp_total = int(np.prod([mesh.shape[a] for a in dp]))
+        n_micro = min(SH.TRAIN_MICROBATCHES.get(cfg.name, 8),
+                      max(shape.batch // dp_total, 1))
+        opt = adamw(constant(1e-4))
+        step = make_train_step(cfg, mod, opt, n_micro=n_micro, dp=dp)
+        state_shardings = state_shardings_for(cfg, mod, mesh, opt, key)
+        params_shape = jax.eval_shape(lambda k: mod.init_params(cfg, k), key)
+        opt_shape = jax.eval_shape(opt.init, params_shape)
+        state_spec = TrainState(params=params_shape, opt_state=opt_shape,
+                                step=jax.ShapeDtypeStruct((), jnp.int32))
+        batch = SH.batch_specs(cfg, shape)
+        bsh = jax.tree.map(
+            lambda x: NamedSharding(mesh, P(dp, *(None,) * (len(x.shape) - 1))),
+            batch)
+        return cfg, step, (state_shardings, bsh), (state_spec, batch), (0,)
+
+    # decode / prefill
+    params_shape = jax.eval_shape(lambda k: mod.init_params(cfg, k), key)
+    if options.get("serve_quant"):
+        params_shape = jax.eval_shape(
+            lambda p: quantize_params(p, options["serve_quant"]),
+            params_shape)
+    p_shardings = make_param_shardings(cfg, params_shape, mesh, "serve")
+    cache_dtype = jnp.dtype(options.get("cache_dtype", "bfloat16"))
+    cache_shape = jax.eval_shape(
+        lambda: mod.init_cache(cfg, shape.batch, shape.seq, cache_dtype))
+    kv_eff = cfg.kv_replicate_to or cfg.kv_heads
+    seq_shard = kv_eff and kv_eff % mesh.shape["model"] != 0
+    c_shardings = make_cache_shardings(cfg, cache_shape, mesh,
+                                       seq_shard=bool(seq_shard))
+    bp = dp_axes(mesh) if shape.batch % int(np.prod(
+        [mesh.shape[a] for a in dp_axes(mesh)])) == 0 else None
+
+    if shape.kind == "prefill":
+        toks = SH.prefill_token_specs(cfg, shape)
+        tok_sh = NamedSharding(mesh, P(bp, None))
+
+        def step(params, tokens, cache):
+            return mod.prefill(params, tokens, cfg, cache)
+
+        return cfg, step, (p_shardings, tok_sh, c_shardings), \
+            (params_shape, toks, cache_shape), (2,)
+
+    tok = SH.decode_token_specs(cfg, SH.SHAPES[shape_name])
+    tok_sh = NamedSharding(mesh, P(bp, None))
+
+    def step(params, token, cache):
+        return mod.decode_step(params, token, cfg, cache)
+
+    return cfg, step, (p_shardings, tok_sh, c_shardings), \
+        (params_shape, tok, cache_shape), (2,)
+
+
+def run_variant(arch, shape_name, vname, cfg_overrides, options,
+                multi_pod=False):
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    dp = dp_axes(mesh)
+    dp_total = int(np.prod([mesh.shape[a] for a in dp]))
+    result = {"arch": arch, "shape": shape_name, "variant": vname,
+              "overrides": {k: str(v) for k, v in cfg_overrides.items()},
+              "options": options}
+    t0 = time.time()
+    try:
+        with mesh, activation_sharding(dp, dp_total, mesh=mesh):
+            cfg, step, shardings, specs, donate = build_variant(
+                arch, shape_name, mesh, cfg_overrides, options)
+            ctx = compute_dtype(cfg.dtype if cfg.mixed_precision else None)
+            with ctx:
+                lowered = jax.jit(step, in_shardings=shardings,
+                                  donate_argnums=donate).lower(*specs)
+                compiled = lowered.compile()
+            mem = compiled.memory_analysis()
+            hlo = compiled.as_text()
+        import gzip
+        os.makedirs(RESULTS_DIR, exist_ok=True)
+        with gzip.open(os.path.join(
+                RESULTS_DIR,
+                f"{arch}__{shape_name}__{vname}.hlo.gz"), "wt") as f:
+            f.write(hlo)
+        ana = HA.analyze(hlo)
+        result.update(
+            status="ok", compile_s=round(time.time() - t0, 1),
+            flops=float(ana["flops"]), bytes_out=float(ana["bytes_out"]),
+            collectives=ana["collectives"],
+            memory={k: int(getattr(mem, k, 0)) for k in
+                    ("argument_size_in_bytes", "temp_size_in_bytes")},
+        )
+        print(f"[{arch} x {shape_name} x {vname}] OK "
+              f"flops={result['flops']:.3e} bytes={result['bytes_out']:.3e} "
+              f"coll={result['collectives']['total'] / 1e9:.2f}GB "
+              f"args={result['memory']['argument_size_in_bytes'] / 1e9:.2f}GB")
+    except Exception as e:  # noqa: BLE001
+        result["status"] = "error"
+        result["error"] = f"{type(e).__name__}: {e}"[:1500]
+        result["traceback"] = traceback.format_exc()[-3000:]
+        print(f"[{arch} x {shape_name} x {vname}] FAIL {result['error'][:200]}")
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    fn = f"{arch}__{shape_name}__{vname}.json"
+    json.dump(result, open(os.path.join(RESULTS_DIR, fn), "w"), indent=1)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", default=None,
+                    help="arch:shape (default: all three)")
+    ap.add_argument("--variant", default=None)
+    args = ap.parse_args()
+    ok = True
+    for (arch, shape), variants in CELLS.items():
+        if args.cell and args.cell != f"{arch}:{shape}":
+            continue
+        for vname, overrides, options in variants:
+            if args.variant and args.variant != vname:
+                continue
+            r = run_variant(arch, shape, vname, overrides, options)
+            ok = ok and r["status"] == "ok"
+    raise SystemExit(0 if ok else 1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,224 @@
+"""Per-architecture sharding rules (DP / FSDP / TP / EP / sequence).
+
+Training params use the FSDP+TP layout: the TP dimension (attention heads,
+FFN hidden, vocab) shards over `model`, and the other large dimension
+shards over `data` (FSDP storage sharding, all-gathered per layer by XLA)
+— required so 72B params + AdamW state fit 16 GB/chip HBM.  Serving params
+shard over `model` only (replicated across `data`, which carries the
+request batch).
+
+Head-granularity rule: attention projections TP-shard only when the head
+count divides the model-axis size; otherwise they stay replicated on that
+dim (gemma3-1b 4H, smollm 9H, and kv<16 GQA archs) — the rest of the net
+still TP-shards.  MoE experts shard over `model` (expert parallelism).
+
+Long-context caches: when kv_heads doesn't divide the model axis, the KV
+cache shards over the SEQUENCE dim instead — XLA turns the softmax
+reduction into an all-reduce over the seq-sharded axis (the flash-decode
+LSE-combine pattern, emitted by SPMD propagation).
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import dp_axes
+
+
+def _fsdp_axis(mesh):
+    return "data"
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                    for p in path)
+
+
+def _div(n: int, mesh, axis) -> bool:
+    return axis in mesh.shape and n % mesh.shape[axis] == 0
+
+
+def param_spec(cfg, mesh, path: str, shape, mode: str = "train") -> P:
+    """PartitionSpec for one parameter leaf."""
+    m = "model"
+    d = _fsdp_axis(mesh) if mode == "train" else None
+    # packed serving weights: codes shard like the parent weight (packing
+    # is along the reduction dim and preserves our divisibilities);
+    # per-channel scales stay replicated (small)
+    if "/scale" in path and re.search(r"/scale$", path):
+        return P(*(None,) * len(shape))
+    if "codes__" in path:
+        path = re.sub(r"/codes__\w+$", "", path)
+    rank = len(shape)
+
+    def ax(axis, dim):
+        """axis if that mesh axis divides shape[dim], else None."""
+        if axis is None:
+            return None
+        return axis if _div(shape[dim], mesh, axis) else None
+
+    none = (None,) * rank
+
+    # ---- embeddings -------------------------------------------------------
+    if re.search(r"(embed|tok_embed)$", path):
+        return P(ax(m, 0), ax(d, 1))
+    if re.search(r"pos_embed$", path):
+        return P(None, ax(d, 1))
+    if re.search(r"lm_head$", path):
+        return P(ax(d, 0), ax(m, 1))
+
+    # ---- MoE ---------------------------------------------------------------
+    if "experts/" in path:
+        # (L, E, d, f) up/gate; (L, E, f, d) down — EP over model on E
+        if rank == 4:
+            if path.endswith("w_down"):
+                return P(None, ax(m, 1), None, ax(d, 3))
+            return P(None, ax(m, 1), ax(d, 2), None)
+        return P(*none)
+    if path.endswith("router"):
+        return P(None, ax(d, 1), None) if rank == 3 else P(ax(d, 0), None)
+
+    # ---- attention -----------------------------------------------------------
+    is_stacked = rank == 3  # (L, in, out)
+    i, o = (1, 2) if is_stacked else (0, 1)
+    tp_q = _div(cfg.n_heads, mesh, "model") if cfg.n_heads else False
+    tp_kv = _div(cfg.kv_heads, mesh, "model") if cfg.kv_heads else False
+    lead = (None,) if is_stacked else ()
+    if re.search(r"(attn|self_attn|cross_attn)/wq$", path):
+        return P(*lead, ax(d, i), m if tp_q else None)
+    if re.search(r"(attn|self_attn|cross_attn)/w[kv]$", path):
+        return P(*lead, ax(d, i), m if tp_kv else None)
+    if re.search(r"(attn|self_attn|cross_attn)/wo$", path):
+        return P(*lead, m if tp_q else None, ax(d, o))
+
+    # ---- RWKV time/channel mix ------------------------------------------------
+    if re.search(r"tm/w[rkvg]$", path):
+        return P(*lead, ax(d, i), ax(m, o))
+    if re.search(r"tm/(wo)$", path):
+        return P(*lead, ax(m, i), ax(d, o))
+    if re.search(r"tm/wa$", path):
+        return P(*lead, ax(d, i), None)
+    if re.search(r"tm/wb$", path):
+        return P(*lead, None, ax(d, o))
+    if re.search(r"cm/wk$", path):
+        return P(*lead, ax(d, i), ax(m, o))
+    if re.search(r"cm/(wv)$", path):
+        return P(*lead, ax(m, i), ax(d, o))
+    if re.search(r"cm/wr$", path):
+        return P(*lead, ax(d, i), ax(m, o))
+
+    # ---- Mamba ------------------------------------------------------------------
+    if path.endswith("in_proj"):
+        return P(*((None,) * (rank - 2)), ax(d, rank - 2), ax(m, rank - 1))
+    if path.endswith("out_proj"):
+        return P(*((None,) * (rank - 2)), ax(m, rank - 2), ax(d, rank - 1))
+    if path.endswith("conv_w"):
+        return P(*((None,) * (rank - 1)), ax(m, rank - 1))
+    if path.endswith("conv_b") or path.endswith("norm"):
+        return P(*((None,) * (rank - 1)), ax(m, rank - 1))
+
+    # ---- generic MLP ---------------------------------------------------------
+    if re.search(r"(w_up|w_gate)$", path):
+        return P(*((None,) * (rank - 2)), ax(d, rank - 2), ax(m, rank - 1))
+    if re.search(r"w_down$", path):
+        return P(*((None,) * (rank - 2)), ax(m, rank - 2), ax(d, rank - 1))
+    if re.search(r"fc\d?$", path) and rank == 2:
+        return P(ax(d, 0), ax(m, 1))
+
+    # ---- everything else (norm scales, biases, mu, u, ...) -> replicated ----
+    return P(*none)
+
+
+def make_param_specs(cfg, params_shape, mesh, mode: str = "train"):
+    """Pytree of PartitionSpec matching a params shape-pytree."""
+    def f(path, leaf):
+        return param_spec(cfg, mesh, _path_str(path), leaf.shape, mode)
+
+    return jax.tree_util.tree_map_with_path(f, params_shape)
+
+
+def make_param_shardings(cfg, params_shape, mesh, mode: str = "train"):
+    specs = make_param_specs(cfg, params_shape, mesh, mode)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs)
+
+
+# ---------------------------------------------------------------------------
+# batch / cache specs
+# ---------------------------------------------------------------------------
+
+def batch_spec(cfg, mesh, kind: str = "train") -> Any:
+    """PartitionSpecs for an input batch dict (by key)."""
+    dp = dp_axes(mesh)
+
+    def leaf_spec(key: str, ndim: int):
+        return P(dp, *(None,) * (ndim - 1))
+
+    return leaf_spec
+
+
+def make_batch_shardings(batch_shape, cfg, mesh):
+    dp = dp_axes(mesh)
+
+    def f(path, leaf):
+        return NamedSharding(mesh, P(dp, *(None,) * (len(leaf.shape) - 1)))
+
+    return jax.tree_util.tree_map_with_path(f, batch_shape)
+
+
+def cache_spec(cfg, mesh, path: str, shape, seq_shard: bool = False) -> P:
+    """KV-cache / SSM-state sharding.
+
+    KV tensors are (..., B, S, Hkv, Dh): batch over dp; heads over model if
+    divisible, else (for long-context) the SEQUENCE dim over model.
+    SSM states (..., B, H, dk, dv): heads over model when divisible.
+    """
+    dp = dp_axes(mesh)
+    dp_total = 1
+    for a in dp:
+        dp_total *= mesh.shape[a]
+    rank = len(shape)
+    if path.endswith("index"):
+        return P(*(None,) * rank)
+    if rank >= 4 and (re.search(r"(^|/)k$", path)
+                  or re.search(r"(^|/)v$", path)):
+        b_dim = rank - 4
+        lead = (None,) * b_dim
+        heads = shape[rank - 2]
+        bp = dp if shape[b_dim] % dp_total == 0 else None
+        if heads % mesh.shape["model"] == 0 and not seq_shard:
+            return P(*lead, bp, None, "model", None)
+        if seq_shard:
+            # batch=1 long-context: fold the idle data axis into the
+            # sequence sharding so huge caches fit per-chip HBM
+            seq_ax = "model" if bp is not None else ("data", "model")
+            return P(*lead, bp, seq_ax, None, None)
+        return P(*lead, bp, None, None, None)
+    if re.search(r"(^|/)s$", path) and rank >= 4:          # SSM state (..B,H,dk,dv)
+        lead = (None,) * (rank - 4)
+        h = shape[rank - 3]
+        hs = "model" if h % mesh.shape["model"] == 0 else None
+        bp = dp if shape[rank - 4] % dp_total == 0 else None
+        return P(*lead, bp, hs, None, None)
+    if re.search(r"(tm_last|cm_last)$", path) and rank >= 2:
+        # (..., B, D): batch over dp
+        bp = dp if shape[rank - 2] % dp_total == 0 else None
+        return P(*(None,) * (rank - 2), bp, None)
+    if path.endswith("conv") and rank >= 3:        # (..., B, W-1, C)
+        c = shape[-1]
+        cs = "model" if c % mesh.shape["model"] == 0 else None
+        bp = dp if shape[rank - 3] % dp_total == 0 else None
+        return P(*(None,) * (rank - 3), bp, None, cs)
+    return P(*(None,) * rank)
+
+
+def make_cache_shardings(cfg, cache_shape, mesh, seq_shard: bool = False):
+    def f(path, leaf):
+        return NamedSharding(
+            mesh, cache_spec(cfg, mesh, _path_str(path), leaf.shape,
+                             seq_shard))
+
+    return jax.tree_util.tree_map_with_path(f, cache_shape)

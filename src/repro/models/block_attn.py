@@ -1,0 +1,66 @@
+"""Exact block-banded attention for sliding-window (local) layers.
+
+A local layer with window W only needs keys within the last W positions.
+The baseline computes the full S x S score matrix and masks — wasteful in
+both FLOPs and the S^2 logits buffer (and, under TP with non-shardable
+heads, XLA all-reduces that buffer; see EXPERIMENTS.md §Perf/gemma3).
+
+This path reshapes the sequence into blocks of size BS >= W and lets each
+query block attend to (previous block, own block) — exact for W <= BS
+because any key within W of a query lies in those two blocks.  Cost drops
+from S*S to S*2*BS, and the logits buffer from (S, S) to (S, 2*BS).
+
+Used for train/prefill (no cache); decode reads the cache directly.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def block_local_attention(q, k, v, positions, window: int, softcap: float,
+                          query_scale: float):
+    """q: (B, S, Hkv, G, Dh); k, v: (B, S, Hkv, Dh); positions: (B, S).
+
+    Returns (B, S, Hkv, G, Dh). Exact == masked full attention with a
+    causal sliding window of `window`, provided S % BS == 0.
+    """
+    b, s, hkv, g, dh = q.shape
+    bs = max(window, 128)
+    while s % bs != 0:  # fall back to next divisor-friendly size
+        bs //= 2
+        if bs < 16:
+            bs = s
+            break
+    nb = s // bs
+    f32 = jnp.float32
+    scale = query_scale or (1.0 / float(np.sqrt(dh)))
+
+    qb = q.astype(f32).reshape(b, nb, bs, hkv, g, dh)
+    kb = k.astype(f32).reshape(b, nb, bs, hkv, dh)
+    vb = v.astype(f32).reshape(b, nb, bs, hkv, dh)
+    pb = positions.reshape(b, nb, bs)
+
+    # previous block (zeros + -inf masking for block 0)
+    prev = jnp.concatenate([jnp.zeros_like(kb[:, :1]), kb[:, :-1]], axis=1)
+    prev_v = jnp.concatenate([jnp.zeros_like(vb[:, :1]), vb[:, :-1]], axis=1)
+    prev_p = jnp.concatenate([jnp.full_like(pb[:, :1], -10 ** 9),
+                              pb[:, :-1]], axis=1)
+
+    k2 = jnp.concatenate([prev, kb], axis=2)        # (B, nb, 2BS, Hkv, Dh)
+    v2 = jnp.concatenate([prev_v, vb], axis=2)
+    p2 = jnp.concatenate([prev_p, pb], axis=2)      # (B, nb, 2BS)
+
+    logits = jnp.einsum("bnqhgd,bnkhd->bnhgqk", qb, k2) * scale
+    if softcap > 0.0:
+        logits = softcap * jnp.tanh(logits / softcap)
+    qp = pb[:, :, None, None, :, None]
+    kp = p2[:, :, None, None, None, :]
+    ok = (kp <= qp) & (kp > qp - window)
+    logits = jnp.where(ok, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    # fully-masked rows (none possible here: own position always visible)
+    out = jnp.einsum("bnhgqk,bnkhd->bnqhgd", probs, v2)
+    return out.reshape(b, s, hkv, g, dh).astype(q.dtype)

@@ -1,0 +1,147 @@
+"""The paper's CNNs (VGG-16, ResNet-20/34/50/56) in JAX with quant hooks.
+
+Used for the paper-faithful QAT Pareto experiments (Figs. 5-6): the same
+model trains under each PE type's numerics and the accuracy lands on the
+accuracy x hardware-efficiency Pareto plots.
+
+Deviation (documented): GroupNorm instead of BatchNorm so the forward pass
+stays stateless/pure (no running statistics to thread through pjit).  At
+CIFAR scale this does not change the relative PE-type orderings the paper
+reports.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant.fake_quant import fake_quant_act, fake_quant_weight
+from repro.quant.qconfig import QuantConfig, preset
+
+Params = Dict[str, Any]
+
+
+def conv_init(key, c_in, c_out, k=3, dtype=jnp.float32):
+    scale = 1.0 / jnp.sqrt(jnp.asarray(c_in * k * k, jnp.float32))
+    return (jax.random.normal(key, (k, k, c_in, c_out), jnp.float32)
+            * scale).astype(dtype)
+
+
+def qconv(x, w, qcfg: QuantConfig, stride=1):
+    """NHWC conv with QAT fake-quant on weights + activations."""
+    if not qcfg.is_identity:
+        w = fake_quant_weight(w, qcfg)
+        x = fake_quant_act(x, qcfg)
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def groupnorm(x, scale, bias, groups=8, eps=1e-5):
+    b, h, w, c = x.shape
+    g = min(groups, c)
+    xg = x.reshape(b, h, w, g, c // g).astype(jnp.float32)
+    mu = jnp.mean(xg, axis=(1, 2, 4), keepdims=True)
+    var = jnp.var(xg, axis=(1, 2, 4), keepdims=True)
+    xg = (xg - mu) * jax.lax.rsqrt(var + eps)
+    return (xg.reshape(b, h, w, c) * scale + bias).astype(x.dtype)
+
+
+def _gn_init(c, dtype):
+    return {"scale": jnp.ones((c,), dtype), "bias": jnp.zeros((c,), dtype)}
+
+
+# ---------------------------------------------------------------------------
+# ResNet for CIFAR (He et al.): depth = 6n + 2
+# ---------------------------------------------------------------------------
+
+def resnet_init(key, depth=20, n_classes=10, dtype=jnp.float32) -> Params:
+    n = (depth - 2) // 6
+    keys = iter(jax.random.split(key, 200))
+    p: Params = {"stem": conv_init(next(keys), 3, 16, 3, dtype),
+                 "stem_gn": _gn_init(16, dtype), "blocks": []}
+    c = 16
+    for stage, k in enumerate((16, 32, 64)):
+        for b in range(n):
+            s = 2 if (stage > 0 and b == 0) else 1
+            blk = {"c1": conv_init(next(keys), c, k, 3, dtype),
+                   "gn1": _gn_init(k, dtype),
+                   "c2": conv_init(next(keys), k, k, 3, dtype),
+                   "gn2": _gn_init(k, dtype)}
+            # stride is structural: exactly the shortcut blocks downsample
+            if s != 1 or c != k:
+                blk["sc"] = conv_init(next(keys), c, k, 1, dtype)
+            p["blocks"].append(blk)
+            c = k
+    p["fc"] = (jax.random.normal(next(keys), (64, n_classes), jnp.float32)
+               * 0.01).astype(dtype)
+    return p
+
+
+def resnet_apply(p: Params, x, pe_type: str = "fp32"):
+    qcfg = preset(pe_type)
+    x = qconv(x, p["stem"], qcfg)
+    x = jax.nn.relu(groupnorm(x, p["stem_gn"]["scale"], p["stem_gn"]["bias"]))
+    for blk in p["blocks"]:
+        # downsampling blocks are exactly those with a shortcut conv whose
+        # in/out channel counts differ-or-stride (CIFAR ResNet: sc <=> s=2)
+        s = 2 if "sc" in blk else 1
+        h = qconv(x, blk["c1"], qcfg, s)
+        h = jax.nn.relu(groupnorm(h, blk["gn1"]["scale"], blk["gn1"]["bias"]))
+        h = qconv(h, blk["c2"], qcfg)
+        h = groupnorm(h, blk["gn2"]["scale"], blk["gn2"]["bias"])
+        sc = qconv(x, blk["sc"], qcfg, s) if "sc" in blk else x
+        x = jax.nn.relu(h + sc)
+    x = jnp.mean(x, axis=(1, 2))
+    return x @ p["fc"]
+
+
+# ---------------------------------------------------------------------------
+# VGG-16 for CIFAR
+# ---------------------------------------------------------------------------
+
+VGG_CFG = [(64, 2), (128, 2), (256, 3), (512, 3), (512, 3)]
+
+
+def vgg16_init(key, n_classes=10, dtype=jnp.float32) -> Params:
+    keys = iter(jax.random.split(key, 40))
+    p: Params = {"convs": [], "gns": []}
+    c = 3
+    for k, reps in VGG_CFG:
+        for _ in range(reps):
+            p["convs"].append(conv_init(next(keys), c, k, 3, dtype))
+            p["gns"].append(_gn_init(k, dtype))
+            c = k
+    p["fc1"] = (jax.random.normal(next(keys), (512, 512), jnp.float32)
+                * 0.02).astype(dtype)
+    p["fc2"] = (jax.random.normal(next(keys), (512, n_classes), jnp.float32)
+                * 0.02).astype(dtype)
+    return p
+
+
+def vgg16_apply(p: Params, x, pe_type: str = "fp32"):
+    qcfg = preset(pe_type)
+    i = 0
+    for k, reps in VGG_CFG:
+        for _ in range(reps):
+            x = qconv(x, p["convs"][i], qcfg)
+            x = jax.nn.relu(groupnorm(x, p["gns"][i]["scale"],
+                                      p["gns"][i]["bias"]))
+            i += 1
+        x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                  (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+    x = jnp.mean(x, axis=(1, 2))
+    x = jax.nn.relu(x @ p["fc1"])
+    return x @ p["fc2"]
+
+
+def cnn_loss(apply_fn, params, batch, pe_type):
+    logits = apply_fn(params, batch["images"], pe_type).astype(jnp.float32)
+    labels = batch["labels"]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    loss = jnp.mean(logz - gold)
+    acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+    return loss, acc

@@ -1,0 +1,74 @@
+"""Chunked online-softmax ("flash") attention — prefill memory fix.
+
+The dry-run found that 32k prefill on full-attention archs materializes
+f32 (S, S) logits (tens of GB/device — EXPERIMENTS.md §Dry-run caveats).
+This path never materializes more than an (Sq, BLOCK_K) tile: a scan over
+KV blocks carries the running max m, normalizer l, and output accumulator
+(the standard flash-attention recurrence), so prefill activation memory
+drops from O(S^2) to O(S * BLOCK_K).
+
+Used for forward-only paths (serve prefill) via ArchConfig.attn_flash;
+training keeps the baseline (the scan carry would otherwise be saved per
+block for the backward pass — a flash *backward* is the natural follow-up
+Pallas kernel).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+DEFAULT_BLOCK_K = 1024
+
+
+def flash_attention(q, k, v, q_positions, kv_positions, window: int,
+                    softcap: float, query_scale: float,
+                    block_k: int = DEFAULT_BLOCK_K):
+    """q: (B, Sq, Hkv, G, Dh); k, v: (B, Skv, Hkv, Dh).
+
+    positions: (B, Sq) / (B, Skv) absolute indices (causal + window masks).
+    Exact == masked full attention with -1e30 fill.
+    """
+    b, sq, hkv, g, dh = q.shape
+    skv = k.shape[1]
+    while skv % block_k != 0:
+        block_k //= 2
+    block_k = max(block_k, 1)
+    nk = skv // block_k
+    f32 = jnp.float32
+    scale = query_scale or (1.0 / float(np.sqrt(dh)))
+
+    qf = q.astype(f32) * scale
+    kb = k.astype(f32).reshape(b, nk, block_k, hkv, dh) \
+        .transpose(1, 0, 3, 2, 4)                     # (nk, B, H, bk, Dh)
+    vb = v.astype(f32).reshape(b, nk, block_k, hkv, dh) \
+        .transpose(1, 0, 3, 2, 4)
+    pb = kv_positions.reshape(b, nk, block_k).transpose(1, 0, 2)
+
+    qp = q_positions[:, None, None, :, None]          # (B,1,1,Sq,1)
+
+    def body(carry, xs):
+        m, l, acc = carry                              # (B,H,G,Sq[,Dh])
+        kc, vc, pc = xs
+        logits = jnp.einsum("bqhgd,bhkd->bhgqk", qf, kc)
+        if softcap > 0.0:
+            logits = softcap * jnp.tanh(logits / softcap)
+        kp = pc[:, None, None, None, :]                # (B,1,1,1,bk)
+        ok = (kp <= qp) & (kp > qp - window)
+        logits = jnp.where(ok, logits, -1e30)
+
+        m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(logits - m_new[..., None])
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[..., None] + \
+            jnp.einsum("bhgqk,bhkd->bhgqd", p, vc)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, hkv, g, sq), -jnp.inf, f32)
+    l0 = jnp.zeros((b, hkv, g, sq), f32)
+    acc0 = jnp.zeros((b, hkv, g, sq, dh), f32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, acc0), (kb, vb, pb))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]       # (B,H,G,Sq,Dh)
+    return out.transpose(0, 3, 1, 2, 4).astype(q.dtype)

@@ -1,0 +1,196 @@
+"""Zamba2-style hybrid: Mamba2 backbone + periodically-applied SHARED
+attention blocks (two alternating shared-parameter sets).
+
+Layout (documented adaptation, DESIGN.md §Arch-applicability): n_layers
+Mamba2 blocks; after every `shared_attn_every`-th block one of
+`n_shared_blocks` shared transformer blocks (full attention + MLP) is
+applied round-robin.  Shared blocks are selected inside the group scan
+with a parity tree-select, so the scan body stays homogeneous and the
+shared weights appear ONCE in the compiled module.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import mamba as M
+from repro.quant.qconfig import preset
+
+Params = Dict[str, Any]
+
+
+def _group_shape(cfg):
+    period = cfg.shared_attn_every
+    n_groups = cfg.n_layers // period
+    tail = cfg.n_layers - n_groups * period
+    return period, n_groups, tail
+
+
+def _attn_spec(cfg):
+    return L.AttnSpec(n_heads=cfg.n_heads, kv_heads=cfg.kv_heads,
+                      head_dim=cfg.head_dim, causal=True,
+                      rope_theta=cfg.rope_theta)
+
+
+def _shared_block_init(key, cfg, dtype):
+    k1, k2 = jax.random.split(key)
+    return {"attn": L.attn_init(k1, cfg.d_model, _attn_spec(cfg), dtype),
+            "mlp": L.mlp_init(k2, cfg.d_model, cfg.d_ff, True, dtype),
+            "ln1": jnp.ones((cfg.d_model,), dtype),
+            "ln2": jnp.ones((cfg.d_model,), dtype)}
+
+
+def init_params(cfg, key) -> Params:
+    dtype = jnp.float32
+    period, n_groups, tail = _group_shape(cfg)
+    ke, kg, kt, ks, kh = jax.random.split(key, 5)
+    vp = cfg.padded_vocab
+
+    def one_mamba(k):
+        k1, k2 = jax.random.split(k)
+        return {"mamba": M.mamba_init(k1, cfg, dtype),
+                "ln": jnp.ones((cfg.d_model,), dtype)}
+
+    def group(k):
+        return jax.vmap(one_mamba)(jax.random.split(k, period))
+
+    p = {
+        "embed": L.embed_init(ke, vp, cfg.d_model, dtype),
+        "groups": jax.vmap(group)(jax.random.split(kg, n_groups)),
+        "shared": [_shared_block_init(k, cfg, dtype)
+                   for k in jax.random.split(ks, cfg.n_shared_blocks)],
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+        "lm_head": L.dense_init(kh, cfg.d_model, vp, dtype),
+    }
+    if tail:
+        p["tail"] = jax.vmap(one_mamba)(jax.random.split(kt, tail))
+    return p
+
+
+def _select_shared(params, gidx, n_shared):
+    """Round-robin tree-select of the shared block inside the scan."""
+    if n_shared == 1:
+        return params["shared"][0]
+    sel = gidx % n_shared
+    return jax.tree.map(
+        lambda *leaves: jnp.select([sel == i for i in range(n_shared)],
+                                   list(leaves)),
+        *params["shared"])
+
+
+def _mamba_layer(p, x, cfg, qcfg, state=None, chunk=16):
+    x = L.shard_batch(x)
+    h = L.rmsnorm(x, p["ln"])
+    out, new_state = M.mamba_apply(p["mamba"], h, cfg, qcfg, state, chunk)
+    return x + out.astype(x.dtype), new_state
+
+
+def _shared_layer(p, x, cfg, qcfg, positions, cache=None):
+    x = L.shard_batch(x)
+    h = L.rmsnorm(x, p["ln1"])
+    att, new_cache = L.attention(p["attn"], h, _attn_spec(cfg), qcfg,
+                                 positions, cache)
+    x = x + att.astype(x.dtype)
+    h = L.rmsnorm(x, p["ln2"])
+    return x + L.mlp(p["mlp"], h, qcfg, cfg.act).astype(x.dtype), new_cache
+
+
+def _backbone(params, x, cfg, positions, caches=None, chunk=16):
+    qcfg = preset(cfg.pe_type)
+    period, n_groups, tail = _group_shape(cfg)
+
+    def group_body(carry, xs):
+        h = carry
+        gp, gidx, g_caches = xs
+        m_states = None if caches is None else g_caches["mamba"]
+
+        def inner(hc, ixs):
+            lp, st = ixs
+            hc, st = _mamba_layer(lp, hc, cfg, qcfg, st, chunk)
+            return hc, st
+
+        h, new_m = jax.lax.scan(inner, h, (gp, m_states))
+        shared = _select_shared(params, gidx, cfg.n_shared_blocks)
+        kv = None if caches is None else g_caches["kv"]
+        h, new_kv = _shared_layer(shared, h, cfg, qcfg, positions, kv)
+        new_caches = None if caches is None else {"mamba": new_m, "kv": new_kv}
+        return h, new_caches
+
+    gidx = jnp.arange(n_groups)
+    g_caches = None if caches is None else caches["groups"]
+    xs = (params["groups"], gidx, g_caches)
+    body = group_body if caches is not None else jax.checkpoint(group_body)
+    x, new_g = jax.lax.scan(body, x, xs)
+
+    new_tail = None
+    if tail:
+        def inner_t(hc, ixs):
+            lp, st = ixs
+            hc, st = _mamba_layer(lp, hc, cfg, qcfg, st, chunk)
+            return hc, st
+        t_states = None if caches is None else caches["tail"]
+        x, new_tail = jax.lax.scan(inner_t, x, (params["tail"], t_states))
+
+    new_caches = None
+    if caches is not None:
+        new_caches = {"groups": new_g, "tail": new_tail}
+    return x, new_caches
+
+
+def forward(params, tokens, cfg, positions=None):
+    b, s = tokens.shape[:2]
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None],
+                                     (b, s))
+    x = params["embed"][tokens].astype(jnp.dtype(cfg.dtype))
+    x, _ = _backbone(params, x, cfg, positions)
+    x = L.rmsnorm(x, params["final_norm"])
+    return L.qdense(x, params["lm_head"], preset(cfg.pe_type))
+
+
+def loss_fn(params, batch, cfg):
+    logits = forward(params, batch["tokens"], cfg)
+    return L.softmax_xent(logits, batch["labels"])
+
+
+def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    period, n_groups, tail = _group_shape(cfg)
+    spec = _attn_spec(cfg)
+
+    def one_group(_):
+        return {
+            "mamba": jax.vmap(lambda __: M.init_state(cfg, batch))(
+                jnp.arange(period)),
+            "kv": L.make_cache(batch, max_len, spec, dtype),
+        }
+
+    caches = {"groups": jax.vmap(one_group)(jnp.arange(n_groups))}
+    caches["tail"] = (jax.vmap(lambda _: M.init_state(cfg, batch))(
+        jnp.arange(tail)) if tail else None)
+    return caches
+
+
+def prefill(params, tokens, cfg, cache, positions=None):
+    b, s = tokens.shape[:2]
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None],
+                                     (b, s))
+    x = params["embed"][tokens].astype(jnp.dtype(cfg.dtype))
+    x, cache = _backbone(params, x, cfg, positions, cache)
+    x = L.rmsnorm(x[:, -1:], params["final_norm"])
+    return L.qdense(x, params["lm_head"], preset(cfg.pe_type)), cache
+
+
+def decode_step(params, token, cfg, cache, positions=None):
+    b = token.shape[0]
+    if positions is None:
+        idx = cache["groups"]["kv"]["index"][0]
+        positions = jnp.full((b, 1), idx.astype(jnp.int32), jnp.int32)
+    x = params["embed"][token].astype(jnp.dtype(cfg.dtype))
+    x, cache = _backbone(params, x, cfg, positions, cache)
+    x = L.rmsnorm(x, params["final_norm"])
+    return L.qdense(x, params["lm_head"], preset(cfg.pe_type)), cache

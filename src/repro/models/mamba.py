@@ -1,0 +1,118 @@
+"""Mamba2 block (SSD form) — the zamba2 backbone.
+
+Structure per block: in_proj -> [z | x | B | C | dt], causal depthwise
+conv (width 4) over [x|B|C], per-head scalar decay a_t = exp(-exp(A_log) *
+softplus(dt + bias)), SSD state update
+
+    S_t = a_t S_{t-1} + dt_t * B_t ⊗ x_t        (state: (H, d_state, hd))
+    y_t = C_t . S_t + D ⊙ x_t
+
+run through the shared chunked machinery (mamba mode: r pre-scaled by a,
+u = 1 — see ssm_common.py), then gated RMSNorm and out_proj.  Decode is a
+single-step state update with a rolling conv window.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+from repro.models import ssm_common as SSM
+
+Params = Dict[str, Any]
+
+CONV_W = 4
+EXPAND = 2
+
+
+def dims(cfg):
+    d_in = EXPAND * cfg.d_model
+    headdim = 64
+    n_heads = d_in // headdim
+    return d_in, headdim, n_heads, cfg.ssm_state
+
+
+def mamba_init(key, cfg, dtype=jnp.float32) -> Params:
+    d = cfg.d_model
+    d_in, hd, nh, ds = dims(cfg)
+    conv_ch = d_in + 2 * ds
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "in_proj": L.dense_init(k1, d, 2 * d_in + 2 * ds + nh, dtype),
+        "conv_w": (jax.random.normal(k3, (CONV_W, conv_ch), jnp.float32)
+                   * 0.2).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "a_log": jnp.asarray(np.log(np.linspace(1.0, 16.0, nh)), dtype),
+        "dt_bias": jnp.zeros((nh,), dtype),
+        "d_skip": jnp.ones((nh,), dtype),
+        "norm": jnp.ones((d_in,), dtype),
+        "out_proj": L.dense_init(k2, d_in, d, dtype),
+    }
+
+
+def _causal_conv(x, w, b, carry=None):
+    """Depthwise causal conv. x: (B, S, C); w: (W, C). carry: (B, W-1, C)."""
+    pad = (jnp.zeros((x.shape[0], CONV_W - 1, x.shape[-1]), x.dtype)
+           if carry is None else carry)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(CONV_W)) + b
+    new_carry = xp[:, -(CONV_W - 1):]
+    return jax.nn.silu(out), new_carry
+
+
+def mamba_apply(p: Params, x, cfg, qcfg, state=None, chunk=16):
+    """x: (B, S, D). state: None or {"s": (B,H,ds,hd), "conv": (B,W-1,C)}.
+    Returns (out, new_state)."""
+    b, s, d = x.shape
+    d_in, hd, nh, ds = dims(cfg)
+
+    zxbcdt = L.qdense(x, p["in_proj"], qcfg)
+    z, xc, bc, cc, dt = jnp.split(
+        zxbcdt, [d_in, 2 * d_in, 2 * d_in + ds, 2 * d_in + 2 * ds], axis=-1)
+
+    conv_in = jnp.concatenate([xc, bc, cc], axis=-1)
+    conv_carry = None if state is None else state["conv"]
+    conv_out, new_conv = _causal_conv(conv_in, p["conv_w"], p["conv_b"],
+                                      conv_carry)
+    xc, bc, cc = jnp.split(conv_out, [d_in, d_in + ds], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    a = jnp.exp(p["a_log"].astype(jnp.float32))                  # (H,)
+    log_decay = -a[None, None, :] * dt                           # (B,S,H)
+
+    v = xc.reshape(b, s, nh, hd)
+    # B/C shared across heads (n_groups=1); dt folded into k.
+    k = jnp.broadcast_to(bc[:, :, None, :], (b, s, nh, ds)) \
+        * dt[..., None].astype(bc.dtype)
+    r = jnp.broadcast_to(cc[:, :, None, :], (b, s, nh, ds))
+    # mamba mode: decay applies before use -> pre-scale r by a_t, u = 1
+    r = r * jnp.exp(log_decay)[..., None].astype(r.dtype)
+    lw = jnp.broadcast_to(log_decay[..., None], (b, s, nh, ds))
+
+    s_in = None if state is None else state["s"]
+    if s == 1 and state is not None:
+        o, s_out = SSM.single_step(r[:, 0], k[:, 0], v[:, 0], lw[:, 0],
+                                   None, s_in)
+        o = o[:, None]
+    else:
+        o, s_out = SSM.chunked_linear_attention(r, k, v, lw, None,
+                                                chunk=chunk,
+                                                initial_state=s_in)
+    o = o + v * p["d_skip"][None, None, :, None]
+    o = o.reshape(b, s, d_in)
+    o = L.rmsnorm(o * jax.nn.silu(z), p["norm"])
+    out = L.qdense(o.astype(x.dtype), p["out_proj"], qcfg)
+    new_state = None
+    if state is not None:
+        new_state = {"s": s_out, "conv": new_conv}
+    return out, new_state
+
+
+def init_state(cfg, batch: int, dtype=jnp.float32):
+    d_in, hd, nh, ds = dims(cfg)
+    return {"s": jnp.zeros((batch, nh, ds, hd), jnp.float32),
+            "conv": jnp.zeros((batch, CONV_W - 1, d_in + 2 * ds), dtype)}

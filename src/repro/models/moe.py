@@ -1,0 +1,216 @@
+"""Mixture-of-Experts layer: top-k routing with sort-based dispatch.
+
+Production-style (MaxText/Megablocks-flavored) token dispatch:
+
+  1. router logits -> softmax -> top-k experts per token (renormalized),
+  2. flatten (token, slot) assignments, stable-sort by expert id,
+  3. position-in-expert via run-start offsets (searchsorted on the sorted
+     expert ids) — tokens beyond the static capacity C are dropped,
+  4. scatter into an (E, C, d) buffer, vmapped expert FFN, gather-combine.
+
+Cost is linear in tokens (no T x E x C dispatch einsum).  Capacity
+C = ceil(T * topk * capacity_factor / E) is static, so the whole layer is
+scan/jit friendly.  Under pjit, expert weights and the (E, C, d) buffers
+shard over the `model` axis (expert parallelism); the scatter/gather pair
+is where XLA emits the dispatch collectives.
+
+DeepSeekMoE extras: `moe_shared` always-on shared experts are fused into
+one MLP of width moe_shared * moe_d_ff applied to every token and summed
+with the routed output.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.quant.qconfig import QuantConfig
+
+Params = Dict[str, Any]
+
+
+def moe_init(key, cfg, dtype=jnp.float32) -> Params:
+    e, d, f = cfg.moe_experts, cfg.d_model, cfg.moe_d_ff
+    kr, ke, ks = jax.random.split(key, 3)
+
+    def one_expert(k):
+        return L.mlp_init(k, d, f, gated=True, dtype=dtype)
+
+    p: Params = {
+        "router": L.dense_init(kr, d, e, dtype),
+        "experts": jax.vmap(one_expert)(jax.random.split(ke, e)),
+    }
+    if cfg.moe_shared:
+        p["shared"] = L.mlp_init(ks, d, cfg.moe_shared * f, gated=True,
+                                 dtype=dtype)
+    return p
+
+
+def _expert_ffn(expert_params: Params, x: jnp.ndarray, qcfg: QuantConfig,
+                act: str) -> jnp.ndarray:
+    """x: (C, d) tokens for ONE expert."""
+    return L.mlp(expert_params, x, qcfg, act)
+
+
+def capacity(tokens: int, cfg) -> int:
+    return max(8, int(math.ceil(tokens * cfg.moe_topk * cfg.capacity_factor
+                                / cfg.moe_experts)))
+
+
+def moe_apply(p: Params, x: jnp.ndarray, cfg, qcfg: QuantConfig) -> jnp.ndarray:
+    """x: (B, S, d) -> (B, S, d)."""
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.moe_experts, cfg.moe_topk
+    c = capacity(t, cfg)
+    xf = x.reshape(t, d)
+
+    # --- routing ----------------------------------------------------------
+    logits = (xf.astype(jnp.float32) @ p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                  # (T, E)
+    top_w, top_ids = jax.lax.top_k(probs, k)                 # (T, k)
+    top_w = top_w / jnp.maximum(jnp.sum(top_w, -1, keepdims=True), 1e-9)
+
+    # --- sort-based dispatch ------------------------------------------------
+    flat_e = top_ids.reshape(-1)                             # (T*k,)
+    flat_w = top_w.reshape(-1)
+    flat_t = jnp.repeat(jnp.arange(t, dtype=jnp.int32), k)
+    order = jnp.argsort(flat_e, stable=True)
+    se, st, sw = flat_e[order], flat_t[order], flat_w[order]
+    starts = jnp.searchsorted(se, jnp.arange(e, dtype=se.dtype), side="left")
+    pos = jnp.arange(t * k, dtype=jnp.int32) - starts[se].astype(jnp.int32)
+    keep = pos < c
+    dest_e = jnp.where(keep, se, e)                          # e = drop bucket
+    dest_p = jnp.where(keep, pos, 0)
+
+    buf = jnp.zeros((e + 1, c, d), x.dtype)
+    buf = buf.at[dest_e, dest_p].set(xf[st], mode="drop")
+
+    # --- expert compute (vmapped over experts; EP-shardable) ---------------
+    ybuf = jax.vmap(_expert_ffn, in_axes=(0, 0, None, None))(
+        p["experts"], buf[:e], qcfg, cfg.act)                # (E, C, d)
+
+    # --- combine ------------------------------------------------------------
+    gathered = ybuf[jnp.minimum(dest_e, e - 1), dest_p]      # (T*k, d)
+    contrib = gathered * (sw * keep.astype(sw.dtype))[:, None]
+    out = jnp.zeros((t, d), x.dtype).at[st].add(
+        contrib.astype(x.dtype), mode="drop")
+
+    # --- shared experts (DeepSeekMoE) ---------------------------------------
+    if "shared" in p:
+        out = out + L.mlp(p["shared"], xf, qcfg, cfg.act)
+    return out.reshape(b, s, d)
+
+
+# ---------------------------------------------------------------------------
+# shard_map expert parallelism (perf variant, EXPERIMENTS.md §Perf/deepseek)
+#
+# The pjit baseline lets XLA lower the dispatch scatter/gather, which it
+# does with full-token-buffer all-reduces (~GBs per layer).  This path
+# makes the communication explicit and minimal:
+#   * hidden states enter SEQUENCE-sharded over the TP axis (each model
+#     shard dispatches only its tokens),
+#   * token payloads move shard<->expert with two lax.all_to_all,
+#   * experts stay sharded over the TP axis (E_loc per device).
+# ---------------------------------------------------------------------------
+
+def moe_apply_ep(p: Params, x: jnp.ndarray, cfg, qcfg) -> jnp.ndarray:
+    """x: (B, S, d) replicated over TP; returns same. Requires an active
+    launcher mesh context (layers.activation_sharding(..., mesh=...))."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    from repro.models.layers import current_dp, current_mesh
+
+    mesh, tp = current_mesh()
+    if mesh is None or x.shape[1] % mesh.shape[tp] != 0:
+        return moe_apply(p, x, cfg, qcfg)      # CPU tests / decode: fall back
+    dp = current_dp()
+    n_tp = mesh.shape[tp]
+    e, k = cfg.moe_experts, cfg.moe_topk
+    e_loc = e // n_tp
+    b, s, d = x.shape
+
+    def block(xb, router, experts, shared):
+        # xb: (B_loc, S/n_tp, d) — tokens seq-sharded over TP
+        bl, sl, _ = xb.shape
+        t = bl * sl
+        c = capacity(t, cfg)
+        xf = xb.reshape(t, d)
+        logits = xf.astype(jnp.float32) @ router.astype(jnp.float32)
+        probs = jax.nn.softmax(logits, axis=-1)
+        top_w, top_ids = jax.lax.top_k(probs, k)
+        top_w = top_w / jnp.maximum(jnp.sum(top_w, -1, keepdims=True), 1e-9)
+
+        flat_e = top_ids.reshape(-1)
+        flat_w = top_w.reshape(-1)
+        flat_t = jnp.repeat(jnp.arange(t, dtype=jnp.int32), k)
+        order = jnp.argsort(flat_e, stable=True)
+        se, st, sw = flat_e[order], flat_t[order], flat_w[order]
+        starts = jnp.searchsorted(se, jnp.arange(e, dtype=se.dtype), "left")
+        pos = jnp.arange(t * k, dtype=jnp.int32) - starts[se].astype(jnp.int32)
+        keep = pos < c
+        dest_e = jnp.where(keep, se, e)
+        dest_p = jnp.where(keep, pos, 0)
+        send = jnp.zeros((e + 1, c, d), xb.dtype) \
+            .at[dest_e, dest_p].set(xf[st], mode="drop")[:e]
+
+        # dispatch: (n_tp, E_loc, C, d) -> peers; recv dim0 = source shard
+        send = send.reshape(n_tp, e_loc, c, d)
+
+        def a2a(x):
+            if not cfg.moe_ep_int8_payload:
+                return jax.lax.all_to_all(x, tp, 0, 0, tiled=False)
+            # quantize the token payload to int8 (per-token scales ride a
+            # tiny f32 all_to_all) — the paper's numerics applied to the
+            # collective wire, 2x less ICI bytes than bf16 / 4x than f32
+            absmax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+            scale = jnp.maximum(absmax, 1e-8) / 127.0
+            q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+            q = jax.lax.all_to_all(q, tp, 0, 0, tiled=False)
+            scale = jax.lax.all_to_all(scale, tp, 0, 0, tiled=False)
+            return q.astype(x.dtype) * scale
+
+        recv = a2a(send)
+        # (source, E_loc, C, d) -> (E_loc, source*C, d)
+        tokens_in = recv.transpose(1, 0, 2, 3).reshape(e_loc, n_tp * c, d)
+        ybuf = jax.vmap(_expert_ffn, in_axes=(0, 0, None, None))(
+            experts, tokens_in, qcfg, cfg.act)
+        back = a2a(ybuf.reshape(e_loc, n_tp, c, d).transpose(1, 0, 2, 3))
+        yflat = back.reshape(e, c, d)
+
+        gathered = yflat[jnp.minimum(dest_e, e - 1), dest_p]
+        contrib = gathered * (sw * keep.astype(sw.dtype))[:, None]
+        out = jnp.zeros((t, d), xb.dtype).at[st].add(
+            contrib.astype(xb.dtype), mode="drop")
+        if shared is not None:
+            out = out + L.mlp(shared, xf, qcfg, cfg.act).astype(xb.dtype)
+        return out.reshape(bl, sl, d)
+
+    shared = p.get("shared")
+    in_specs = (P(dp, tp, None), P(None, None),
+                jax.tree.map(lambda _: P(tp), p["experts"]),
+                None if shared is None else jax.tree.map(lambda _: P(),
+                                                         shared))
+    kwargs = dict(mesh=mesh, in_specs=in_specs,
+                  out_specs=P(dp, tp, None))
+    try:
+        fn = shard_map(block, check_vma=False, **kwargs)
+    except TypeError:  # older jax: check_rep
+        fn = shard_map(block, check_rep=False, **kwargs)
+    return fn(x, p["router"], p["experts"], shared)
+
+
+def router_aux_loss(p: Params, x: jnp.ndarray, cfg) -> jnp.ndarray:
+    """Load-balancing auxiliary loss (Switch-style): E * sum_e f_e * P_e."""
+    b, s, d = x.shape
+    xf = x.reshape(b * s, d)
+    logits = xf.astype(jnp.float32) @ p["router"].astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top1 = jnp.argmax(probs, axis=-1)
+    frac = jnp.mean(jax.nn.one_hot(top1, cfg.moe_experts), axis=0)
+    prob_mean = jnp.mean(probs, axis=0)
+    return cfg.moe_experts * jnp.sum(frac * prob_mean)

@@ -1,0 +1,110 @@
+"""Chunked linear-attention machinery shared by RWKV6 and Mamba2 (SSD).
+
+Both recurrences are instances of
+
+    o_i = r_i . S_{i-1} + (r_i . (u ⊙ k_i)) v_i
+    S_i = diag(w_i) S_{i-1} + k_i ⊗ v_i
+
+(RWKV6: per-channel decay w, bonus u;  Mamba2: per-head scalar decay a with
+r pre-scaled by a and u = 1 — see rwkv.py / mamba.py).  A naive scan over
+time is sequential; the TPU-friendly form processes chunks of C tokens
+with MXU matmuls inside the chunk and carries the (dk, dv) state across
+chunks with a scan — the standard GLA/SSD chunking, adapted here for VMEM
+sizes (C=16 keeps the worst-case in-chunk decay factor representable in
+f32 given the clamped per-step log-decay; see LOG_DECAY_MIN).
+
+Within a chunk (1-indexed local positions, P_i = prod_{m<=i} w_m):
+
+    r~_i = r_i ⊙ P_{i-1}          k~_j = k_j / P_j
+    A_ij = r~_i . k~_j  (j < i)   A_ii = r_i . (u ⊙ k_i)
+    o    = A @ V + r~ @ S0
+    S_C  = P_C ⊙ (S0 + K~^T V)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# Per-step log-decay clamp: with chunk C=16, worst-case in-chunk factor is
+# exp(16 * 3.75) = e^60 — representable in f32. Real decays rarely go below
+# exp(-3.75) ~= 0.023/step.
+LOG_DECAY_MIN = -3.75
+DEFAULT_CHUNK = 16
+
+
+def chunked_linear_attention(r, k, v, log_w, u=None, chunk=DEFAULT_CHUNK,
+                             initial_state=None):
+    """r, k: (B, S, H, dk); v: (B, S, H, dv); log_w: (B, S, H, dk) in (-inf, 0].
+
+    u: (H, dk) bonus for the diagonal (RWKV) or None (diag weight = 1).
+    Returns (o: (B, S, H, dv), final_state: (B, H, dk, dv)).
+    S must be a multiple of `chunk` (configs use powers of two; decode uses
+    single_step below).
+    """
+    b, s, h, dk = r.shape
+    dv = v.shape[-1]
+    while s % chunk != 0:      # short prompts: shrink to a divisor
+        chunk //= 2
+    chunk = max(chunk, 1)
+    n = s // chunk
+    f32 = jnp.float32
+
+    def resh(x):
+        return x.astype(f32).reshape(b, n, chunk, h, x.shape[-1]) \
+            .transpose(1, 0, 3, 2, 4)  # (n, B, H, C, d)
+
+    r_, k_, v_ = resh(r), resh(k), resh(v)
+    lw = jnp.clip(resh(log_w), LOG_DECAY_MIN, 0.0)
+
+    lw_inc = jnp.cumsum(lw, axis=-2)               # inclusive  (n,B,H,C,dk)
+    lw_exc = lw_inc - lw                           # exclusive
+    r_t = r_ * jnp.exp(lw_exc)                     # r~
+    k_t = k_ * jnp.exp(-lw_inc)                    # k~
+    p_c = jnp.exp(lw_inc[..., -1:, :])             # (n,B,H,1,dk)
+
+    mask = jnp.tril(jnp.ones((chunk, chunk), f32), k=-1)
+    a_intra = jnp.einsum("nbhid,nbhjd->nbhij", r_t, k_t) * mask
+    if u is None:
+        diag = jnp.einsum("nbhid,nbhid->nbhi", r_, k_)
+    else:
+        diag = jnp.einsum("nbhid,hd,nbhid->nbhi", r_, u.astype(f32), k_)
+    a = a_intra + jnp.eye(chunk, dtype=f32) * diag[..., None]
+
+    o_intra = jnp.einsum("nbhij,nbhjd->nbhid", a, v_)
+    kv = jnp.einsum("nbhjd,nbhje->nbhde", k_t, v_)  # (n,B,H,dk,dv)
+
+    if initial_state is None:
+        s0 = jnp.zeros((b, h, dk, dv), f32)
+    else:
+        s0 = initial_state.astype(f32)
+
+    def body(carry, xs):
+        s_in = carry                                # (B,H,dk,dv)
+        r_tc, kv_c, p_cc, o_in = xs
+        o_inter = jnp.einsum("bhid,bhde->bhie", r_tc, s_in)
+        s_out = p_cc[..., 0, :, None] * (s_in + kv_c)
+        return s_out, o_in + o_inter
+
+    final_state, o = jax.lax.scan(body, s0, (r_t, kv, p_c, o_intra))
+    o = o.transpose(1, 0, 3, 2, 4).reshape(b, s, h, dv)
+    return o.astype(v.dtype), final_state
+
+
+def single_step(r, k, v, log_w, u=None, state=None):
+    """One decode step. r, k: (B, H, dk); v: (B, H, dv); log_w: (B, H, dk).
+
+    Returns (o: (B, H, dv), new_state: (B, H, dk, dv)).
+    """
+    f32 = jnp.float32
+    b, h, dk = r.shape
+    dv = v.shape[-1]
+    if state is None:
+        state = jnp.zeros((b, h, dk, dv), f32)
+    r_, k_, v_ = r.astype(f32), k.astype(f32), v.astype(f32)
+    w = jnp.exp(jnp.clip(log_w.astype(f32), LOG_DECAY_MIN, 0.0))
+    uk = k_ if u is None else k_ * u.astype(f32)[None]
+    o = jnp.einsum("bhd,bhde->bhe", r_, state) \
+        + jnp.einsum("bhd,bhd->bh", r_, uk)[..., None] * v_
+    new_state = w[..., None] * state + jnp.einsum("bhd,bhe->bhde", k_, v_)
+    return o.astype(v.dtype), new_state

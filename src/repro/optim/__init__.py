@@ -1,0 +1,4 @@
+from repro.optim.optimizers import (Optimizer, sgd_nesterov, adamw,
+                                    clip_by_global_norm)
+from repro.optim.schedule import paper_step_decay, warmup_cosine, constant
+from repro.optim import grad_compress

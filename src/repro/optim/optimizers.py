@@ -1,0 +1,85 @@
+"""Optimizers (pure JAX, optax-style init/update pairs).
+
+* sgd_nesterov — the paper's training recipe (Sec. IV-B): SGD with
+  nesterov momentum 0.9 and weight decay 5e-4.
+* adamw — for the LM training driver.
+
+update(grads, state, params) -> (new_params, new_state).  Learning rate is
+a schedule function of the step (see schedule.py) so one jitted train_step
+serves the whole run.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable  # (grads, state, params) -> (new_params, new_state)
+
+
+def sgd_nesterov(lr_fn: Callable, momentum: float = 0.9,
+                 weight_decay: float = 5e-4) -> Optimizer:
+    def init(params):
+        return {"mu": jax.tree.map(jnp.zeros_like, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr = lr_fn(step)
+
+        def upd(g, m, p):
+            g = g + weight_decay * p
+            m_new = momentum * m + g
+            d = momentum * m_new + g          # nesterov lookahead
+            return p - lr * d, m_new
+
+        flat = jax.tree.map(upd, grads, state["mu"], params)
+        new_params = jax.tree.map(lambda t: t[0], flat,
+                                  is_leaf=lambda t: isinstance(t, tuple))
+        new_mu = jax.tree.map(lambda t: t[1], flat,
+                              is_leaf=lambda t: isinstance(t, tuple))
+        return new_params, {"mu": new_mu, "step": step}
+
+    return Optimizer(init, update)
+
+
+def adamw(lr_fn: Callable, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.1) -> Optimizer:
+    def init(params):
+        return {"mu": jax.tree.map(jnp.zeros_like, params),
+                "nu": jax.tree.map(jnp.zeros_like, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr = lr_fn(step)
+        c1 = 1.0 - b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g32 = g.astype(jnp.float32)
+            m_new = b1 * m + (1 - b1) * g32
+            v_new = b2 * v + (1 - b2) * jnp.square(g32)
+            d = (m_new / c1) / (jnp.sqrt(v_new / c2) + eps)
+            p_new = p - lr * (d + weight_decay * p)
+            return p_new.astype(p.dtype), m_new, v_new
+
+        flat = jax.tree.map(upd, grads, state["mu"], state["nu"], params)
+        pick = lambda i: jax.tree.map(lambda t: t[i], flat,
+                                      is_leaf=lambda t: isinstance(t, tuple))
+        return pick(0), {"mu": pick(1), "nu": pick(2), "step": step}
+
+    return Optimizer(init, update)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-9))
+    return jax.tree.map(lambda g: (g * scale).astype(g.dtype), grads), gnorm

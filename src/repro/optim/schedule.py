@@ -1,0 +1,41 @@
+"""Learning-rate schedules.
+
+* paper_step_decay — the paper's CIFAR recipe: 0.1 initial, /5 at epochs
+  60, 120, 160 (expressed in steps given steps_per_epoch), 200 epochs.
+* warmup_cosine — standard LM schedule.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def paper_step_decay(base_lr: float = 0.1, steps_per_epoch: int = 391,
+                     decay_epochs=(60, 120, 160), factor: float = 5.0):
+    boundaries = jnp.asarray([e * steps_per_epoch for e in decay_epochs],
+                             jnp.float32)
+
+    def lr(step):
+        step = step.astype(jnp.float32)
+        n = jnp.sum((step >= boundaries).astype(jnp.float32))
+        return base_lr / (factor ** n)
+
+    return lr
+
+
+def warmup_cosine(base_lr: float = 3e-4, warmup: int = 100,
+                  total: int = 10_000, floor: float = 0.1):
+    def lr(step):
+        s = step.astype(jnp.float32)
+        wu = jnp.minimum(s / max(warmup, 1), 1.0)
+        prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return base_lr * wu * cos
+
+    return lr
+
+
+def constant(base_lr: float):
+    def lr(step):
+        return jnp.asarray(base_lr, jnp.float32)
+    return lr

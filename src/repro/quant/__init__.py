@@ -1,0 +1,17 @@
+"""Quantization numerics for the paper's PE types (QAT + serving)."""
+
+from repro.quant.qconfig import QuantConfig, preset, PE_TYPES
+from repro.quant.fake_quant import (affine_fake_quant, pow2_fake_quant,
+                                    pow2x2_fake_quant, fake_quant_weight,
+                                    fake_quant_act)
+from repro.quant.pack import (pack_nibbles, unpack_nibbles, quantize_int4,
+                              dequantize_int4, quantize_pow2, dequantize_pow2,
+                              quantize_int8, dequantize_int8)
+
+__all__ = [
+    "QuantConfig", "preset", "PE_TYPES", "affine_fake_quant",
+    "pow2_fake_quant", "pow2x2_fake_quant", "fake_quant_weight",
+    "fake_quant_act", "pack_nibbles", "unpack_nibbles", "quantize_int4",
+    "dequantize_int4", "quantize_pow2", "dequantize_pow2", "quantize_int8",
+    "dequantize_int8",
+]

@@ -1,0 +1,128 @@
+"""Fake-quantization numerics for QAT (straight-through estimator).
+
+Implements the three weight schemes of the paper's PE types:
+
+  * affine : symmetric uniform quantization (int8 / int16), per-channel
+             or per-tensor scales;
+  * pow2   : power-of-two weights (LightPE-1 / LightNN-1): w -> +-2^e with
+             a 3-bit exponent window anchored at the per-channel absmax —
+             a multiplication becomes ONE shift;
+  * pow2x2 : sum of two powers of two (LightPE-2 / LightNN-2):
+             w -> +-2^e1 +- 2^e2 — two shifts + an add.
+
+All fake-quant ops are forward-quantize / backward-identity via the
+`x + stop_gradient(q(x) - x)` STE so QAT trains with standard JAX grads.
+Everything here is the *reference numerics* used inside models; the fused
+Pallas kernel in repro.kernels.fake_quant computes the same function and
+is validated against this module.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant.qconfig import QuantConfig
+
+# Exponent window width for pow2 codes: sign + 3 exponent bits -> 8 levels.
+POW2_LEVELS = 8
+
+
+def _ste(x, qx):
+    """Straight-through estimator: forward qx, gradient of identity."""
+    return x + jax.lax.stop_gradient(qx - x)
+
+
+# ---------------------------------------------------------------------------
+# Affine (uniform symmetric)
+# ---------------------------------------------------------------------------
+
+def affine_scale(x: jnp.ndarray, bits: int, axis=None) -> jnp.ndarray:
+    """Symmetric scale so that absmax maps to the max int level."""
+    qmax = 2.0 ** (bits - 1) - 1.0
+    absmax = jnp.max(jnp.abs(x), axis=axis, keepdims=axis is not None)
+    return jnp.maximum(absmax, 1e-8) / qmax
+
+
+def affine_quantize(x: jnp.ndarray, scale: jnp.ndarray, bits: int):
+    qmax = 2.0 ** (bits - 1) - 1.0
+    return jnp.clip(jnp.round(x / scale), -qmax, qmax)
+
+
+def affine_fake_quant(x: jnp.ndarray, bits: int, axis=None) -> jnp.ndarray:
+    scale = jax.lax.stop_gradient(affine_scale(x, bits, axis))
+    qx = affine_quantize(x, scale, bits) * scale
+    return _ste(x, qx)
+
+
+# ---------------------------------------------------------------------------
+# Power-of-two (LightPE-1)
+# ---------------------------------------------------------------------------
+
+def pow2_emax(x: jnp.ndarray, axis=None) -> jnp.ndarray:
+    """Top exponent of the representable window, from the absmax."""
+    absmax = jnp.max(jnp.abs(x), axis=axis, keepdims=axis is not None)
+    return jnp.round(jnp.log2(jnp.maximum(absmax, 1e-8)))
+
+
+def pow2_round(x: jnp.ndarray, e_min: jnp.ndarray, e_max: jnp.ndarray):
+    """Round magnitude to the nearest power of two inside [e_min, e_max].
+
+    Rounding in log2 domain == round-to-nearest among {2^e} in the
+    geometric sense; values below the window floor to +-2^e_min (the
+    LightPE has no zero code; exact zeros stay zero via sign(0)=0).
+    """
+    mag = jnp.maximum(jnp.abs(x), 1e-12)
+    e = jnp.clip(jnp.round(jnp.log2(mag)), e_min, e_max)
+    return jnp.sign(x) * jnp.exp2(e)
+
+
+def pow2_fake_quant(x: jnp.ndarray, axis=None) -> jnp.ndarray:
+    e_max = jax.lax.stop_gradient(pow2_emax(x, axis))
+    qx = pow2_round(x, e_max - (POW2_LEVELS - 1), e_max)
+    return _ste(x, qx)
+
+
+# ---------------------------------------------------------------------------
+# Sum of two powers of two (LightPE-2)
+# ---------------------------------------------------------------------------
+
+def pow2x2_round(x: jnp.ndarray, e_max: jnp.ndarray):
+    q1 = pow2_round(x, e_max - (POW2_LEVELS - 1), e_max)
+    r = x - q1
+    e_max2 = e_max - 1.0  # residual of a pow2 rounding is < half the value
+    q2 = pow2_round(r, e_max2 - (POW2_LEVELS - 1), e_max2)
+    # keep the two-term form only when it helps (residual may be tiny)
+    better = jnp.abs(x - (q1 + q2)) <= jnp.abs(x - q1)
+    return jnp.where(better, q1 + q2, q1)
+
+
+def pow2x2_fake_quant(x: jnp.ndarray, axis=None) -> jnp.ndarray:
+    e_max = jax.lax.stop_gradient(pow2_emax(x, axis))
+    qx = pow2x2_round(x, e_max)
+    return _ste(x, qx)
+
+
+# ---------------------------------------------------------------------------
+# Dispatch by QuantConfig
+# ---------------------------------------------------------------------------
+
+def fake_quant_weight(w: jnp.ndarray, qcfg: QuantConfig) -> jnp.ndarray:
+    """Quantize a weight tensor; per-channel = last axis (output features)."""
+    if qcfg.weight_scheme == "none":
+        return w
+    axis = tuple(range(w.ndim - 1)) if qcfg.per_channel else None
+    if qcfg.weight_scheme == "affine":
+        return affine_fake_quant(w, qcfg.weight_bits, axis)
+    if qcfg.weight_scheme == "pow2":
+        return pow2_fake_quant(w, axis)
+    if qcfg.weight_scheme == "pow2x2":
+        return pow2x2_fake_quant(w, axis)
+    raise ValueError(f"unknown weight scheme {qcfg.weight_scheme}")
+
+
+def fake_quant_act(x: jnp.ndarray, qcfg: QuantConfig) -> jnp.ndarray:
+    """Per-tensor dynamic activation quantization."""
+    if qcfg.act_scheme == "none" or not qcfg.quantize_acts:
+        return x
+    return affine_fake_quant(x, qcfg.act_bits, axis=None)

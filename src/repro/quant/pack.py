@@ -1,0 +1,106 @@
+"""Weight packing for the quantized serving path.
+
+The TPU adaptation of LightPE (DESIGN.md §3): the DSE picks a PE type,
+training runs QAT with those numerics, and serving stores the weights in
+the PE type's *code* format packed into int8 words in HBM — 4-bit codes
+two-per-byte.  The Pallas quant_matmul kernel unpacks codes in VMEM and
+dequantizes on the fly, so HBM traffic shrinks by the bit-width ratio
+(the memory-roofline transfer of the paper's shift-add win).
+
+Code formats (all little-nibble-first within a byte):
+  * int4  : two's-complement 4-bit integers, per-channel float scale
+  * pow2  : sign (bit 3) + 3-bit exponent index into [e_max-7, e_max],
+            per-channel e_max; code value = +-2^(e_max - 7 + idx)
+  * int8  : plain int8 with per-channel scale (no packing)
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.quant.fake_quant import (POW2_LEVELS, affine_quantize,
+                                    affine_scale, pow2_emax)
+
+
+# ---------------------------------------------------------------------------
+# nibble packing
+# ---------------------------------------------------------------------------
+
+def pack_nibbles(codes: jnp.ndarray) -> jnp.ndarray:
+    """Pack uint4 codes (values 0..15, any int dtype) along the LAST axis.
+
+    codes: (..., K) with K even -> (..., K//2) uint8; element 2i sits in the
+    low nibble, 2i+1 in the high nibble.
+    """
+    c = codes.astype(jnp.uint8)
+    lo = c[..., 0::2] & 0xF
+    hi = c[..., 1::2] & 0xF
+    return lo | (hi << 4)
+
+
+def unpack_nibbles(packed: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of pack_nibbles: (..., K//2) uint8 -> (..., K) uint8 (0..15)."""
+    lo = packed & 0xF
+    hi = (packed >> 4) & 0xF
+    return jnp.stack([lo, hi], axis=-1).reshape(*packed.shape[:-1], -1)
+
+
+# ---------------------------------------------------------------------------
+# int4 affine
+# ---------------------------------------------------------------------------
+
+def quantize_int4(w: jnp.ndarray):
+    """w: (K, N) -> packed codes ((K+1)//2... packs along K) + scale (N,).
+
+    Packing is along the *reduction* axis K (row pairs share a byte) so a
+    (bk, bn) VMEM tile unpacks to (2*bk, bn) contiguously.
+    """
+    scale = affine_scale(w, 4, axis=0)                    # (1, N)
+    q = affine_quantize(w, scale, 4).astype(jnp.int8)     # [-7, 7]
+    codes = (q & 0xF).astype(jnp.uint8)                   # two's complement
+    packed = pack_nibbles(codes.T).T                      # pack along K
+    return packed, scale[0]
+
+
+def dequantize_int4(packed: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    codes = unpack_nibbles(packed.T).T.astype(jnp.int8)
+    q = jnp.where(codes >= 8, codes - 16, codes)          # sign-extend 4b
+    return q.astype(jnp.float32) * scale[None, :]
+
+
+# ---------------------------------------------------------------------------
+# pow2 (LightPE-1) 4-bit codes
+# ---------------------------------------------------------------------------
+
+def quantize_pow2(w: jnp.ndarray):
+    """w: (K, N) -> packed 4-bit pow2 codes (along K) + per-channel e_max."""
+    e_max = pow2_emax(w, axis=0)                          # (1, N)
+    e_min = e_max - (POW2_LEVELS - 1)
+    mag = jnp.maximum(jnp.abs(w), 1e-12)
+    idx = jnp.clip(jnp.round(jnp.log2(mag)) - e_min, 0, POW2_LEVELS - 1)
+    sign_bit = (w < 0).astype(jnp.uint8)
+    codes = (idx.astype(jnp.uint8) | (sign_bit << 3)) & 0xF
+    packed = pack_nibbles(codes.T).T
+    return packed, e_max[0]
+
+
+def dequantize_pow2(packed: jnp.ndarray, e_max: jnp.ndarray) -> jnp.ndarray:
+    codes = unpack_nibbles(packed.T).T
+    idx = (codes & 0x7).astype(jnp.float32)
+    sign = jnp.where((codes >> 3) & 1, -1.0, 1.0)
+    e = e_max[None, :] - (POW2_LEVELS - 1) + idx
+    return sign * jnp.exp2(e)
+
+
+# ---------------------------------------------------------------------------
+# int8 affine (no packing, for LightPE-2-as-8b and INT8 serving)
+# ---------------------------------------------------------------------------
+
+def quantize_int8(w: jnp.ndarray):
+    scale = affine_scale(w, 8, axis=0)
+    q = affine_quantize(w, scale, 8).astype(jnp.int8)
+    return q, scale[0]
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale[None, :]

@@ -1,0 +1,2 @@
+from repro.serve.engine import (ServeEngine, quantize_params,
+                                dequantize_params, packed_bytes)

@@ -1,0 +1,187 @@
+"""Serving engine: batched prefill + decode with KV caches, and the
+quantized-weight path (the DSE-chosen PE type applied at inference).
+
+ServeEngine holds fixed-size batch slots (continuous batching: finished
+requests free their slot, queued prompts claim it — slot state is
+host-side, the device programs are the two jitted steps).  Weights can be
+served as packed low-bit codes (int4/pow2/int8 per the QADAM PE type):
+`quantize_params` packs every 2-D projection; the packed serving path is
+exercised in examples/serve_quantized.py and validated against the QAT
+numerics in tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.quant import pack as QP
+
+
+# ---------------------------------------------------------------------------
+# packed-weight serving path
+# ---------------------------------------------------------------------------
+
+PACK_MODES = {"lightpe1": "pow2", "lightpe2": "int8", "int8": "int8",
+              "int4": "int4"}
+
+
+def quantize_params(params, pe_type: str, min_size: int = 1 << 14):
+    """Pack every large 2-D (or stacked 3-D) weight into low-bit codes.
+
+    Returns a pytree where packed leaves become dicts
+    {"codes": ..., "scale": ..., "mode": str} and small leaves pass through.
+    """
+    mode = PACK_MODES[pe_type]
+
+    ckey = f"codes__{mode}"
+
+    def pack2d(w):
+        if mode == "int4":
+            codes, scale = QP.quantize_int4(w)
+        elif mode == "pow2":
+            codes, scale = QP.quantize_pow2(w)
+        else:
+            codes, scale = QP.quantize_int8(w)
+        return {ckey: codes, "scale": scale}
+
+    def f(path, leaf):
+        pstr = "/".join(str(getattr(q, "key", getattr(q, "idx", q)))
+                        for q in path)
+        if "embed" in pstr:      # gathers need the dense table
+            return leaf
+        if "layers/" in pstr and leaf.ndim == 2:
+            return leaf          # stacked (L, d) norm scales, not weights
+        if leaf.ndim == 2 and leaf.size >= min_size:
+            return pack2d(leaf)
+        if leaf.ndim == 3 and leaf.size >= min_size:  # stacked (L, in, out)
+            cs, ss = [], []
+            for i in range(leaf.shape[0]):
+                pk = pack2d(leaf[i])
+                cs.append(pk[ckey])
+                ss.append(pk["scale"])
+            return {ckey: jnp.stack(cs), "scale": jnp.stack(ss)}
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(f, params)
+
+
+def pack_mode_of(d: dict):
+    for k in d:
+        if k.startswith("codes__"):
+            return k.split("__", 1)[1], k
+    return None, None
+
+
+def is_packed(x):
+    return isinstance(x, dict) and pack_mode_of(x)[0] is not None
+
+
+def dequantize_params(qparams):
+    """Inverse of quantize_params (reference serving path)."""
+    def f(leaf):
+        if not is_packed(leaf):
+            return leaf
+        mode, ckey = pack_mode_of(leaf)
+        codes, scale = leaf[ckey], leaf["scale"]
+        dq = {"int4": QP.dequantize_int4, "pow2": QP.dequantize_pow2,
+              "int8": QP.dequantize_int8}[mode]
+        if codes.ndim == 3:
+            return jnp.stack([dq(codes[i], scale[i])
+                              for i in range(codes.shape[0])])
+        return dq(codes, scale)
+
+    return jax.tree.map(f, qparams, is_leaf=is_packed)
+
+
+def packed_bytes(qparams) -> int:
+    """HBM bytes of the packed representation (roofline accounting)."""
+    total = 0
+    for leaf in jax.tree.leaves(qparams):
+        total += np.asarray(leaf).nbytes if hasattr(leaf, "nbytes") else 0
+    return total
+
+
+# ---------------------------------------------------------------------------
+# request slots / continuous batching
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray
+    max_new: int
+    out: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    """Fixed-slot continuous batching around a model's prefill/decode."""
+
+    def __init__(self, cfg, mod, params, batch_slots: int = 8,
+                 max_len: int = 256, enc_out=None):
+        self.cfg = cfg
+        self.mod = mod
+        self.params = params
+        self.batch = batch_slots
+        self.max_len = max_len
+        self.cache = mod.init_cache(cfg, batch_slots, max_len, jnp.float32)
+        self.slots: List[Optional[Request]] = [None] * batch_slots
+        self.queue: List[Request] = []
+        self._decode = jax.jit(
+            lambda p, t, c: mod.decode_step(p, t, cfg, c))
+        self._prefill = jax.jit(
+            lambda p, t, c: mod.prefill(p, t, cfg, c))
+
+    def submit(self, prompt: np.ndarray, max_new: int = 16) -> Request:
+        req = Request(prompt=np.asarray(prompt), max_new=max_new)
+        self.queue.append(req)
+        return req
+
+    def _admit(self):
+        for i in range(self.batch):
+            if self.slots[i] is None and self.queue:
+                self.slots[i] = self.queue.pop(0)
+
+    def step(self):
+        """One engine iteration: admit, prefill new, decode one token."""
+        self._admit()
+        active = [r for r in self.slots if r is not None]
+        if not active:
+            return False
+        # simple synchronous batch: prompts padded to the same length
+        plen = max(len(r.prompt) for r in active)
+        toks = np.zeros((self.batch, plen), np.int32)
+        for i, r in enumerate(self.slots):
+            if r is not None:
+                toks[i, -len(r.prompt):] = r.prompt
+        if all(not r.out for r in active):           # first step: prefill
+            logits, self.cache = self._prefill(self.params,
+                                               jnp.asarray(toks), self.cache)
+            nxt = np.asarray(jnp.argmax(logits[:, -1], -1))
+        else:
+            last = np.zeros((self.batch, 1), np.int32)
+            for i, r in enumerate(self.slots):
+                if r is not None and r.out:
+                    last[i, 0] = r.out[-1]
+            logits, self.cache = self._decode(self.params,
+                                              jnp.asarray(last), self.cache)
+            nxt = np.asarray(jnp.argmax(logits[:, -1], -1))
+        for i, r in enumerate(self.slots):
+            if r is None:
+                continue
+            r.out.append(int(nxt[i]))
+            if len(r.out) >= r.max_new:
+                r.done = True
+                self.slots[i] = None               # free the slot
+        return True
+
+    def run(self, max_iters: int = 1000):
+        it = 0
+        while (self.queue or any(self.slots)) and it < max_iters:
+            self.step()
+            it += 1
+        return it

@@ -1,0 +1,2 @@
+from repro.train.trainer import (TrainState, init_state, make_train_step,
+                                 state_shardings_for, fit, resume, Watchdog)

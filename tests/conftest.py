@@ -1,0 +1,13 @@
+import os
+
+# Tests run on the single real CPU device; ONLY dryrun.py overrides the
+# device count (per the dry-run contract). Keep JAX quiet + deterministic.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,174 @@
+"""QADAM core: dataflow cost model, synthesis oracle, PPA fit, DSE/Pareto."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (PAPER_WORKLOADS, enumerate_space, evaluate_space,
+                        fit_ppa_models, make_config, normalized_report,
+                        pareto_mask, r2, mape, spread, synthesize)
+from repro.core.arch import PE_TYPE_NAMES, stack_configs
+from repro.core.dataflow import layer_cost, network_cost
+from repro.core.ppa import config_features
+from repro.core.workloads import LayerSpec, gemm, vgg16
+
+
+def _layer(**kw):
+    d = dict(H=34, W=34, C=16, K=32, R=3, S=3, stride=1, batch=1, count=1)
+    d.update(kw)
+    return LayerSpec(**{k: jnp.asarray(v, jnp.float32) for k, v in d.items()})
+
+
+class TestDataflow:
+    def test_macs(self):
+        ly = _layer()
+        # E = F = 32; MACs = K*C*R*S*E*F
+        assert float(ly.macs()) == 32 * 16 * 9 * 32 * 32
+
+    def test_cycles_lower_bound(self):
+        """Compute cycles >= MACs / total PEs (can't beat full utilization)."""
+        ly = _layer()
+        cfg = make_config()
+        c = layer_cost(ly, cfg, jnp.asarray(1.0))
+        assert float(c.cycles_compute) >= float(ly.macs()) / \
+            float(cfg.pe_rows * cfg.pe_cols) - 1
+        assert 0 < float(c.utilization) <= 1
+
+    def test_dram_compulsory_traffic(self):
+        """DRAM bits >= one read of ifmap+filters and one write of ofmap."""
+        ly = _layer()
+        cfg = make_config(pe_type="int16")
+        c = layer_cost(ly, cfg, jnp.asarray(1.0))
+        a_bits = w_bits = 16
+        compulsory = (34 * 34 * 16 * a_bits + 32 * 16 * 9 * w_bits
+                      + 32 * 32 * 32 * a_bits)
+        assert float(c.dram_bits) >= compulsory
+
+    def test_bandwidth_monotone(self):
+        ly = _layer(C=64, K=128)
+        lo = layer_cost(ly, make_config(bandwidth_gbps=4.0), jnp.asarray(1.0))
+        hi = layer_cost(ly, make_config(bandwidth_gbps=64.0), jnp.asarray(1.0))
+        assert float(hi.cycles) <= float(lo.cycles)
+
+    def test_lower_precision_less_energy_and_traffic(self):
+        ly = _layer(C=64, K=64)
+        costs = {pe: layer_cost(ly, make_config(pe_type=pe), jnp.asarray(1.0))
+                 for pe in ("fp32", "int16", "lightpe1")}
+        assert float(costs["fp32"].energy_pj) > \
+            float(costs["int16"].energy_pj) > \
+            float(costs["lightpe1"].energy_pj)
+        assert float(costs["fp32"].dram_bits) > \
+            float(costs["int16"].dram_bits) > \
+            float(costs["lightpe1"].dram_bits)
+
+    @given(k=st.integers(4, 256), c=st.integers(1, 128),
+           hw=st.integers(4, 64))
+    @settings(max_examples=25, deadline=None)
+    def test_costs_positive_finite(self, k, c, hw):
+        ly = _layer(H=hw + 2, W=hw + 2, C=c, K=k)
+        cost = layer_cost(ly, make_config(), jnp.asarray(1.0))
+        for leaf in cost:
+            v = float(leaf)
+            assert np.isfinite(v) and v >= 0
+
+    def test_network_sums_layers(self):
+        wl = vgg16("cifar10")
+        cfg = make_config()
+        total = network_cost(wl.layers, cfg, jnp.asarray(1.0))
+        assert float(total.macs) == pytest.approx(
+            float(wl.layers.macs().sum()), rel=1e-5)
+
+
+class TestSynth:
+    def test_deterministic(self):
+        cfg = make_config()
+        a, b = synthesize(cfg), synthesize(cfg)
+        assert float(a.area_mm2) == float(b.area_mm2)
+
+    def test_bigger_array_more_area_power(self):
+        small = synthesize(make_config(pe_rows=8, pe_cols=8))
+        big = synthesize(make_config(pe_rows=32, pe_cols=32))
+        assert float(big.area_mm2) > float(small.area_mm2)
+        assert float(big.power_mw) > float(small.power_mw)
+
+    def test_pe_type_ordering(self):
+        """fp32 > int16 > lightpe2 > lightpe1 on PE-dominated area/power."""
+        res = {pe: synthesize(make_config(pe_type=pe, pe_rows=24, pe_cols=28))
+               for pe in ("fp32", "int16", "lightpe2", "lightpe1")}
+        areas = [float(res[p].area_mm2)
+                 for p in ("fp32", "int16", "lightpe2", "lightpe1")]
+        assert areas == sorted(areas, reverse=True)
+        clocks = [float(res[p].clock_ghz)
+                  for p in ("fp32", "int16", "lightpe2", "lightpe1")]
+        assert clocks == sorted(clocks)
+
+
+class TestPPAFit:
+    def test_fit_quality(self):
+        """The paper's Fig. 3: polynomial PPA models agree closely."""
+        space = enumerate_space(max_points=600, seed=1)
+        models = fit_ppa_models(space, degrees=(1, 2), k=4)
+        truth = synthesize(space)
+        pred = models.predict(space)
+        for t in ("power_mw", "clock_ghz", "area_mm2"):
+            assert r2(getattr(truth, t), getattr(pred, t)) > 0.97, t
+            assert mape(getattr(truth, t), getattr(pred, t)) < 0.08, t
+
+
+class TestPareto:
+    def test_pareto_mask_correct(self, rng):
+        pts = jnp.asarray(rng.normal(size=(200, 2)))
+        mask = np.asarray(pareto_mask(pts))
+        pts = np.asarray(pts)
+        for i in range(len(pts)):
+            dominated = bool(np.any(np.all(pts >= pts[i], axis=1)
+                                    & np.any(pts > pts[i], axis=1)))
+            assert mask[i] == (not dominated)
+
+    def test_front_nonempty_and_contains_max(self, rng):
+        pts = jnp.asarray(rng.normal(size=(64, 3)))
+        mask = np.asarray(pareto_mask(pts))
+        assert mask.any()
+        assert mask[int(np.argmax(np.asarray(pts)[:, 0]))]
+
+
+class TestDSE:
+    @pytest.fixture(scope="class")
+    def space_result(self):
+        space = enumerate_space(max_points=1200, seed=0)
+        wl = PAPER_WORKLOADS["resnet20-cifar10"]()
+        return space, evaluate_space(space, wl)
+
+    def test_paper_fig2_spread(self, space_result):
+        """Fig. 2: perf/area and energy vary widely (>5x / and decades)."""
+        _, res = space_result
+        sp = spread(res)
+        assert sp["perf_per_area_spread"] > 5.0
+        assert sp["energy_spread"] > 5.0
+
+    def test_paper_fig4_lightpe_dominance(self, space_result):
+        """LightPEs beat the best INT16 config on both axes (paper's main
+        claim); exact ratios are reported in benchmarks/fig4_dse.py."""
+        space, res = space_result
+        rep = normalized_report(res, space)
+        assert rep["lightpe1"]["norm_perf_per_area"] > 2.0
+        assert rep["lightpe2"]["norm_perf_per_area"] > 1.5
+        assert rep["lightpe1"]["norm_energy"] < 0.5
+        assert rep["lightpe2"]["norm_energy"] < 0.6
+        # INT16 dominates FP32
+        assert rep["fp32"]["norm_perf_per_area"] < 1.0
+        assert rep["fp32"]["norm_energy"] > rep["int16"]["norm_energy"]
+
+    def test_surrogate_agrees_with_oracle(self, space_result):
+        space, res = space_result
+        models = fit_ppa_models(enumerate_space(max_points=500, seed=3),
+                                degrees=(2,), k=3)
+        res_pred = evaluate_space(
+            space, PAPER_WORKLOADS["resnet20-cifar10"](), surrogate=models)
+        # DSE conclusions stable under the surrogate (Fig. 3's purpose)
+        rep_o = normalized_report(res, space)
+        rep_p = normalized_report(res_pred, space)
+        for pe in ("lightpe1", "lightpe2"):
+            assert rep_p[pe]["norm_perf_per_area"] == pytest.approx(
+                rep_o[pe]["norm_perf_per_area"], rel=0.25)

@@ -1,0 +1,163 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret=True)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.fake_quant import fake_quant_any
+from repro.kernels.fake_quant.ref import (ref_fake_quant_affine,
+                                          ref_fake_quant_pow2)
+from repro.kernels.quant_matmul import quant_matmul, quant_matmul_any
+from repro.kernels.quant_matmul.ref import (ref_quant_matmul_int4,
+                                            ref_quant_matmul_int8,
+                                            ref_quant_matmul_pow2)
+from repro.quant.fake_quant import affine_scale, pow2_emax
+from repro.quant.pack import quantize_int4, quantize_int8, quantize_pow2
+
+
+def _xw(rng, m, k, n, dtype=jnp.float32):
+    x = jnp.asarray(rng.normal(size=(m, k)), dtype)
+    w = jnp.asarray(rng.normal(size=(k, n)) * 0.08, jnp.float32)
+    return x, w
+
+
+MKN_ALIGNED = [(128, 256, 128), (256, 512, 256), (128, 512, 384)]
+MKN_RAGGED = [(37, 300, 190), (1, 512, 129), (200, 254, 64)]
+
+
+class TestQuantMatmul:
+    @pytest.mark.parametrize("m,k,n", MKN_ALIGNED)
+    @pytest.mark.parametrize("mode", ["int4", "pow2", "int8"])
+    def test_aligned_vs_ref(self, rng, m, k, n, mode):
+        x, w = _xw(rng, m, k, n)
+        if mode == "int4":
+            codes, scale = quantize_int4(w)
+            ref = ref_quant_matmul_int4(x, codes, scale)
+        elif mode == "pow2":
+            codes, scale = quantize_pow2(w)
+            ref = ref_quant_matmul_pow2(x, codes, scale)
+        else:
+            codes, scale = quantize_int8(w)
+            ref = ref_quant_matmul_int8(x, codes, scale)
+        out = quant_matmul(x, codes, scale.astype(jnp.float32), mode=mode,
+                           bm=128, bn=128, bk=256, interpret=True)
+        np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-4)
+
+    @pytest.mark.parametrize("m,k,n", MKN_RAGGED)
+    def test_ragged_shapes_int4(self, rng, m, k, n):
+        x, w = _xw(rng, m, k, n)
+        codes, scale = quantize_int4(w)
+        ref = ref_quant_matmul_int4(x, codes, scale)
+        out = quant_matmul_any(x, codes, scale, mode="int4", interpret=True)
+        np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-4)
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_dtypes(self, rng, dtype):
+        x, w = _xw(rng, 128, 256, 128, dtype)
+        codes, scale = quantize_int4(w)
+        out = quant_matmul(x, codes, scale, mode="int4", interpret=True)
+        ref = ref_quant_matmul_int4(x.astype(jnp.float32), codes, scale)
+        tol = 1e-4 if dtype == jnp.float32 else 0.15
+        np.testing.assert_allclose(out, ref, rtol=tol, atol=tol)
+
+    def test_block_shape_sweep(self, rng):
+        x, w = _xw(rng, 256, 512, 256)
+        codes, scale = quantize_int4(w)
+        ref = ref_quant_matmul_int4(x, codes, scale)
+        for bm, bn, bk in [(64, 128, 128), (128, 64, 512), (256, 256, 256)]:
+            out = quant_matmul(x, codes, scale, mode="int4", bm=bm, bn=bn,
+                               bk=bk, interpret=True)
+            np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-4,
+                                       err_msg=f"{bm},{bn},{bk}")
+
+    def test_quantized_matmul_close_to_dense(self, rng):
+        """int4 fidelity: relative error of the whole GEMM stays bounded."""
+        x, w = _xw(rng, 128, 512, 128)
+        codes, scale = quantize_int4(w)
+        out = quant_matmul(x, codes, scale, mode="int4", interpret=True)
+        dense = x @ w
+        rel = float(jnp.linalg.norm(out - dense) / jnp.linalg.norm(dense))
+        assert rel < 0.2
+
+
+class TestFakeQuantKernel:
+    @pytest.mark.parametrize("k,n", [(256, 256), (300, 190), (512, 640),
+                                     (8, 128)])
+    @pytest.mark.parametrize("mode", ["affine", "pow2"])
+    def test_vs_ref(self, rng, k, n, mode):
+        w = jnp.asarray(rng.normal(size=(k, n)) * 0.1, jnp.float32)
+        if mode == "affine":
+            s = affine_scale(w, 8, axis=0)[0]
+            ref = ref_fake_quant_affine(w, s, 8)
+        else:
+            s = pow2_emax(w, axis=0)[0]
+            ref = ref_fake_quant_pow2(w, s)
+        out = fake_quant_any(w, s, mode=mode, bits=8, interpret=True)
+        np.testing.assert_allclose(out, ref, rtol=1e-6, atol=1e-6)
+
+    @pytest.mark.parametrize("bits", [4, 8, 16])
+    def test_bits(self, rng, bits):
+        w = jnp.asarray(rng.normal(size=(256, 256)) * 0.1, jnp.float32)
+        s = affine_scale(w, bits, axis=0)[0]
+        out = fake_quant_any(w, s, mode="affine", bits=bits, interpret=True)
+        ref = ref_fake_quant_affine(w, s, bits)
+        np.testing.assert_allclose(out, ref, atol=1e-6)
+
+
+class TestFlashAttentionKernel:
+    """Pallas flash attention (q x kv tiled, VMEM-resident logits) vs the
+    pure-jnp oracle — block-shape/dtype/shape sweeps, interpret=True."""
+
+    @pytest.mark.parametrize("bq,bk", [(64, 64), (128, 128), (64, 128),
+                                       (256, 64)])
+    def test_block_sweep(self, rng, bq, bk):
+        from repro.kernels.flash_attention import flash_attention
+        from repro.kernels.flash_attention.ref import ref_flash_attention
+        S, D = 256, 64
+        q, k, v = [jnp.asarray(rng.normal(size=(S, D)), jnp.float32)
+                   for _ in range(3)]
+        out = flash_attention(q, k, v, bq=bq, bk=bk, interpret=True)
+        np.testing.assert_allclose(out, ref_flash_attention(q, k, v),
+                                   rtol=2e-5, atol=2e-5)
+
+    @pytest.mark.parametrize("sq,skv,d", [(100, 100, 32), (64, 256, 16),
+                                          (1, 128, 64)])
+    def test_ragged_batched(self, rng, sq, skv, d):
+        from repro.kernels.flash_attention import flash_attention_bh
+        from repro.kernels.flash_attention.ref import ref_flash_attention
+        q = jnp.asarray(rng.normal(size=(2, 2, sq, d)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(2, 2, skv, d)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(2, 2, skv, d)), jnp.float32)
+        out = flash_attention_bh(q, k, v, interpret=True)
+        for i in range(2):
+            for j in range(2):
+                np.testing.assert_allclose(
+                    out[i, j], ref_flash_attention(q[i, j], k[i, j], v[i, j]),
+                    rtol=2e-5, atol=2e-5)
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_dtypes(self, rng, dtype):
+        from repro.kernels.flash_attention import flash_attention
+        from repro.kernels.flash_attention.ref import ref_flash_attention
+        S, D = 128, 32
+        q, k, v = [jnp.asarray(rng.normal(size=(S, D)), dtype)
+                   for _ in range(3)]
+        out = flash_attention(q, k, v, interpret=True, bq=64, bk=64)
+        ref = ref_flash_attention(q.astype(jnp.float32),
+                                  k.astype(jnp.float32),
+                                  v.astype(jnp.float32))
+        tol = 2e-5 if dtype == jnp.float32 else 0.03
+        np.testing.assert_allclose(out, ref, rtol=tol, atol=tol)
+
+    def test_noncausal(self, rng):
+        from repro.kernels.flash_attention import flash_attention
+        from repro.kernels.flash_attention.ref import ref_flash_attention
+        S, D = 128, 32
+        q, k, v = [jnp.asarray(rng.normal(size=(S, D)), jnp.float32)
+                   for _ in range(3)]
+        out = flash_attention(q, k, v, causal=False, interpret=True,
+                              bq=64, bk=64)
+        np.testing.assert_allclose(
+            out, ref_flash_attention(q, k, v, causal=False),
+            rtol=2e-5, atol=2e-5)

@@ -1,0 +1,206 @@
+"""Perf-variant features: block-local attention, KV-head replication,
+EP shard_map MoE, packed serving params, mixed-precision context, and the
+trip-count-aware HLO analyzer they are measured with."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import reduced
+from repro.models import family_module, transformer as T
+from repro.models.layers import compute_dtype
+from repro.serve import dequantize_params, quantize_params
+
+
+class TestBlockLocalAttention:
+    @pytest.mark.parametrize("arch", ["gemma3-1b", "gemma2-9b"])
+    def test_matches_masked_full(self, arch):
+        cfg = reduced(arch)
+        params = T.init_params(cfg, jax.random.PRNGKey(0))
+        tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0,
+                                    cfg.vocab)
+        base = T.forward(params, tokens, cfg)
+        fast = T.forward(params, tokens, cfg.replace(attn_block_local=True))
+        np.testing.assert_allclose(np.asarray(base), np.asarray(fast),
+                                   rtol=2e-3, atol=2e-3)
+
+    def test_gradients_match(self):
+        cfg = reduced("gemma3-1b")
+        params = T.init_params(cfg, jax.random.PRNGKey(0))
+        batch = {"tokens": jnp.arange(32)[None] % cfg.vocab,
+                 "labels": (jnp.arange(32)[None] + 1) % cfg.vocab}
+        g1 = jax.grad(T.loss_fn)(params, batch, cfg)
+        g2 = jax.grad(T.loss_fn)(params, batch,
+                                 cfg.replace(attn_block_local=True))
+        for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=5e-3, atol=5e-3)
+
+
+class TestKVReplication:
+    def test_decode_matches_baseline(self):
+        cfg = reduced("qwen3-32b")
+        params = T.init_params(cfg, jax.random.PRNGKey(1))
+        tokens = jax.random.randint(jax.random.PRNGKey(2), (1, 12), 0,
+                                    cfg.vocab)
+        cfg_kv = cfg.replace(kv_replicate_to=4)
+        cache = T.init_cache(cfg_kv, 1, 16, jnp.float32)
+        logits, cache = T.prefill(params, tokens[:, :8], cfg_kv, cache)
+        ref = T.forward(params, tokens[:, :8], cfg)
+        np.testing.assert_allclose(np.asarray(logits[:, -1]),
+                                   np.asarray(ref[:, -1]), atol=2e-3)
+        lg, _ = T.decode_step(params, tokens[:, 8:9], cfg_kv, cache)
+        ref2 = T.forward(params, tokens[:, :9], cfg)
+        np.testing.assert_allclose(np.asarray(lg[:, 0]),
+                                   np.asarray(ref2[:, -1]), atol=2e-3)
+
+    def test_cache_shape_padded(self):
+        cfg = reduced("qwen3-32b").replace(kv_replicate_to=4)
+        cache = T.init_cache(cfg, 1, 16, jnp.float32)
+        assert cache["scan"]["k"].shape[-2] == 4  # padded heads
+
+
+class TestPackedServing:
+    @pytest.mark.parametrize("pe", ["int8", "lightpe1", "int4"])
+    def test_forward_with_packed_params(self, pe):
+        """qdense consumes packed-code dicts directly (the kernel path)."""
+        cfg = reduced("qwen3-32b")
+        params = T.init_params(cfg, jax.random.PRNGKey(0))
+        packed = quantize_params(params, pe, min_size=1 << 8)
+        tokens = jnp.arange(8)[None] % cfg.vocab
+        a = T.forward(dequantize_params(packed), tokens, cfg)
+        b = T.forward(packed, tokens, cfg)   # inline dequant in qdense
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_embed_and_norms_not_packed(self):
+        cfg = reduced("qwen3-32b")
+        params = T.init_params(cfg, jax.random.PRNGKey(0))
+        packed = quantize_params(params, "int4", min_size=1 << 8)
+        assert not isinstance(packed["embed"], dict)
+        assert not isinstance(packed["layers"]["ln1"], dict)
+        assert isinstance(packed["layers"]["attn"]["wq"], dict)
+
+    def test_packing_shrinks_bytes(self):
+        cfg = reduced("qwen3-32b")
+        params = T.init_params(cfg, jax.random.PRNGKey(0))
+        dense = sum(np.asarray(x).nbytes for x in jax.tree.leaves(params))
+        packed = quantize_params(params, "int4", min_size=1 << 8)
+        pb = sum(np.asarray(x).nbytes for x in jax.tree.leaves(packed))
+        assert pb < 0.55 * dense  # embeddings stay f32; weights 8x smaller
+
+
+class TestMixedPrecision:
+    def test_context_casts(self):
+        from repro.models.layers import qdense
+        from repro.quant.qconfig import preset
+        x = jnp.ones((2, 8), jnp.float32)
+        w = jnp.ones((8, 4), jnp.float32)
+        with compute_dtype(jnp.bfloat16):
+            y = qdense(x, w, preset("fp32"))
+        assert y.dtype == jnp.bfloat16
+        y2 = qdense(x, w, preset("fp32"))
+        assert y2.dtype == jnp.float32
+
+    def test_loss_still_finite(self):
+        cfg = reduced("smollm-135m")
+        mod = family_module(cfg)
+        params = mod.init_params(cfg, jax.random.PRNGKey(0))
+        batch = {"tokens": jnp.arange(16)[None] % cfg.vocab,
+                 "labels": jnp.arange(16)[None] % cfg.vocab}
+        with compute_dtype(jnp.bfloat16):
+            loss = mod.loss_fn(params, batch, cfg)
+        assert np.isfinite(float(loss))
+
+
+class TestHLOAnalysis:
+    def test_trip_count_correction(self):
+        """The analyzer multiplies while bodies by known_trip_count (raw
+        cost_analysis counts them once — the whole reason it exists)."""
+        from repro.launch.hlo_analysis import analyze
+
+        def fn(x, w):
+            def body(h, _):
+                return jnp.tanh(h @ w), None
+            h, _ = jax.lax.scan(body, x, None, length=7)
+            return h
+
+        c = jax.jit(fn).lower(
+            jax.ShapeDtypeStruct((16, 32), jnp.float32),
+            jax.ShapeDtypeStruct((32, 32), jnp.float32)).compile()
+        ana = analyze(c.as_text())
+        per_iter = 2 * 16 * 32 * 32
+        assert ana["flops"] == pytest.approx(7 * per_iter, rel=0.01)
+        raw = c.cost_analysis().get("flops", 0)
+        assert raw == pytest.approx(per_iter, rel=0.01)
+
+    def test_collectives_counted(self):
+        import os
+        from repro.launch.hlo_analysis import analyze
+        if jax.device_count() < 2:
+            pytest.skip("needs >1 device")
+
+    def test_dus_credited_at_slice(self):
+        from repro.launch.hlo_analysis import analyze
+
+        def fn(buf, upd):
+            return jax.lax.dynamic_update_slice(buf, upd, (0, 0))
+
+        c = jax.jit(fn, donate_argnums=(0,)).lower(
+            jax.ShapeDtypeStruct((1024, 1024), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1024), jnp.float32)).compile()
+        ana = analyze(c.as_text())
+        # full buffer = 4 MB; the DUS itself must be credited near the
+        # 4 KB slice (an un-donated copy may remain on some backends)
+        assert ana["bytes_out"] < 1.5 * 4 * 1024 * 1024
+
+
+class TestEPMoEFallback:
+    def test_falls_back_without_mesh(self):
+        """On the single CPU device (no mesh context) moe_apply_ep must
+        produce the baseline result."""
+        from repro.models import moe as MOE
+        from repro.quant.qconfig import preset
+        cfg = reduced("deepseek-moe-16b").replace(capacity_factor=8.0)
+        p = MOE.moe_init(jax.random.PRNGKey(0), cfg)
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, cfg.d_model))
+        a = MOE.moe_apply(p, x, cfg, preset("fp32"))
+        b = MOE.moe_apply_ep(p, x, cfg, preset("fp32"))
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("arch", ["qwen3-32b", "smollm-135m",
+                                      "phi3.5-moe-42b-a6.6b"])
+    def test_matches_baseline_f32(self, arch):
+        """Chunked online-softmax prefill == masked full attention (f32
+        residuals for bit-level comparability; bf16 differs by ~1 ulp)."""
+        cfg = reduced(arch).replace(dtype="float32")
+        params = T.init_params(cfg, jax.random.PRNGKey(0))
+        tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0,
+                                    cfg.vocab)
+        base = T.forward(params, tokens, cfg)
+        fast = T.forward(params, tokens, cfg.replace(attn_flash=True))
+        np.testing.assert_allclose(np.asarray(base), np.asarray(fast),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_unit_vs_reference_blocks(self, rng):
+        from repro.models.flash_attn import flash_attention
+        B, S, H, G, D = 1, 32, 2, 2, 8
+        q = jnp.asarray(rng.normal(size=(B, S, H, G, D)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(B, S, H, D)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(B, S, H, D)), jnp.float32)
+        pos = jnp.arange(S)[None, :]
+        sc = 1 / np.sqrt(D)
+        logits = jnp.einsum("bqhgd,bkhd->bhgqk", q, k) * sc
+        qp = pos[:, None, None, :, None]
+        kp = pos[:, None, None, None, :]
+        logits = jnp.where(kp <= qp, logits, -1e30)
+        ref = jnp.einsum("bhgqk,bkhd->bqhgd",
+                         jax.nn.softmax(logits, -1), v)
+        for bk in (4, 8, 32):
+            out = flash_attention(q, k, v, pos, pos, 1 << 30, 0.0, 0.0,
+                                  block_k=bk)
+            np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5,
+                                       err_msg=f"bk={bk}")

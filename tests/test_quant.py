@@ -1,0 +1,170 @@
+"""Quantization numerics: fake-quant schemes, packing, STE, properties."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.quant import (affine_fake_quant, dequantize_int4, dequantize_int8,
+                         dequantize_pow2, fake_quant_act, fake_quant_weight,
+                         pack_nibbles, pow2_fake_quant, pow2x2_fake_quant,
+                         preset, quantize_int4, quantize_int8, quantize_pow2,
+                         unpack_nibbles)
+from repro.quant.fake_quant import POW2_LEVELS, affine_scale
+
+
+def _w(rng, shape, scale=0.1):
+    return jnp.asarray(rng.normal(size=shape) * scale, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# affine
+# ---------------------------------------------------------------------------
+
+class TestAffine:
+    def test_error_bound(self, rng):
+        """Quantization error <= scale/2 everywhere (within clip range)."""
+        w = _w(rng, (64, 32))
+        for bits in (4, 8, 16):
+            q = affine_fake_quant(w, bits, axis=0)
+            scale = affine_scale(w, bits, axis=0)
+            assert float(jnp.max(jnp.abs(q - w) / scale)) <= 0.5 + 1e-3
+
+    def test_idempotent(self, rng):
+        w = _w(rng, (32, 16))
+        q1 = affine_fake_quant(w, 8, axis=0)
+        q2 = affine_fake_quant(q1, 8, axis=0)
+        np.testing.assert_allclose(q1, q2, atol=1e-6)
+
+    def test_more_bits_less_error(self, rng):
+        w = _w(rng, (128, 64))
+        errs = [float(jnp.mean(jnp.abs(affine_fake_quant(w, b, 0) - w)))
+                for b in (4, 8, 16)]
+        assert errs[0] > errs[1] > errs[2]
+
+    def test_ste_gradient_is_identity(self, rng):
+        w = _w(rng, (16, 8))
+        g = jax.grad(lambda x: jnp.sum(affine_fake_quant(x, 8, 0)))(w)
+        np.testing.assert_allclose(g, jnp.ones_like(w), atol=1e-6)
+
+    @given(bits=st.sampled_from([4, 8, 16]),
+           seed=st.integers(0, 100))
+    @settings(max_examples=20, deadline=None)
+    def test_levels_bounded(self, bits, seed):
+        rng = np.random.default_rng(seed)
+        w = _w(rng, (16, 4), scale=rng.uniform(0.01, 10))
+        scale = affine_scale(w, bits, axis=0)
+        q = affine_fake_quant(w, bits, axis=0) / scale
+        lv = np.unique(np.round(np.asarray(q), 3))
+        assert np.all(np.abs(lv) <= 2 ** (bits - 1) - 1 + 1e-3)
+
+
+# ---------------------------------------------------------------------------
+# pow2 (LightPE-1) and pow2x2 (LightPE-2)
+# ---------------------------------------------------------------------------
+
+class TestPow2:
+    def test_values_are_powers_of_two(self, rng):
+        w = _w(rng, (64, 32))
+        q = np.asarray(pow2_fake_quant(w, axis=0))
+        nz = q[np.abs(q) > 0]
+        log = np.log2(np.abs(nz))
+        np.testing.assert_allclose(log, np.round(log), atol=1e-5)
+
+    def test_relative_error_bound(self, rng):
+        """Within the exponent window, rel error <= 2^0.5 - 1 ~ 41%
+        (geometric rounding); typical much less."""
+        w = _w(rng, (256, 8))
+        q = np.asarray(pow2_fake_quant(w, axis=0))
+        wn = np.asarray(w)
+        emax = np.round(np.log2(np.max(np.abs(wn), 0)))
+        in_window = np.abs(wn) >= 2.0 ** (emax - (POW2_LEVELS - 1))[None]
+        rel = np.abs(q - wn)[in_window] / np.abs(wn)[in_window]
+        assert rel.max() <= 0.5
+
+    def test_pow2x2_better_than_pow2(self, rng):
+        w = _w(rng, (256, 16))
+        e1 = float(jnp.mean(jnp.abs(pow2_fake_quant(w, 0) - w)))
+        e2 = float(jnp.mean(jnp.abs(pow2x2_fake_quant(w, 0) - w)))
+        assert e2 < e1
+
+    def test_ste(self, rng):
+        w = _w(rng, (8, 4))
+        g = jax.grad(lambda x: jnp.sum(pow2x2_fake_quant(x, 0)))(w)
+        np.testing.assert_allclose(g, jnp.ones_like(w), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# packing
+# ---------------------------------------------------------------------------
+
+class TestPacking:
+    def test_nibble_roundtrip(self, rng):
+        codes = jnp.asarray(rng.integers(0, 16, size=(6, 10)), jnp.uint8)
+        np.testing.assert_array_equal(unpack_nibbles(pack_nibbles(codes)),
+                                      codes)
+
+    def test_int4_pack_matches_fake_quant(self, rng):
+        w = _w(rng, (64, 32))
+        packed, scale = quantize_int4(w)
+        assert packed.shape == (32, 32) and packed.dtype == jnp.uint8
+        deq = dequantize_int4(packed, scale)
+        ref = affine_fake_quant(w, 4, axis=0)
+        np.testing.assert_allclose(deq, ref, atol=1e-6)
+
+    def test_pow2_pack_matches_fake_quant(self, rng):
+        w = _w(rng, (64, 32))
+        packed, emax = quantize_pow2(w)
+        deq = dequantize_pow2(packed, emax)
+        ref = pow2_fake_quant(w, axis=0)
+        # packed path has no zero code; exact match wherever ref != 0
+        mask = np.asarray(ref) != 0
+        np.testing.assert_allclose(np.asarray(deq)[mask],
+                                   np.asarray(ref)[mask], rtol=1e-6)
+
+    def test_int8_roundtrip(self, rng):
+        w = _w(rng, (33, 17))
+        q, s = quantize_int8(w)
+        deq = dequantize_int8(q, s)
+        assert float(jnp.max(jnp.abs(deq - w))) <= float(jnp.max(s)) / 2 + 1e-6
+
+    @given(k=st.integers(2, 40).map(lambda x: 2 * x), n=st.integers(1, 40))
+    @settings(max_examples=15, deadline=None)
+    def test_int4_shapes(self, k, n):
+        rng = np.random.default_rng(k * 100 + n)
+        w = _w(rng, (k, n))
+        packed, scale = quantize_int4(w)
+        assert packed.shape == (k // 2, n)
+        assert dequantize_int4(packed, scale).shape == (k, n)
+
+
+# ---------------------------------------------------------------------------
+# presets / dispatch
+# ---------------------------------------------------------------------------
+
+class TestPresets:
+    @pytest.mark.parametrize("pe", ["fp32", "int16", "lightpe1", "lightpe2",
+                                    "int8"])
+    def test_dispatch(self, pe, rng):
+        qcfg = preset(pe)
+        w = _w(rng, (32, 16))
+        x = _w(rng, (4, 32), scale=1.0)
+        wq = fake_quant_weight(w, qcfg)
+        xq = fake_quant_act(x, qcfg)
+        assert wq.shape == w.shape and xq.shape == x.shape
+        if pe == "fp32":
+            np.testing.assert_array_equal(wq, w)
+        else:
+            assert float(jnp.max(jnp.abs(wq - w))) > 0
+
+    def test_accuracy_ordering(self, rng):
+        """fp32 < int16 < lightpe2 <= int8 < lightpe1 weight error (the
+        ordering behind the paper's accuracy results)."""
+        w = _w(rng, (512, 64))
+        errs = {pe: float(jnp.mean(jnp.abs(
+            fake_quant_weight(w, preset(pe)) - w)))
+            for pe in ("fp32", "int16", "lightpe2", "int8", "lightpe1")}
+        assert errs["fp32"] == 0
+        assert errs["int16"] < errs["lightpe2"] < errs["lightpe1"]
+        assert errs["int16"] < errs["int8"] < errs["lightpe1"]
