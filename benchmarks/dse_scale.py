@@ -1,0 +1,86 @@
+"""Streaming DSE scaling: points/sec + peak memory at N in {3k, 27k, 216k}.
+
+The engine claim under test: evaluation + Pareto reduction of an
+arbitrarily large design space in O(chunk) memory — no O(N^2) mask, no
+materialized grid.  N=3,000 is the historical subsample, N=27,000 the
+full paper grid, and N=216,000 an axis-extended grid (finer PE-array and
+gbuf sweeps) exercising beyond-paper scale.  At 3k the streamed archive
+is cross-checked against the dense O(N^2) oracle.
+
+Peak memory is the process high-water mark (ru_maxrss); sizes run in
+increasing order, so a bounded-memory engine shows a near-flat column.
+"""
+
+from __future__ import annotations
+
+import resource
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import (DEFAULT_CHUNK_SIZE, DEFAULT_SPACE, PAPER_WORKLOADS,
+                        ParetoArchive, enumerate_space, evaluate_space,
+                        pareto_front_streaming, pareto_mask, space_size)
+
+# DEFAULT_SPACE is 5*5*4*2*3*3*5*3 = 27,000; refining the PE-array and
+# gbuf axes gives 10*10*8*2*3*3*5*3 = 216,000.
+SCALED_SPACE = dict(
+    DEFAULT_SPACE,
+    pe_rows=(4, 8, 12, 16, 20, 24, 28, 32, 40, 48),
+    pe_cols=(4, 8, 12, 14, 16, 20, 24, 28, 32, 48),
+    gbuf_kb=(27.0, 54.0, 108.0, 162.0, 216.0, 324.0, 432.0, 864.0),
+)
+
+
+def _maxrss_mb() -> float:
+    return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
+
+
+def _oracle_check(wl, max_points: int) -> bool:
+    """Dense O(N^2) oracle vs streamed archive + tiled/sorted masks."""
+    space = enumerate_space(max_points=max_points, seed=0)
+    res = evaluate_space(space, wl, chunk_size=DEFAULT_CHUNK_SIZE)
+    obj = np.stack([np.asarray(res.perf_per_area, np.float64),
+                    -np.asarray(res.energy_j, np.float64)], -1)
+    dense = np.asarray(pareto_mask(obj, method="dense"))
+    tiled = np.asarray(pareto_mask(obj, method="tiled"))
+    sorted2d = np.asarray(pareto_mask(obj, method="sorted"))
+    archive = ParetoArchive(2)
+    for lo in range(0, len(obj), 1000):
+        archive.update(obj[lo:lo + 1000],
+                       np.arange(lo, min(lo + 1000, len(obj))))
+    front_ok = set(archive.indices.tolist()) == \
+        set(np.flatnonzero(dense).tolist())
+    return bool((dense == tiled).all() and (dense == sorted2d).all()
+                and front_ok)
+
+
+def run(sizes: tuple = (3000, 27000, 216000)):
+    rows = []
+    wl = PAPER_WORKLOADS["resnet20-cifar10"]()
+    n_oracle = min(3000, min(sizes))
+    rows.append(emit(
+        f"dse_scale_oracle_n{n_oracle}", 0.0,
+        f"dense==tiled==sorted==streamed_archive="
+        f"{_oracle_check(wl, n_oracle)}"))
+    for n in sizes:
+        if n <= 27000:
+            space, mp = None, (None if n >= 27000 else n)
+        else:
+            space, mp = SCALED_SPACE, (None if n >= space_size(SCALED_SPACE)
+                                       else n)
+        t0 = time.perf_counter()
+        archive, _front_cfg = pareto_front_streaming(
+            wl, space=space, chunk_size=DEFAULT_CHUNK_SIZE, max_points=mp)
+        dt = time.perf_counter() - t0
+        total = space_size(space) if mp is None else mp
+        rows.append(emit(
+            f"dse_scale_n{total}", dt * 1e6,
+            f"points_per_sec={total / dt:.0f};front={len(archive)};"
+            f"peak_rss_mb={_maxrss_mb():.0f};chunk={DEFAULT_CHUNK_SIZE}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -13,21 +13,22 @@ import time
 
 from benchmarks.common import emit
 from repro.configs import get as get_cfg
-from repro.core import enumerate_space, evaluate_space, normalized_report
+from repro.core import (DEFAULT_CHUNK_SIZE, enumerate_space, evaluate_space,
+                        normalized_report, report_pe_types)
 from repro.core.workloads import transformer_workload
 
 
-def run():
+def run(max_points: int | None = None):
     rows = []
-    space = enumerate_space(max_points=1500, seed=0)
+    space = enumerate_space(max_points=max_points, seed=0)
     for arch, seq in (("smollm-135m", 2048), ("rwkv6-1.6b", 2048),
                       ("deepseek-moe-16b", 2048)):
         cfg = get_cfg(arch)
         wl = transformer_workload(cfg, seq=seq, batch=1, mode="decode")
         t0 = time.perf_counter()
-        res = evaluate_space(space, wl)
+        res = evaluate_space(space, wl, chunk_size=DEFAULT_CHUNK_SIZE)
         dt = (time.perf_counter() - t0) * 1e6
-        rep = normalized_report(res, space)
+        rep = report_pe_types(normalized_report(res, space))
         parts = [f"{pe}:ppa={r['norm_perf_per_area']:.2f},"
                  f"en={r['norm_energy']:.3f}"
                  for pe, r in rep.items()]

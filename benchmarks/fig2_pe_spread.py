@@ -3,6 +3,8 @@
 Paper claim: the framework identifies design points where performance per
 area and energy vary by more than 5x and 35x respectively.  We report the
 spread across the whole swept space and across the per-PE-type bests.
+Runs the full 27k paper grid via the chunked evaluator (max_points is the
+CI --fast knob).
 """
 
 from __future__ import annotations
@@ -12,20 +14,21 @@ import time
 import numpy as np
 
 from benchmarks.common import emit
-from repro.core import (PAPER_WORKLOADS, enumerate_space, evaluate_space,
-                        normalized_report, spread)
+from repro.core import (DEFAULT_CHUNK_SIZE, PAPER_WORKLOADS, enumerate_space,
+                        evaluate_space, normalized_report, report_pe_types,
+                        spread)
 
 
-def run():
+def run(max_points: int | None = None):
     rows = []
-    space = enumerate_space(max_points=3000, seed=0)
+    space = enumerate_space(max_points=max_points, seed=0)
     for wname in ("vgg16-cifar10", "resnet20-cifar10"):
         wl = PAPER_WORKLOADS[wname]()
         t0 = time.perf_counter()
-        res = evaluate_space(space, wl)
+        res = evaluate_space(space, wl, chunk_size=DEFAULT_CHUNK_SIZE)
         dt = (time.perf_counter() - t0) * 1e6
         sp = spread(res)
-        rep = normalized_report(res, space)
+        rep = report_pe_types(normalized_report(res, space))
         best_ppa = {k: v["norm_perf_per_area"] for k, v in rep.items()}
         best_en = {k: v["norm_energy"] for k, v in rep.items()}
         ppa_spread_best = max(best_ppa.values()) / min(best_ppa.values())

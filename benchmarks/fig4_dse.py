@@ -1,6 +1,10 @@
 """Fig. 4: DSE over all paper workloads — normalized perf/area and energy
 per PE type vs the best-perf/area INT16 design.
 
+Runs the FULL 27,000-point paper space through the streaming chunked
+evaluator (fixed-shape jit, O(chunk) device memory).  ``max_points`` is a
+CI knob (benchmarks/run.py --fast) — None means the whole grid.
+
 Paper claims (averages across workloads/datasets):
   LightPE-1: 4.8x perf/area, 4.7x less energy   (up to 5.7x, Fig. 5)
   LightPE-2: 4.1x perf/area, 4.0x less energy
@@ -14,8 +18,8 @@ import time
 import numpy as np
 
 from benchmarks.common import emit
-from repro.core import (PAPER_WORKLOADS, enumerate_space, evaluate_space,
-                        normalized_report)
+from repro.core import (DEFAULT_CHUNK_SIZE, PAPER_WORKLOADS, enumerate_space,
+                        evaluate_space, normalized_report)
 
 WORKLOADS = ("vgg16-cifar10", "resnet20-cifar10", "resnet56-cifar10",
              "vgg16-cifar100", "resnet20-cifar100", "resnet56-cifar100",
@@ -24,17 +28,18 @@ WORKLOADS = ("vgg16-cifar10", "resnet20-cifar10", "resnet56-cifar10",
 PAPER = {"lightpe1": (4.8, 1 / 4.7), "lightpe2": (4.1, 1 / 4.0)}
 
 
-def run():
+def run(max_points: int | None = None):
     rows = []
-    space = enumerate_space(max_points=3000, seed=0)
+    space = enumerate_space(max_points=max_points, seed=0)
+    n = int(np.shape(space.pe_rows)[0])
     acc = {}
     for wname in WORKLOADS:
         wl = PAPER_WORKLOADS[wname]()
         t0 = time.perf_counter()
-        res = evaluate_space(space, wl)
+        res = evaluate_space(space, wl, chunk_size=DEFAULT_CHUNK_SIZE)
         dt = (time.perf_counter() - t0) * 1e6
         rep = normalized_report(res, space)
-        parts = []
+        parts = [f"n={n}"]
         for pe in ("fp32", "int16", "lightpe1", "lightpe2", "int8"):
             r = rep[pe]
             acc.setdefault(pe, []).append((r["norm_perf_per_area"],

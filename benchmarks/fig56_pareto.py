@@ -21,8 +21,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit
-from repro.core import (PAPER_WORKLOADS, enumerate_space, evaluate_space,
-                        normalized_report, pareto_mask)
+from repro.core import (DEFAULT_CHUNK_SIZE, PAPER_WORKLOADS, enumerate_space,
+                        evaluate_space, normalized_report, pareto_mask)
 from repro.data.synthetic import eval_image_set, image_batch
 from repro.models import cnn
 from repro.optim import sgd_nesterov, paper_step_decay
@@ -56,14 +56,16 @@ def train_acc(pe: str, depth: int = 8, steps: int = 200, trials: int = 2):
     return float(np.mean(accs))
 
 
-def run(steps: int = 200):
+def run(steps: int = 200, max_points: int | None = None, trials: int = 2):
     rows = []
-    space = enumerate_space(max_points=2000, seed=0)
-    res = evaluate_space(space, PAPER_WORKLOADS["resnet20-cifar10"]())
+    space = enumerate_space(max_points=max_points, seed=0)
+    res = evaluate_space(space, PAPER_WORKLOADS["resnet20-cifar10"](),
+                         chunk_size=DEFAULT_CHUNK_SIZE)
     rep = normalized_report(res, space)
 
     t0 = time.perf_counter()
-    accs = {pe: train_acc(pe, steps=steps) for pe in PE_TYPES}
+    accs = {pe: train_acc(pe, steps=steps, trials=trials)
+            for pe in PE_TYPES}
     dt = (time.perf_counter() - t0) * 1e6
 
     # Fig. 5: accuracy vs best perf/area; Fig. 6: accuracy vs best energy

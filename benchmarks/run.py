@@ -1,46 +1,80 @@
 """Benchmark harness: one module per paper table/figure + roofline.
 
-Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
+Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit) and
+writes the DSE-related rows to BENCH_dse.json.
 
   PYTHONPATH=src python -m benchmarks.run [--only fig4] [--fast]
+
+--fast shrinks the QAT training budget AND caps every DSE sweep's point
+count so the whole harness is CI-runnable in minutes; the default runs
+the full 27k paper grid (and 216k in dse_scale).
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import traceback
+
+# DSE point cap + dse_scale sizes under --fast (full grids otherwise).
+FAST_DSE_POINTS = 1500
+FAST_SCALE_SIZES = (1000, 3000)
+
+# Benches whose rows land in BENCH_dse.json.
+DSE_BENCHES = ("fig2", "fig4", "fig56", "dse_transformers", "dse_scale")
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
     ap.add_argument("--fast", action="store_true",
-                    help="shrink the QAT training budget (CI mode)")
+                    help="shrink the QAT training budget and cap DSE "
+                         "point counts (CI mode)")
+    ap.add_argument("--dse-json", default="BENCH_dse.json",
+                    help="where to write the DSE bench rows")
     args = ap.parse_args()
 
-    from benchmarks import (dse_transformers, fig2_pe_spread, fig3_ppa_fit,
-                            fig4_dse, fig56_pareto, kernels_bench, roofline)
+    from benchmarks import (dse_scale, dse_transformers, fig2_pe_spread,
+                            fig3_ppa_fit, fig4_dse, fig56_pareto,
+                            kernels_bench, roofline)
+    mp = FAST_DSE_POINTS if args.fast else None
     benches = {
-        "fig2": fig2_pe_spread.run,
+        "fig2": lambda: fig2_pe_spread.run(max_points=mp),
         "fig3": fig3_ppa_fit.run,
-        "fig4": fig4_dse.run,
-        "fig56": (lambda: fig56_pareto.run(steps=120)) if args.fast
-        else fig56_pareto.run,
+        "fig4": lambda: fig4_dse.run(max_points=mp),
+        "fig56": (lambda: fig56_pareto.run(steps=60, max_points=mp,
+                                           trials=1))
+        if args.fast else fig56_pareto.run,
         "kernels": kernels_bench.run,
-        "dse_transformers": dse_transformers.run,
+        "dse_transformers": lambda: dse_transformers.run(max_points=mp),
+        "dse_scale": (lambda: dse_scale.run(sizes=FAST_SCALE_SIZES))
+        if args.fast else dse_scale.run,
         "roofline": roofline.run,
     }
     print("name,us_per_call,derived")
     failed = []
+    dse_rows = {}
     for name, fn in benches.items():
         if args.only and args.only not in name:
             continue
         try:
-            fn()
+            rows = fn()
+            if name in DSE_BENCHES and rows:
+                dse_rows[name] = rows
         except Exception:  # noqa: BLE001
             failed.append(name)
             traceback.print_exc()
+    if dse_rows:
+        if args.only or failed:  # partial run: merge, don't clobber
+            try:
+                with open(args.dse_json) as f:
+                    dse_rows = {**json.load(f), **dse_rows}
+            except (OSError, ValueError):
+                pass
+        with open(args.dse_json, "w") as f:
+            json.dump(dse_rows, f, indent=2)
+        print(f"wrote {args.dse_json}", file=sys.stderr)
     if failed:
         print(f"FAILED: {failed}", file=sys.stderr)
         sys.exit(1)

@@ -12,18 +12,21 @@ import os
 
 import numpy as np
 
-from repro.core import (PAPER_WORKLOADS, enumerate_space, evaluate_space,
-                        normalized_report, pareto_front)
+from repro.core import (DEFAULT_CHUNK_SIZE, PAPER_WORKLOADS, enumerate_space,
+                        evaluate_space, normalized_report, pareto_front,
+                        report_pe_types)
 from repro.core.arch import config_rows
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--workload", default="resnet20-cifar10",
                 choices=list(PAPER_WORKLOADS))
-ap.add_argument("--max-points", type=int, default=4000)
+ap.add_argument("--max-points", type=int, default=None,
+                help="subsample the space (default: full 27k paper grid)")
 args = ap.parse_args()
 
 space = enumerate_space(max_points=args.max_points, seed=0)
-res = evaluate_space(space, PAPER_WORKLOADS[args.workload]())
+res = evaluate_space(space, PAPER_WORKLOADS[args.workload](),
+                     chunk_size=DEFAULT_CHUNK_SIZE)
 mask = np.asarray(pareto_front(res))
 
 os.makedirs("results/dse", exist_ok=True)
@@ -43,6 +46,6 @@ with open(out, "w", newline="") as f:
                      float(res.utilization[i]), bool(mask[i])])
 print(f"wrote {out} ({mask.sum()} Pareto points of {mask.size})")
 rep = normalized_report(res, space)
-for pe, r in rep.items():
+for pe, r in report_pe_types(rep).items():
     print(f"  {pe:9s} perf/area={r['norm_perf_per_area']:.2f}x "
           f"energy={r['norm_energy']:.3f}x")

@@ -14,8 +14,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (enumerate_space, evaluate_space, fit_ppa_models,
-                        normalized_report, pareto_front, r2, spread,
-                        synthesize, vgg16)
+                        normalized_report, pareto_front, r2, report_pe_types,
+                        spread, synthesize, vgg16)
 from repro.core.arch import PE_TYPE_NAMES, config_rows
 from repro.quant import fake_quant_weight, preset
 
@@ -37,7 +37,7 @@ print("design-space spread:", spread(res))
 mask = np.asarray(pareto_front(res))
 print(f"Pareto front: {mask.sum()} / {mask.size} design points")
 rep = normalized_report(res, space)
-for pe, r in rep.items():
+for pe, r in report_pe_types(rep).items():
     print(f"  {pe:9s} perf/area={r['norm_perf_per_area']:.2f}x "
           f"energy={r['norm_energy']:.3f}x (vs best INT16)")
 

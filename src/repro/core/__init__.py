@@ -12,9 +12,15 @@ Submodules:
 """
 
 from repro.core.arch import (AcceleratorConfig, make_config, stack_configs,
-                             enumerate_space, PE_TYPE_NAMES, PE_TYPE_CODES)
-from repro.core.dse import (evaluate_space, pareto_front, pareto_mask,
-                            normalized_report, spread, DseResult)
+                             enumerate_space, iter_space_chunks, space_points,
+                             space_size, DEFAULT_SPACE,
+                             PE_TYPE_NAMES, PE_TYPE_CODES)
+from repro.core.dse import (evaluate_space, evaluate_space_streaming,
+                            pareto_front, pareto_front_streaming,
+                            pareto_mask, pareto_mask_dense, pareto_mask_tiled,
+                            pareto_mask_2d, ParetoArchive,
+                            normalized_report, report_pe_types, spread,
+                            DseResult, DEFAULT_CHUNK_SIZE)
 from repro.core.ppa import fit_ppa_models, PPAModels, r2, mape
 from repro.core.synth import synthesize, SynthResult
 from repro.core.workloads import (Workload, LayerSpec, PAPER_WORKLOADS,
@@ -23,8 +29,12 @@ from repro.core.workloads import (Workload, LayerSpec, PAPER_WORKLOADS,
 
 __all__ = [
     "AcceleratorConfig", "make_config", "stack_configs", "enumerate_space",
-    "PE_TYPE_NAMES", "PE_TYPE_CODES", "evaluate_space", "pareto_front",
-    "pareto_mask", "normalized_report", "spread", "DseResult",
+    "iter_space_chunks", "space_points", "space_size", "DEFAULT_SPACE",
+    "PE_TYPE_NAMES", "PE_TYPE_CODES", "evaluate_space",
+    "evaluate_space_streaming", "pareto_front", "pareto_front_streaming",
+    "pareto_mask", "pareto_mask_dense", "pareto_mask_tiled", "pareto_mask_2d",
+    "ParetoArchive", "normalized_report", "report_pe_types", "spread",
+    "DseResult", "DEFAULT_CHUNK_SIZE",
     "fit_ppa_models", "PPAModels", "r2", "mape", "synthesize", "SynthResult",
     "Workload", "LayerSpec", "PAPER_WORKLOADS", "transformer_workload",
     "vgg16", "resnet_cifar", "resnet34", "resnet50",

@@ -20,8 +20,7 @@ fast path and the polynomial surrogate is reproduced on top of it).
 
 from __future__ import annotations
 
-import itertools
-from typing import Iterable, NamedTuple, Sequence
+from typing import Iterable, Iterator, NamedTuple, Sequence
 
 import jax.numpy as jnp
 import numpy as np
@@ -101,22 +100,19 @@ DEFAULT_SPACE = dict(
 )
 
 
-def enumerate_space(space: dict | None = None,
-                    max_points: int | None = None,
-                    seed: int = 0) -> AcceleratorConfig:
-    """Enumerate (or subsample) the cartesian design space as a batched config.
-
-    Returns an AcceleratorConfig whose leaves all have leading dim N.
-    """
+def _space_axes(space: dict | None) -> list[np.ndarray]:
+    """Per-field value axes in AcceleratorConfig field order."""
     space = dict(DEFAULT_SPACE if space is None else space)
-    keys = list(AcceleratorConfig._fields)
-    axes = [space[k] for k in keys]
-    points = np.array(list(itertools.product(*axes)), dtype=np.float64)
-    if max_points is not None and len(points) > max_points:
-        rng = np.random.default_rng(seed)
-        idx = rng.choice(len(points), size=max_points, replace=False)
-        points = points[np.sort(idx)]
-    cols = {k: points[:, i] for i, k in enumerate(keys)}
+    return [np.asarray(space[k], np.float64)
+            for k in AcceleratorConfig._fields]
+
+
+def space_size(space: dict | None = None) -> int:
+    """Number of points in the cartesian design space (no materialization)."""
+    return int(np.prod([len(a) for a in _space_axes(space)]))
+
+
+def _cols_to_config(cols: dict) -> AcceleratorConfig:
     return AcceleratorConfig(
         pe_rows=jnp.asarray(cols["pe_rows"], jnp.float32),
         pe_cols=jnp.asarray(cols["pe_cols"], jnp.float32),
@@ -127,6 +123,71 @@ def enumerate_space(space: dict | None = None,
         pe_type=jnp.asarray(cols["pe_type"], jnp.int32),
         bandwidth_gbps=jnp.asarray(cols["bandwidth_gbps"], jnp.float32),
     )
+
+
+def space_points(indices: np.ndarray,
+                 space: dict | None = None) -> AcceleratorConfig:
+    """Decode flat space indices into a batched config via mixed radix.
+
+    Index order matches ``itertools.product`` over the fields in
+    ``AcceleratorConfig._fields`` order (last axis varies fastest), so
+    ``space_points(np.arange(space_size()))`` reproduces the historical
+    ``enumerate_space()`` exactly — but any index subset decodes in O(len)
+    without materializing the grid.
+    """
+    axes = _space_axes(space)
+    idx = np.asarray(indices, np.int64)
+    radices = np.array([len(a) for a in axes], np.int64)
+    # strides[i] = product of radix sizes of the faster-varying axes after i
+    strides = np.concatenate([np.cumprod(radices[::-1])[::-1][1:], [1]])
+    keys = AcceleratorConfig._fields
+    cols = {k: axes[i][(idx // strides[i]) % radices[i]]
+            for i, k in enumerate(keys)}
+    return _cols_to_config(cols)
+
+
+def iter_space_chunks(space: dict | None = None,
+                      chunk_size: int = 4096,
+                      max_points: int | None = None,
+                      seed: int = 0) -> Iterator[tuple[AcceleratorConfig,
+                                                       np.ndarray]]:
+    """Lazily yield ``(config_chunk, flat_indices)`` pairs over the space.
+
+    Every chunk except possibly the last has exactly ``chunk_size`` points;
+    ``flat_indices`` are the global space indices of the chunk's points
+    (what ``space_points`` decodes).  Memory is O(chunk_size) regardless of
+    the total space size.  ``max_points`` subsamples the space uniformly
+    (same RNG stream as ``enumerate_space``).
+    """
+    n = space_size(space)
+    if max_points is not None and n > max_points:
+        rng = np.random.default_rng(seed)
+        keep = np.sort(rng.choice(n, size=max_points, replace=False))
+        for lo in range(0, len(keep), chunk_size):
+            idx = keep[lo:lo + chunk_size]
+            yield space_points(idx, space), idx
+        return
+    for lo in range(0, n, chunk_size):
+        idx = np.arange(lo, min(lo + chunk_size, n), dtype=np.int64)
+        yield space_points(idx, space), idx
+
+
+def enumerate_space(space: dict | None = None,
+                    max_points: int | None = None,
+                    seed: int = 0) -> AcceleratorConfig:
+    """Enumerate (or subsample) the cartesian design space as a batched config.
+
+    Returns an AcceleratorConfig whose leaves all have leading dim N.
+    Built on mixed-radix decode — the grid of index tuples is never
+    materialized, only the N selected points.
+    """
+    n = space_size(space)
+    if max_points is not None and n > max_points:
+        rng = np.random.default_rng(seed)
+        idx = np.sort(rng.choice(n, size=max_points, replace=False))
+    else:
+        idx = np.arange(n, dtype=np.int64)
+    return space_points(idx, space)
 
 
 def config_rows(cfg: AcceleratorConfig) -> Iterable[dict]:

@@ -7,10 +7,16 @@ hardware-efficiency metrics:
   * performance per area  (inferences/s per mm^2)
   * energy per inference  (J)
 
-and extracts Pareto fronts.  The evaluation is one jitted, vmapped call
-over the stacked design batch — thousands of design points per second on
-CPU, which is the "rapidly iterate over various designs" the paper asks
-of the framework.
+and extracts Pareto fronts.
+
+The engine is *streaming*: the design space is walked in fixed-shape
+chunks (mixed-radix decode in ``arch.iter_space_chunks``), every chunk is
+evaluated under ONE jit compilation (the trailing partial chunk is padded
+up to the chunk shape, so batch size never retraces), and the Pareto
+front is maintained incrementally in a non-dominated archive.  Peak
+memory is O(chunk_size) for evaluation and O(N * block) for the tiled
+mask — never the O(N^2) broadcast of the dense mask, which is kept as
+the reference oracle (``pareto_mask_dense``) for tests.
 
 The clock for each design point comes either from the synthesis oracle
 ("actual", the paper's DC flow) or from the fitted polynomial PPA
@@ -20,18 +26,23 @@ paper's validation story.
 
 from __future__ import annotations
 
-import functools
-from typing import NamedTuple
+from typing import Iterator, NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.arch import (AcceleratorConfig, PE_INT16, PE_TYPE_NAMES)
+from repro.core.arch import (AcceleratorConfig, PE_INT16, PE_TYPE_NAMES,
+                             iter_space_chunks, space_points)
 from repro.core.dataflow import network_cost
 from repro.core.ppa import PPAModels
 from repro.core.synth import synthesize
 from repro.core.workloads import Workload
+
+# Default number of design points evaluated per jit call in the streaming
+# paths. Large enough to amortize dispatch, small enough that a chunk's
+# intermediates stay in cache-friendly territory.
+DEFAULT_CHUNK_SIZE = 4096
 
 
 class DseResult(NamedTuple):
@@ -73,27 +84,90 @@ def _evaluate(cfg: AcceleratorConfig, clock_ghz: jnp.ndarray,
         utilization=cost.utilization, macs=cost.macs)
 
 
+def _evaluate_batch(cfg: AcceleratorConfig, workload: Workload,
+                    surrogate: PPAModels | None) -> DseResult:
+    synth = synthesize(cfg) if surrogate is None else surrogate.predict(cfg)
+    return _evaluate(cfg, synth.clock_ghz, synth.area_mm2, synth.leakage_mw,
+                     workload.layers)
+
+
+def _pad_config(cfg: AcceleratorConfig, pad: int) -> AcceleratorConfig:
+    """Repeat the last design point ``pad`` times so the chunk shape is
+    fixed — padded lanes are sliced off after evaluation."""
+    return AcceleratorConfig(*[
+        jnp.concatenate([f, jnp.broadcast_to(f[-1:], (pad,) + f.shape[1:])])
+        for f in cfg])
+
+
+def _slice_config(cfg: AcceleratorConfig, lo: int, hi: int) -> AcceleratorConfig:
+    return AcceleratorConfig(*[f[lo:hi] for f in cfg])
+
+
 def evaluate_space(cfg: AcceleratorConfig, workload: Workload,
-                   surrogate: PPAModels | None = None) -> DseResult:
+                   surrogate: PPAModels | None = None,
+                   chunk_size: int | None = None) -> DseResult:
     """Evaluate a batched design space on one workload.
 
     surrogate=None uses the synthesis oracle for clock/area ("actual");
     otherwise the fitted polynomial PPA models ("predicted").
+
+    With ``chunk_size`` set, the batch is processed in fixed-shape chunks
+    under a single jit compilation (the final partial chunk is padded to
+    the chunk shape), and the result columns are accumulated as host
+    numpy arrays — device memory stays O(chunk_size) however large N is.
     """
-    synth = synthesize(cfg) if surrogate is None else surrogate.predict(cfg)
-    return _evaluate(cfg, synth.clock_ghz, synth.area_mm2, synth.leakage_mw,
-                     workload.layers)
+    n = int(np.shape(cfg.pe_rows)[0]) if np.ndim(cfg.pe_rows) else 1
+    if chunk_size is None or n <= chunk_size:
+        # a single chunk costs one compilation either way — don't pad it
+        return _evaluate_batch(cfg, workload, surrogate)
+    cols: list[list[np.ndarray]] = [[] for _ in DseResult._fields]
+    for lo in range(0, n, chunk_size):
+        chunk = _slice_config(cfg, lo, min(lo + chunk_size, n))
+        valid = int(np.shape(chunk.pe_rows)[0])
+        if valid < chunk_size:
+            chunk = _pad_config(chunk, chunk_size - valid)
+        res = _evaluate_batch(chunk, workload, surrogate)
+        for acc, col in zip(cols, res):
+            acc.append(np.asarray(col[:valid]))
+    return DseResult(*[np.concatenate(c) if c else np.empty((0,), np.float32)
+                       for c in cols])
+
+
+def evaluate_space_streaming(
+        workload: Workload,
+        space: dict | None = None,
+        surrogate: PPAModels | None = None,
+        chunk_size: int = DEFAULT_CHUNK_SIZE,
+        max_points: int | None = None,
+        seed: int = 0) -> Iterator[tuple[DseResult, np.ndarray]]:
+    """Lazily evaluate the cartesian design space chunk-by-chunk.
+
+    Yields ``(chunk_result, flat_indices)`` with every chunk evaluated at
+    the fixed ``chunk_size`` shape (single jit compilation per workload
+    layer count); the padded tail of the final chunk is trimmed before it
+    is yielded.  Memory never exceeds O(chunk_size).
+    """
+    for cfg, idx in iter_space_chunks(space, chunk_size=chunk_size,
+                                      max_points=max_points, seed=seed):
+        valid = len(idx)
+        if valid < chunk_size:
+            cfg = _pad_config(cfg, chunk_size - valid)
+        res = _evaluate_batch(cfg, workload, surrogate)
+        yield DseResult(*[np.asarray(f[:valid]) for f in res]), idx
 
 
 # ---------------------------------------------------------------------------
 # Pareto analysis
 # ---------------------------------------------------------------------------
 
-def pareto_mask(objectives: jnp.ndarray) -> jnp.ndarray:
-    """Non-dominated mask. objectives: (N, D), all HIGHER-IS-BETTER.
+def pareto_mask_dense(objectives: jnp.ndarray) -> jnp.ndarray:
+    """Non-dominated mask, O(N^2) broadcast — the REFERENCE ORACLE.
 
-    Point i is dominated iff some j is >= on every objective and > on at
-    least one. O(N^2) broadcast — fine for the paper-scale spaces (<=20k).
+    objectives: (N, D), all HIGHER-IS-BETTER.  Point i is dominated iff
+    some j is >= on every objective and > on at least one.  Allocates the
+    full (N, N, D) comparison, so only use for N small enough to afford
+    it (tests, tiny fronts); the tiled/sorted paths below are exact and
+    bounded-memory.
     """
     a = objectives[:, None, :]   # i
     b = objectives[None, :, :]   # j
@@ -103,39 +177,250 @@ def pareto_mask(objectives: jnp.ndarray) -> jnp.ndarray:
     return ~dominated
 
 
-def pareto_front(result: DseResult,
-                 metrics: tuple = ("perf_per_area", "neg_energy_j")) -> jnp.ndarray:
+def pareto_mask_tiled(objectives: jnp.ndarray,
+                      block_size: int = 1024) -> jnp.ndarray:
+    """Non-dominated mask with O(N * block_size) memory, any D.
+
+    ``lax.fori_loop`` over column blocks of the (implicit) N x N dominance
+    matrix: each step compares all N points against one block of
+    ``block_size`` candidate dominators and ORs into the dominated
+    accumulator.  Padding rows are -inf on every objective so they can
+    never dominate a real point — the result is bit-identical to
+    ``pareto_mask_dense``.
+    """
+    obj = jnp.asarray(objectives)
+    n, d = obj.shape
+    if n == 0:
+        return jnp.zeros((0,), bool)
+    block_size = min(block_size, n)
+    n_blocks = -(-n // block_size)
+    padded = jnp.pad(obj, ((0, n_blocks * block_size - n), (0, 0)),
+                     constant_values=-jnp.inf)
+
+    def body(k, dominated):
+        blk = jax.lax.dynamic_slice(padded, (k * block_size, 0),
+                                    (block_size, d))
+        ge = jnp.all(blk[None, :, :] >= obj[:, None, :], axis=-1)
+        gt = jnp.any(blk[None, :, :] > obj[:, None, :], axis=-1)
+        return dominated | jnp.any(ge & gt, axis=1)
+
+    dominated = jax.lax.fori_loop(0, n_blocks, body,
+                                  jnp.zeros((n,), bool))
+    return ~dominated
+
+
+def pareto_mask_2d(objectives: np.ndarray) -> np.ndarray:
+    """Sort-based O(N log N) non-dominated mask for the 2-objective case.
+
+    Runs on host numpy.  Semantics match ``pareto_mask_dense`` exactly,
+    including duplicate handling (equal points never dominate each other):
+    sort by x desc then y desc; a point is dominated iff the max y among
+    strictly-greater-x points is >= its y, or a same-x point has strictly
+    greater y.
+    """
+    obj = np.asarray(objectives, np.float64)
+    n, d = obj.shape
+    if d != 2:
+        raise ValueError(f"pareto_mask_2d needs 2 objectives, got {d}")
+    if n == 0:
+        return np.zeros((0,), bool)
+    x, y = obj[:, 0], obj[:, 1]
+    order = np.lexsort((-y, -x))          # x desc, ties broken y desc
+    xs, ys = x[order], y[order]
+    new_group = np.r_[True, xs[1:] != xs[:-1]]
+    group_id = np.cumsum(new_group) - 1
+    group_max = np.maximum.reduceat(ys, np.flatnonzero(new_group))
+    prev_max = np.r_[-np.inf, np.maximum.accumulate(group_max)[:-1]]
+    dominated = (prev_max[group_id] >= ys) | (group_max[group_id] > ys)
+    mask = np.empty(n, bool)
+    mask[order] = ~dominated
+    return mask
+
+
+# N above which the dispatcher refuses the O(N^2) dense path.
+_DENSE_LIMIT = 4096
+
+
+def pareto_mask(objectives: jnp.ndarray, method: str = "auto",
+                block_size: int = 1024) -> jnp.ndarray:
+    """Non-dominated mask. objectives: (N, D), all HIGHER-IS-BETTER.
+
+    method:
+      * "auto"   — sort-based O(N log N) when D == 2; dense for small N;
+                   tiled O(N * block_size) otherwise.
+      * "dense"  — O(N^2) broadcast reference oracle.
+      * "tiled"  — lax.fori_loop over column blocks, any D.
+      * "sorted" — 2-objective sort-based fast path.
+
+    All methods agree exactly (the dense oracle is the spec).
+    """
+    obj = jnp.asarray(objectives)
+    n, d = obj.shape
+    if method == "auto":
+        if d == 2:
+            method = "sorted"
+        elif n <= _DENSE_LIMIT:
+            method = "dense"
+        else:
+            method = "tiled"
+    if method == "dense":
+        return pareto_mask_dense(obj)
+    if method == "tiled":
+        return pareto_mask_tiled(obj, block_size=block_size)
+    if method == "sorted":
+        return jnp.asarray(pareto_mask_2d(np.asarray(obj)))
+    raise ValueError(f"unknown pareto_mask method {method!r}")
+
+
+def _objective_columns(result: DseResult, metrics: Sequence[str]) -> np.ndarray:
+    """(N, D) higher-is-better objective matrix from DseResult fields;
+    a ``neg_`` prefix flips a lower-is-better metric."""
     cols = []
     for m in metrics:
         if m.startswith("neg_"):
-            cols.append(-getattr(result, m[4:]))
+            cols.append(-np.asarray(getattr(result, m[4:]), np.float64))
         else:
-            cols.append(getattr(result, m))
-    return pareto_mask(jnp.stack(cols, axis=-1))
+            cols.append(np.asarray(getattr(result, m), np.float64))
+    return np.stack(cols, axis=-1)
+
+
+def pareto_front(result: DseResult,
+                 metrics: tuple = ("perf_per_area", "neg_energy_j"),
+                 method: str = "auto") -> jnp.ndarray:
+    return pareto_mask(jnp.asarray(_objective_columns(result, metrics)),
+                       method=method)
+
+
+class ParetoArchive:
+    """Streaming non-dominated archive.
+
+    Feed ``update(objectives, indices)`` chunk-by-chunk; the archive keeps
+    exactly the points that would be non-dominated in the concatenation of
+    everything seen so far (same semantics as the dense oracle on the full
+    matrix — duplicates of a non-dominated point are all retained).  State
+    is O(front size); the full objective matrix is never held.
+    """
+
+    def __init__(self, num_objectives: int):
+        self._obj = np.empty((0, num_objectives), np.float64)
+        self._idx = np.empty((0,), np.int64)
+        self._seen = 0  # total points fed (default index stream)
+
+    def __len__(self) -> int:
+        return len(self._idx)
+
+    @property
+    def objectives(self) -> np.ndarray:
+        """(A, D) objectives of the current front."""
+        return self._obj
+
+    @property
+    def indices(self) -> np.ndarray:
+        """Global flat indices of the current front's design points."""
+        return self._idx
+
+    def update(self, objectives: np.ndarray,
+               indices: np.ndarray | None = None) -> None:
+        obj = np.asarray(objectives, np.float64)
+        if obj.ndim != 2 or obj.shape[1] != self._obj.shape[1]:
+            raise ValueError(f"expected (N, {self._obj.shape[1]}) objectives, "
+                             f"got {obj.shape}")
+        idx = (np.arange(self._seen, self._seen + len(obj))
+               if indices is None else np.asarray(indices, np.int64))
+        self._seen += len(obj)
+        # reduce the chunk to its own front first (bounds the merge cost);
+        # stay in host float64 — routing through jnp would downcast to
+        # float32 and drop points that differ only past float32 precision
+        if len(obj) > 1:
+            if obj.shape[1] == 2:
+                m = pareto_mask_2d(obj)
+            else:
+                ge = np.all(obj[None, :, :] >= obj[:, None, :], axis=-1)
+                gt = np.any(obj[None, :, :] > obj[:, None, :], axis=-1)
+                m = ~np.any(ge & gt, axis=1)
+            obj, idx = obj[m], idx[m]
+        if len(obj) == 0:
+            return
+        if len(self._obj):
+            # archive points dominated by any new candidate
+            ge = np.all(obj[None, :, :] >= self._obj[:, None, :], axis=-1)
+            gt = np.any(obj[None, :, :] > self._obj[:, None, :], axis=-1)
+            keep_old = ~np.any(ge & gt, axis=1)
+            # candidates dominated by any surviving archive point
+            old = self._obj[keep_old]
+            ge = np.all(old[None, :, :] >= obj[:, None, :], axis=-1)
+            gt = np.any(old[None, :, :] > obj[:, None, :], axis=-1)
+            keep_new = ~np.any(ge & gt, axis=1)
+            self._obj = np.concatenate([old, obj[keep_new]])
+            self._idx = np.concatenate([self._idx[keep_old], idx[keep_new]])
+        else:
+            self._obj, self._idx = obj, idx
+
+
+def pareto_front_streaming(
+        workload: Workload,
+        space: dict | None = None,
+        metrics: tuple = ("perf_per_area", "neg_energy_j"),
+        surrogate: PPAModels | None = None,
+        chunk_size: int = DEFAULT_CHUNK_SIZE,
+        max_points: int | None = None,
+        seed: int = 0) -> tuple[ParetoArchive, AcceleratorConfig]:
+    """Pareto front of an arbitrarily large design space in O(chunk) memory.
+
+    Streams the space through ``evaluate_space_streaming`` and merges every
+    chunk into a non-dominated archive.  Returns the archive (objectives +
+    global flat indices) and the decoded front configs.
+    """
+    archive = ParetoArchive(len(metrics))
+    for res, idx in evaluate_space_streaming(
+            workload, space, surrogate=surrogate, chunk_size=chunk_size,
+            max_points=max_points, seed=seed):
+        archive.update(_objective_columns(res, metrics), idx)
+    return archive, space_points(archive.indices, space)
 
 
 # ---------------------------------------------------------------------------
 # The paper's normalized reporting (Figs. 4-6)
 # ---------------------------------------------------------------------------
 
-def best_index(result: DseResult, pe_type: jnp.ndarray, code: int,
+def best_index(result: DseResult, pe_type: jnp.ndarray, code: int | None,
                metric: str = "perf_per_area", mode: str = "max") -> int:
-    """Index of the best design of a given PE type under a metric."""
+    """Index of the best design of a given PE type under a metric.
+
+    code=None ranks the whole space.  If no design of the requested PE
+    type exists, falls back to the global best (argmax over all -inf would
+    otherwise silently return 0).
+    """
     vals = np.asarray(getattr(result, metric), np.float64)
-    sel = np.atleast_1d(np.asarray(pe_type)) == code
-    vals = np.where(sel, vals, -np.inf if mode == "max" else np.inf)
+    if code is not None:
+        sel = np.atleast_1d(np.asarray(pe_type)) == code
+        if sel.any():
+            vals = np.where(sel, vals, -np.inf if mode == "max" else np.inf)
     return int(np.argmax(vals) if mode == "max" else np.argmin(vals))
 
 
 def normalized_report(result: DseResult, cfg: AcceleratorConfig) -> dict:
     """Per-PE-type best configs, normalized to the best-perf/area INT16
-    design — the exact normalization of the paper's Figs. 4-6."""
-    ref = best_index(result, cfg.pe_type, PE_INT16, "perf_per_area")
+    design — the exact normalization of the paper's Figs. 4-6.
+
+    If the space contains no INT16 design the global best-perf/area design
+    becomes the reference instead, and the ``"_reference"`` entry records
+    the fallback.  Consumers should skip keys starting with ``_`` when
+    iterating PE types.
+    """
+    types = np.atleast_1d(np.asarray(cfg.pe_type))
+    has_int16 = bool((types == PE_INT16).any())
+    ref = best_index(result, cfg.pe_type,
+                     PE_INT16 if has_int16 else None, "perf_per_area")
     ref_ppa = float(result.perf_per_area[ref])
     ref_energy = float(result.energy_j[ref])
-    report = {}
+    report = {"_reference": dict(
+        pe_type=PE_TYPE_NAMES[int(types[ref])], index=ref,
+        fallback=not has_int16,
+        note=None if has_int16 else
+        "no INT16 design in space; normalized to global best perf/area")}
     for code, name in enumerate(PE_TYPE_NAMES):
-        sel = np.atleast_1d(np.asarray(cfg.pe_type)) == code
+        sel = types == code
         if not sel.any():
             continue
         i_ppa = best_index(result, cfg.pe_type, code, "perf_per_area")
@@ -151,6 +436,11 @@ def normalized_report(result: DseResult, cfg: AcceleratorConfig) -> dict:
             index_best_ppa=i_ppa, index_best_energy=i_en,
         )
     return report
+
+
+def report_pe_types(report: dict) -> dict:
+    """The per-PE-type entries of a normalized report (metadata dropped)."""
+    return {k: v for k, v in report.items() if not k.startswith("_")}
 
 
 def spread(result: DseResult) -> dict:

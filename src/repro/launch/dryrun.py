@@ -222,6 +222,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool = False,
 
             mem = compiled.memory_analysis()
             cost = compiled.cost_analysis()
+            if isinstance(cost, (list, tuple)):  # older jax returns [dict]
+                cost = cost[0] if cost else {}
             hlo = compiled.as_text()
         # trip-count-aware per-device accounting (see hlo_analysis.py;
         # raw cost_analysis counts while bodies ONCE and is kept for ref)

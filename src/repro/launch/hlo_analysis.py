@@ -167,6 +167,13 @@ def comp_multipliers(comps, entry) -> Dict[str, float]:
     return mult
 
 
+def _operand_names(args_str: str) -> List[str]:
+    """Operand list -> instruction names. Newer XLA prints operand types
+    inline ('f32[16,32]{1,0} %x, f32[32,32]{1,0} %y') whose layout braces
+    contain commas, so split on the %-prefixed names instead."""
+    return re.findall(r"%([\w.\-]+)", args_str)
+
+
 def _dot_flops(instr: Instr, symtab: Dict[str, str]) -> float:
     out_dims = _shape_dims(instr.shape)
     if not out_dims:
@@ -177,8 +184,8 @@ def _dot_flops(instr: Instr, symtab: Dict[str, str]) -> float:
     m = re.search(r"dot\(([^)]*)\)", instr.tail)
     if not m:
         return 0.0
-    lhs_name = m.group(1).split(",")[0].strip().lstrip("%")
-    lhs_shape = symtab.get(lhs_name)
+    names = _operand_names(m.group(1))
+    lhs_shape = symtab.get(names[0]) if names else None
     cm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", instr.tail)
     if lhs_shape is None or cm is None:
         return 0.0
@@ -198,7 +205,7 @@ def _dus_update_bytes(instr: Instr, symtab: Dict[str, str]) -> float:
     m = re.search(r"dynamic-update-slice\(([^)]*)\)", instr.tail)
     if not m:
         return _shape_bytes(instr.shape)
-    ops = [o.strip().lstrip("%") for o in m.group(1).split(",")]
+    ops = _operand_names(m.group(1))
     upd = symtab.get(ops[1]) if len(ops) > 1 else None
     return _shape_bytes(upd) if upd else _shape_bytes(instr.shape)
 

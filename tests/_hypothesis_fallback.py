@@ -1,0 +1,93 @@
+"""Tiny deterministic stand-in for the ``hypothesis`` API the suite uses.
+
+Some CI images don't ship hypothesis; rather than skipping whole modules
+(which would drop every non-property test in them too), test modules do
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hypothesis_fallback import given, settings, st
+
+The fallback re-runs the test body over ``max_examples`` pseudo-random
+draws from a fixed seed — no shrinking, no database, but the same
+call contract for the strategies the suite uses: ``integers``,
+``sampled_from``, ``floats``, ``booleans`` and ``.map``.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+
+import numpy as np
+
+
+class _Strategy:
+    def __init__(self, sample):
+        self._sample = sample  # rng -> value
+
+    def map(self, fn):
+        return _Strategy(lambda rng: fn(self._sample(rng)))
+
+    def filter(self, pred, _tries: int = 100):
+        def sample(rng):
+            for _ in range(_tries):
+                v = self._sample(rng)
+                if pred(v):
+                    return v
+            raise ValueError("filter predicate never satisfied")
+        return _Strategy(sample)
+
+
+class st:
+    """Namespace mirroring ``hypothesis.strategies``."""
+
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Strategy(
+            lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+    @staticmethod
+    def sampled_from(elements) -> _Strategy:
+        items = list(elements)
+        return _Strategy(lambda rng: items[int(rng.integers(len(items)))])
+
+    @staticmethod
+    def floats(min_value: float = 0.0, max_value: float = 1.0,
+               **_kw) -> _Strategy:
+        return _Strategy(
+            lambda rng: float(rng.uniform(min_value, max_value)))
+
+    @staticmethod
+    def booleans() -> _Strategy:
+        return _Strategy(lambda rng: bool(rng.integers(2)))
+
+
+def settings(max_examples: int = 20, **_kw):
+    """Records max_examples on the test fn (deadline etc. are ignored)."""
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(**strategies):
+    """Runs the test over deterministic draws of the keyword strategies."""
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            # read at call time so `@settings` works above OR below `@given`
+            n = getattr(wrapper, "_fallback_max_examples",
+                        getattr(fn, "_fallback_max_examples", 10))
+            rng = np.random.default_rng(0x5EED)
+            for _ in range(n):
+                drawn = {k: s._sample(rng) for k, s in strategies.items()}
+                fn(*args, **drawn, **kwargs)
+        # hide the strategy-filled params so pytest doesn't treat them as
+        # fixtures (hypothesis does the same)
+        sig = inspect.signature(fn)
+        wrapper.__signature__ = sig.replace(parameters=[
+            p for name, p in sig.parameters.items()
+            if name not in strategies])
+        return wrapper
+    return deco

@@ -3,7 +3,10 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # CI images without hypothesis: deterministic fallback
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core import (PAPER_WORKLOADS, enumerate_space, evaluate_space,
                         fit_ppa_models, make_config, normalized_report,

@@ -1,0 +1,232 @@
+"""Streaming DSE engine: mixed-radix enumeration, chunked evaluation,
+tiled/sorted Pareto masks vs the dense oracle, non-dominated archive."""
+
+import itertools
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # CI images without hypothesis: deterministic fallback
+    from _hypothesis_fallback import given, settings, st
+
+from repro.core import (PAPER_WORKLOADS, ParetoArchive, enumerate_space,
+                        evaluate_space, evaluate_space_streaming,
+                        iter_space_chunks, normalized_report,
+                        pareto_front_streaming, pareto_mask,
+                        pareto_mask_2d, pareto_mask_dense, pareto_mask_tiled,
+                        report_pe_types, space_points, space_size)
+from repro.core.arch import DEFAULT_SPACE, AcceleratorConfig, PE_TYPE_CODES
+
+# A small space (2*2*2*1*2*1*5*1 = 80 points) keeps evaluation cheap.
+SMALL_SPACE = dict(
+    pe_rows=(8, 12), pe_cols=(8, 14), gbuf_kb=(54.0, 108.0),
+    spad_ifmap=(12,), spad_filter=(112, 224), spad_psum=(16,),
+    pe_type=tuple(range(5)), bandwidth_gbps=(25.6,),
+)
+
+
+def _config_matrix(cfg: AcceleratorConfig) -> np.ndarray:
+    return np.stack([np.asarray(getattr(cfg, f), np.float64)
+                     for f in AcceleratorConfig._fields], axis=-1)
+
+
+class TestMixedRadixEnumeration:
+    def test_matches_itertools_product(self):
+        axes = [SMALL_SPACE[k] for k in AcceleratorConfig._fields]
+        # configs store float32 — the reference must round the same way
+        ref = np.array(list(itertools.product(*axes)),
+                       np.float32).astype(np.float64)
+        got = _config_matrix(enumerate_space(SMALL_SPACE))
+        np.testing.assert_array_equal(got, ref)
+        assert space_size(SMALL_SPACE) == len(ref)
+
+    def test_default_space_size(self):
+        assert space_size() == 27000
+
+    def test_space_points_decodes_subsets(self):
+        full = _config_matrix(enumerate_space(SMALL_SPACE))
+        idx = np.array([0, 7, 13, 79, 42])
+        got = _config_matrix(space_points(idx, SMALL_SPACE))
+        np.testing.assert_array_equal(got, full[idx])
+
+    @given(chunk=st.integers(1, 30))
+    @settings(max_examples=10, deadline=None)
+    def test_chunks_concat_to_full_space(self, chunk):
+        full = _config_matrix(enumerate_space(SMALL_SPACE))
+        parts, idxs = [], []
+        for cfg, idx in iter_space_chunks(SMALL_SPACE, chunk_size=chunk):
+            assert len(idx) <= chunk
+            parts.append(_config_matrix(cfg))
+            idxs.append(idx)
+        np.testing.assert_array_equal(np.concatenate(parts), full)
+        np.testing.assert_array_equal(np.concatenate(idxs), np.arange(80))
+
+    def test_subsample_matches_enumerate_space(self):
+        sub = _config_matrix(enumerate_space(SMALL_SPACE, max_points=17,
+                                             seed=3))
+        parts = [_config_matrix(c) for c, _ in iter_space_chunks(
+            SMALL_SPACE, chunk_size=5, max_points=17, seed=3)]
+        np.testing.assert_array_equal(np.concatenate(parts), sub)
+
+
+class TestChunkedEvaluation:
+    @pytest.fixture(scope="class")
+    def workload(self):
+        return PAPER_WORKLOADS["resnet20-cifar10"]()
+
+    @pytest.fixture(scope="class")
+    def one_shot(self, workload):
+        space = enumerate_space(SMALL_SPACE)
+        return space, evaluate_space(space, workload)
+
+    @pytest.mark.parametrize("chunk", [7, 16, 80, 100])
+    def test_chunked_equals_one_shot(self, one_shot, workload, chunk):
+        """Includes non-divisible final chunks (80 % 7, 80 % 16 == 0,
+        chunk == N, chunk > N)."""
+        space, ref = one_shot
+        got = evaluate_space(space, workload, chunk_size=chunk)
+        for a, b in zip(ref, got):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-6)
+
+    def test_streaming_equals_one_shot(self, one_shot, workload):
+        _, ref = one_shot
+        chunks = list(evaluate_space_streaming(workload, SMALL_SPACE,
+                                               chunk_size=13))
+        for f, field in enumerate(ref._fields):
+            got = np.concatenate([np.asarray(res[f]) for res, _ in chunks])
+            np.testing.assert_allclose(np.asarray(ref[f]), got, rtol=1e-6)
+        idx = np.concatenate([i for _, i in chunks])
+        np.testing.assert_array_equal(idx, np.arange(80))
+
+
+def _random_objectives(rng, n, d, dupes=True):
+    pts = rng.normal(size=(n, d))
+    # quantize to force ties / duplicates — the hard cases for exactness
+    if dupes:
+        pts = np.round(pts, 1)
+        pts[rng.integers(0, n, n // 4)] = pts[rng.integers(0, n, n // 4)]
+    return pts
+
+
+class TestParetoMaskEquivalence:
+    @given(seed=st.integers(0, 100), n=st.integers(1, 150),
+           d=st.integers(2, 4), block=st.integers(1, 64))
+    @settings(max_examples=25, deadline=None)
+    def test_tiled_equals_dense(self, seed, n, d, block):
+        pts = _random_objectives(np.random.default_rng(seed), n, d)
+        dense = np.asarray(pareto_mask_dense(jnp.asarray(pts)))
+        tiled = np.asarray(pareto_mask_tiled(jnp.asarray(pts),
+                                             block_size=block))
+        np.testing.assert_array_equal(dense, tiled)
+
+    @given(seed=st.integers(0, 100), n=st.integers(1, 200))
+    @settings(max_examples=25, deadline=None)
+    def test_sorted_equals_dense(self, seed, n):
+        pts = _random_objectives(np.random.default_rng(seed), n, 2)
+        dense = np.asarray(pareto_mask_dense(jnp.asarray(pts)))
+        np.testing.assert_array_equal(dense, pareto_mask_2d(pts))
+
+    def test_duplicates_of_front_point_all_kept(self):
+        pts = np.array([[1.0, 1.0], [1.0, 1.0], [0.0, 0.0]])
+        for method in ("dense", "tiled", "sorted"):
+            mask = np.asarray(pareto_mask(jnp.asarray(pts), method=method))
+            np.testing.assert_array_equal(mask, [True, True, False])
+
+    def test_dispatcher_methods_agree(self):
+        pts = _random_objectives(np.random.default_rng(7), 300, 3)
+        auto = np.asarray(pareto_mask(jnp.asarray(pts)))
+        dense = np.asarray(pareto_mask(jnp.asarray(pts), method="dense"))
+        np.testing.assert_array_equal(auto, dense)
+
+    def test_empty_and_singleton(self):
+        assert np.asarray(pareto_mask(jnp.zeros((0, 2)))).shape == (0,)
+        for method in ("dense", "tiled", "sorted"):
+            assert np.asarray(pareto_mask(jnp.zeros((1, 2)),
+                                          method=method)).all()
+
+
+class TestParetoArchive:
+    @given(seed=st.integers(0, 100), n=st.integers(1, 200),
+           chunk=st.integers(1, 64))
+    @settings(max_examples=25, deadline=None)
+    def test_streamed_front_equals_dense(self, seed, n, chunk):
+        pts = _random_objectives(np.random.default_rng(seed), n, 2)
+        dense = set(np.flatnonzero(
+            np.asarray(pareto_mask_dense(jnp.asarray(pts)))).tolist())
+        archive = ParetoArchive(2)
+        for lo in range(0, n, chunk):
+            archive.update(pts[lo:lo + chunk],
+                           np.arange(lo, min(lo + chunk, n)))
+        assert set(archive.indices.tolist()) == dense
+        np.testing.assert_array_equal(archive.objectives,
+                                      pts[archive.indices])
+
+    def test_order_invariance(self):
+        pts = _random_objectives(np.random.default_rng(1), 120, 3)
+        a1, a2 = ParetoArchive(3), ParetoArchive(3)
+        a1.update(pts, np.arange(120))
+        perm = np.random.default_rng(2).permutation(120)
+        for lo in range(0, 120, 37):
+            sel = perm[lo:lo + 37]
+            a2.update(pts[sel], sel)
+        assert set(a1.indices.tolist()) == set(a2.indices.tolist())
+
+    def test_rejects_wrong_width(self):
+        archive = ParetoArchive(2)
+        with pytest.raises(ValueError):
+            archive.update(np.zeros((4, 3)))
+
+    def test_preserves_float64_precision(self):
+        """Chunk self-reduction must not round through float32: these two
+        points differ only past float32 precision and neither dominates."""
+        archive = ParetoArchive(2)
+        archive.update(np.array([[1.0 + 1e-12, 0.0], [1.0, 1.0]]))
+        assert set(archive.indices.tolist()) == {0, 1}
+
+
+class TestStreamingFront:
+    def test_end_to_end_matches_dense(self):
+        wl = PAPER_WORKLOADS["resnet20-cifar10"]()
+        space = enumerate_space(SMALL_SPACE)
+        res = evaluate_space(space, wl)
+        obj = np.stack([np.asarray(res.perf_per_area, np.float64),
+                        -np.asarray(res.energy_j, np.float64)], -1)
+        dense = set(np.flatnonzero(
+            np.asarray(pareto_mask_dense(jnp.asarray(obj)))).tolist())
+        archive, front_cfg = pareto_front_streaming(
+            wl, SMALL_SPACE, chunk_size=13)
+        assert set(archive.indices.tolist()) == dense
+        got = _config_matrix(front_cfg)
+        ref = _config_matrix(space)[archive.indices]
+        np.testing.assert_array_equal(got, ref)
+
+
+class TestNormalizedReportFallback:
+    def test_no_int16_falls_back_to_global_best(self):
+        wl = PAPER_WORKLOADS["resnet20-cifar10"]()
+        space_no16 = dict(SMALL_SPACE, pe_type=tuple(
+            c for name, c in PE_TYPE_CODES.items() if name != "int16"))
+        space = enumerate_space(space_no16)
+        res = evaluate_space(space, wl)
+        rep = normalized_report(res, space)
+        assert rep["_reference"]["fallback"] is True
+        assert "int16" not in report_pe_types(rep)
+        # normalized to the global best perf/area -> max norm is exactly 1
+        norms = [r["norm_perf_per_area"]
+                 for r in report_pe_types(rep).values()]
+        assert max(norms) == pytest.approx(1.0)
+        assert all(np.isfinite(v) and v > 0 for v in norms)
+
+    def test_with_int16_no_fallback(self):
+        wl = PAPER_WORKLOADS["resnet20-cifar10"]()
+        space = enumerate_space(SMALL_SPACE)
+        res = evaluate_space(space, wl)
+        rep = normalized_report(res, space)
+        assert rep["_reference"] == dict(pe_type="int16",
+                                         index=rep["_reference"]["index"],
+                                         fallback=False, note=None)
+        assert rep["int16"]["norm_perf_per_area"] == pytest.approx(1.0)

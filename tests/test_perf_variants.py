@@ -132,8 +132,10 @@ class TestHLOAnalysis:
         ana = analyze(c.as_text())
         per_iter = 2 * 16 * 32 * 32
         assert ana["flops"] == pytest.approx(7 * per_iter, rel=0.01)
-        raw = c.cost_analysis().get("flops", 0)
-        assert raw == pytest.approx(per_iter, rel=0.01)
+        raw = c.cost_analysis()
+        if isinstance(raw, (list, tuple)):  # older jax returns [dict]
+            raw = raw[0]
+        assert raw.get("flops", 0) == pytest.approx(per_iter, rel=0.01)
 
     def test_collectives_counted(self):
         import os

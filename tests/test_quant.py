@@ -4,7 +4,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # CI images without hypothesis: deterministic fallback
+    from _hypothesis_fallback import given, settings, st
 
 from repro.quant import (affine_fake_quant, dequantize_int4, dequantize_int8,
                          dequantize_pow2, fake_quant_act, fake_quant_weight,
