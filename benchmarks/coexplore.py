@@ -1,0 +1,62 @@
+"""Joint accelerator x model co-exploration: Figs. 5-6 over the JOINT space.
+
+The paper's Pareto story — accuracy vs hardware efficiency per PE type —
+re-run with (model, accelerator config) as the design point: the default
+9-model axis (depth/width/resolution-scaled ResNet-CIFAR, VGG variants,
+seq-scaled transformer GEMMs) times the full 27k accelerator grid = 243k
+joint points, streamed through the 3-objective (accuracy, MACs/s/mm^2,
+-pJ/MAC) archive in O(chunk) memory — the joint objective matrix is never
+materialized.
+
+Claim under test (acceptance criterion, best-vs-best semantics — see
+``lightpe_claim``): for every model, the best LightPE design beats the
+best INT16 design on perf-per-area AND on energy-per-MAC while staying
+within 1pp of FP32 accuracy.  ``max_points`` subsamples the joint space
+(the --fast CI knob in benchmarks/run.py).
+"""
+
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import emit, maxrss_mb
+from repro.core import (PE_TYPE_NAMES, coexplore_front, coexplore_report,
+                        default_model_set)
+
+
+def run(max_points: int | None = None):
+    rows = []
+    models = default_model_set()
+    t0 = time.perf_counter()
+    front = coexplore_front(models, max_points=max_points)
+    dt = time.perf_counter() - t0
+    rep = coexplore_report(front)
+    rows.append(emit(
+        "coexplore_joint_sweep", dt * 1e6,
+        f"models={len(models)};points={front.points_evaluated};"
+        f"space={rep['space_size']};"
+        f"points_per_sec={front.points_evaluated / dt:.0f};"
+        f"front={rep['front_size']};peak_rss_mb={maxrss_mb():.0f}"))
+    mix = rep["front_counts"]["by_pe_type"]
+    rows.append(emit(
+        "coexplore_front_mix", 0.0,
+        ";".join(f"{pe}={mix.get(pe, 0)}" for pe in PE_TYPE_NAMES)))
+    claim = rep["claim"]
+    for name, v in claim["per_model"].items():
+        lp1 = v.get("lightpe1", {})
+        rows.append(emit(
+            f"coexplore_{name}", 0.0,
+            f"ok={v['ok']};"
+            f"lpe1_beats_int16_bests={lp1.get('beats_int16_bests')};"
+            f"lpe1_acc_gap_pp={lp1.get('acc_gap_vs_fp32_pp', 0.0):.2f};"
+            f"front_points={rep['front_counts']['by_model'].get(name, 0)}"))
+    rows.append(emit(
+        "coexplore_claim", 0.0,
+        f"lightpe_beats_int16_bests_within_1pp={claim['holds']};"
+        f"indeterminate_models={claim['indeterminate']};"
+        f"paper_claim=LightPEs_jointly_pareto_optimal"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

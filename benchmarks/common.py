@@ -1,10 +1,16 @@
-"""Shared benchmark utilities: timing + CSV emission."""
+"""Shared benchmark utilities: timing, CSV emission, peak-RSS readout."""
 
 from __future__ import annotations
 
+import resource
 import time
 
 import jax
+
+
+def maxrss_mb() -> float:
+    """Process high-water-mark RSS in MB (Linux ru_maxrss is in KB)."""
+    return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
 
 
 def time_call(fn, *args, iters: int = 3, warmup: int = 1):

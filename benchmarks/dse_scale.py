@@ -13,12 +13,11 @@ increasing order, so a bounded-memory engine shows a near-flat column.
 
 from __future__ import annotations
 
-import resource
 import time
 
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, maxrss_mb
 from repro.core import (DEFAULT_CHUNK_SIZE, DEFAULT_SPACE, PAPER_WORKLOADS,
                         ParetoArchive, enumerate_space, evaluate_space,
                         pareto_front_streaming, pareto_mask, space_size)
@@ -31,10 +30,6 @@ SCALED_SPACE = dict(
     pe_cols=(4, 8, 12, 14, 16, 20, 24, 28, 32, 48),
     gbuf_kb=(27.0, 54.0, 108.0, 162.0, 216.0, 324.0, 432.0, 864.0),
 )
-
-
-def _maxrss_mb() -> float:
-    return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
 
 
 def _oracle_check(wl, max_points: int) -> bool:
@@ -78,7 +73,7 @@ def run(sizes: tuple = (3000, 27000, 216000)):
         rows.append(emit(
             f"dse_scale_n{total}", dt * 1e6,
             f"points_per_sec={total / dt:.0f};front={len(archive)};"
-            f"peak_rss_mb={_maxrss_mb():.0f};chunk={DEFAULT_CHUNK_SIZE}"))
+            f"peak_rss_mb={maxrss_mb():.0f};chunk={DEFAULT_CHUNK_SIZE}"))
     return rows
 
 

@@ -20,9 +20,13 @@ import traceback
 # DSE point cap + dse_scale sizes under --fast (full grids otherwise).
 FAST_DSE_POINTS = 1500
 FAST_SCALE_SIZES = (1000, 3000)
+# --fast cap for the JOINT (model x accelerator) sweep: ~500 points per
+# model of the default 9-model axis.
+FAST_COEXPLORE_POINTS = 4500
 
 # Benches whose rows land in BENCH_dse.json.
-DSE_BENCHES = ("fig2", "fig4", "fig56", "dse_transformers", "dse_scale")
+DSE_BENCHES = ("fig2", "fig4", "fig56", "dse_transformers", "dse_scale",
+               "coexplore")
 
 
 def main() -> None:
@@ -35,9 +39,9 @@ def main() -> None:
                     help="where to write the DSE bench rows")
     args = ap.parse_args()
 
-    from benchmarks import (dse_scale, dse_transformers, fig2_pe_spread,
-                            fig3_ppa_fit, fig4_dse, fig56_pareto,
-                            kernels_bench, roofline)
+    from benchmarks import (coexplore, dse_scale, dse_transformers,
+                            fig2_pe_spread, fig3_ppa_fit, fig4_dse,
+                            fig56_pareto, kernels_bench, roofline)
     mp = FAST_DSE_POINTS if args.fast else None
     benches = {
         "fig2": lambda: fig2_pe_spread.run(max_points=mp),
@@ -50,6 +54,8 @@ def main() -> None:
         "dse_transformers": lambda: dse_transformers.run(max_points=mp),
         "dse_scale": (lambda: dse_scale.run(sizes=FAST_SCALE_SIZES))
         if args.fast else dse_scale.run,
+        "coexplore": lambda: coexplore.run(
+            max_points=FAST_COEXPLORE_POINTS if args.fast else None),
         "roofline": roofline.run,
     }
     print("name,us_per_call,derived")

@@ -1,4 +1,5 @@
-"""Generate EXPERIMENTS.md markdown tables from results/*.json."""
+"""Generate EXPERIMENTS.md markdown tables from results/*.json and
+BENCH_dse.json (``bench_dse`` mode, e.g. the ``coexplore`` section)."""
 import glob, json, os, sys
 sys.path.insert(0, "src")
 
@@ -52,6 +53,23 @@ def perf_table():
                     f"{t_c:.2e} | {t_m:.2e} | {t_l:.2e} | {dom[0]} | {max(t_c,t_m,t_l):.3f}s |")
     return rows
 
+def bench_dse_table(section=None, path="BENCH_dse.json"):
+    """Render BENCH_dse.json sections (fig2/fig4/fig56/dse_scale/coexplore)
+    as markdown tables; ``section`` selects one (e.g. 'coexplore')."""
+    data = json.load(open(path))
+    out = []
+    for sec, entries in data.items():
+        if section and sec != section:
+            continue
+        out += [f"### {sec}", "",
+                "| name | us_per_call | derived |", "|---|---:|---|"]
+        for e in entries:
+            name, us, derived = e.split(",", 2)
+            out.append(f"| {name} | {float(us):.1f} | "
+                       f"{derived.replace(';', ' ; ')} |")
+        out.append("")
+    return out
+
 if __name__ == "__main__":
     which = sys.argv[1]
     if which == "dryrun":
@@ -60,3 +78,6 @@ if __name__ == "__main__":
         print("\n".join(roofline_table()))
     elif which == "perf":
         print("\n".join(perf_table()))
+    elif which == "bench_dse":
+        print("\n".join(bench_dse_table(
+            sys.argv[2] if len(sys.argv) > 2 else None)))

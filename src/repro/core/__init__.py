@@ -1,21 +1,33 @@
 """QADAM core: quantization-aware PPA modeling + DSE (the paper's contribution).
 
 Submodules:
-  arch      — accelerator design space (PE array, buffers, PE types)
+  arch      — accelerator design space (PE array, buffers, PE types) + the
+              joint (model x accelerator) mixed-radix space
   pe        — per-PE-type energy/area/delay models (FP32/INT16/LightPE-1/2/INT8)
   energy    — memory-hierarchy energy constants
   dataflow  — row-stationary analytical cost model (vmap-able)
   synth     — synthesis oracle (stand-in for Synopsys DC + FreePDK45)
   ppa       — polynomial-regression PPA surrogates + k-fold CV selection
   dse       — vectorized design-space exploration + Pareto analysis
-  workloads — layer-wise workload extraction (paper CNNs + assigned archs)
+  workloads — layer-wise workload extraction (paper CNNs + assigned archs
+              + parameterized model families)
+  accuracy  — per-(model, PE-type) accuracy surrogate with QAT calibration
+  coexplore — joint accelerator x model co-exploration engine
 """
 
+from repro.core.accuracy import (AccuracySurrogate, capacity_scale,
+                                 seeded_base_accuracy)
 from repro.core.arch import (AcceleratorConfig, make_config, stack_configs,
                              enumerate_space, iter_space_chunks, space_points,
-                             space_size, DEFAULT_SPACE,
+                             space_size, joint_space_size, joint_space_points,
+                             iter_joint_space_chunks, DEFAULT_SPACE,
                              PE_TYPE_NAMES, PE_TYPE_CODES)
-from repro.core.dse import (evaluate_space, evaluate_space_streaming,
+from repro.core.coexplore import (COEXPLORE_METRICS, CoexploreFront,
+                                  ModelEntry, coexplore_front,
+                                  coexplore_report, default_model_set,
+                                  lightpe_claim, model_entry)
+from repro.core.dse import (evaluate_chunk, evaluate_space,
+                            evaluate_space_streaming,
                             pareto_front, pareto_front_streaming,
                             pareto_mask, pareto_mask_dense, pareto_mask_tiled,
                             pareto_mask_2d, ParetoArchive,
@@ -24,18 +36,25 @@ from repro.core.dse import (evaluate_space, evaluate_space_streaming,
 from repro.core.ppa import fit_ppa_models, PPAModels, r2, mape
 from repro.core.synth import synthesize, SynthResult
 from repro.core.workloads import (Workload, LayerSpec, PAPER_WORKLOADS,
-                                  transformer_workload, vgg16, resnet_cifar,
-                                  resnet34, resnet50)
+                                  MODEL_FAMILIES, transformer_workload,
+                                  transformer_gemm, vgg16, resnet_cifar,
+                                  resnet34, resnet50, workload_macs)
 
 __all__ = [
     "AcceleratorConfig", "make_config", "stack_configs", "enumerate_space",
-    "iter_space_chunks", "space_points", "space_size", "DEFAULT_SPACE",
-    "PE_TYPE_NAMES", "PE_TYPE_CODES", "evaluate_space",
-    "evaluate_space_streaming", "pareto_front", "pareto_front_streaming",
+    "iter_space_chunks", "space_points", "space_size", "joint_space_size",
+    "joint_space_points", "iter_joint_space_chunks", "DEFAULT_SPACE",
+    "PE_TYPE_NAMES", "PE_TYPE_CODES",
+    "AccuracySurrogate", "capacity_scale", "seeded_base_accuracy",
+    "COEXPLORE_METRICS", "CoexploreFront", "ModelEntry", "coexplore_front",
+    "coexplore_report", "default_model_set", "lightpe_claim", "model_entry",
+    "evaluate_chunk", "evaluate_space", "evaluate_space_streaming",
+    "pareto_front", "pareto_front_streaming",
     "pareto_mask", "pareto_mask_dense", "pareto_mask_tiled", "pareto_mask_2d",
     "ParetoArchive", "normalized_report", "report_pe_types", "spread",
     "DseResult", "DEFAULT_CHUNK_SIZE",
     "fit_ppa_models", "PPAModels", "r2", "mape", "synthesize", "SynthResult",
-    "Workload", "LayerSpec", "PAPER_WORKLOADS", "transformer_workload",
-    "vgg16", "resnet_cifar", "resnet34", "resnet50",
+    "Workload", "LayerSpec", "PAPER_WORKLOADS", "MODEL_FAMILIES",
+    "transformer_workload", "transformer_gemm", "vgg16", "resnet_cifar",
+    "resnet34", "resnet50", "workload_macs",
 ]

@@ -1,0 +1,177 @@
+"""Per-(model, PE-type) accuracy surrogate for joint co-exploration.
+
+The paper's Figs. 5-6 put top-1 accuracy on one axis of the Pareto story;
+this module is the model-side analogue of the hardware cost model: a cheap
+predictor of top-1 accuracy for any (model, PE type) pair in the joint
+space.
+
+Provenance / calibration contract
+---------------------------------
+* **Seeded deltas** come from ``pe.ACC_DELTA_BY_NAME`` — mean top-1 deltas
+  vs FP32 in percentage points, keyed by PE-type *name* (never by array
+  position), transcribed from the paper's Figs. 5-6 narrative ("on par";
+  LightPE-1 worst-case ~0.9pp on the smallest model).
+* **Capacity scaling** reproduces the paper's observation that the
+  quantization gap *shrinks with model size*: a delta is multiplied by
+  ``capacity_scale(macs)`` which is 1.0 at ResNet-20/CIFAR capacity and
+  decays as ``(ref/macs)**0.2`` for larger models (never amplified above
+  the seeded small-model value, floored at 0.25).
+* **Base accuracies** are seeded from published FP32 results for the paper
+  models (``BASE_ACC_SEED``); scaled family members fall back to their
+  canonical member's seed, and unknown models to a smooth monotone
+  capacity curve.  For non-classification workloads (transformer GEMMs)
+  the value is a quality *proxy* on the same [0, 1] scale — fine for
+  Pareto ordering, not an absolute claim.
+* **Calibration** beats every seed: ``calibrate(model, pe, acc)`` records
+  a measured accuracy and ``load_qat_results`` ingests the table written
+  by ``examples/train_qat.py --mode cnn`` (``results/qat_pareto.json``).
+  A measured FP32 point rebases the whole family (seeded deltas then apply
+  to the measured base); a measured (model, pe) point is returned verbatim.
+"""
+
+from __future__ import annotations
+
+import json
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.arch import PE_TYPE_CODES, PE_TYPE_NAMES
+from repro.core.pe import ACC_DELTA_BY_NAME
+
+# Reference capacity: ResNet-20 / CIFAR-10 forward MACs — the smallest
+# paper model, where the paper reports the largest quantization gaps.
+REF_MACS = 4.1e7
+
+# Published FP32 top-1 seeds for the paper's models (fractions).
+BASE_ACC_SEED = {
+    "resnet20-cifar10": 0.916,
+    "resnet32-cifar10": 0.925,
+    "resnet44-cifar10": 0.927,
+    "resnet56-cifar10": 0.930,
+    "resnet20-cifar100": 0.683,
+    "resnet56-cifar100": 0.716,
+    "vgg16-cifar10": 0.938,
+    "vgg16-cifar100": 0.724,
+    "vgg16-imagenet": 0.715,
+    "resnet34-imagenet": 0.733,
+    "resnet50-imagenet": 0.761,
+}
+
+
+def _pe_name(pe_type) -> str:
+    """Normalize a PE type given as name or code to its name."""
+    if isinstance(pe_type, str):
+        if pe_type not in PE_TYPE_CODES:
+            raise KeyError(f"unknown PE type {pe_type!r}; "
+                           f"known: {PE_TYPE_NAMES}")
+        return pe_type
+    return PE_TYPE_NAMES[int(pe_type)]
+
+
+def _strip_scale_suffix(name: str) -> str:
+    """Canonical family member of a scaled model name.
+
+    Scale suffixes are the ``-w<mult>`` / ``-r<res>`` tags appended by the
+    workload families ('resnet20-cifar10-w2-r16' -> 'resnet20-cifar10').
+    """
+    parts = name.split("-")
+    while len(parts) > 1 and (
+            (parts[-1][:1] == "w" and parts[-1][1:]
+             .replace(".", "", 1).isdigit())
+            or (parts[-1][:1] == "r" and parts[-1][1:].isdigit())):
+        parts.pop()
+    return "-".join(parts)
+
+
+def capacity_scale(macs: float) -> float:
+    """Quantization-gap multiplier: 1.0 at REF_MACS, shrinking with size."""
+    return float(np.clip((REF_MACS / max(float(macs), 1.0)) ** 0.2,
+                         0.25, 1.0))
+
+
+def seeded_base_accuracy(model_name: str, macs: float | None = None) -> float:
+    """FP32 base accuracy: exact seed, canonical-member seed for scaled
+    names, else a smooth monotone capacity curve (proxy for unseeded
+    models — see the module docstring's provenance contract)."""
+    if model_name in BASE_ACC_SEED:
+        return BASE_ACC_SEED[model_name]
+    stripped = _strip_scale_suffix(model_name)
+    if stripped in BASE_ACC_SEED:
+        return BASE_ACC_SEED[stripped]
+    m = 1.0 if macs is None else max(float(macs), 1.0)
+    return float(np.clip(0.72 + 0.045 * np.log10(m / 1e6), 0.30, 0.99))
+
+
+class AccuracySurrogate:
+    """Name-keyed accuracy predictor with a measurement-calibration hook.
+
+    Seeds (deltas + base accuracies) follow the module-docstring contract;
+    every prediction path is keyed by PE-type *name* — the positional
+    ``ACC_DELTA_PP`` array in ``pe.py`` is only a derived view.
+    """
+
+    def __init__(self, deltas_pp: dict[str, float] | None = None):
+        unknown = set(deltas_pp or ()) - set(PE_TYPE_NAMES)
+        if unknown:
+            raise KeyError(f"unknown PE types in deltas: {sorted(unknown)}")
+        self._deltas = dict(ACC_DELTA_BY_NAME, **(deltas_pp or {}))
+        self._measured: dict[tuple[str, str], float] = {}
+
+    # -- seeded prediction ---------------------------------------------------
+
+    def delta_pp(self, pe_type, macs: float | None = None) -> float:
+        """Accuracy delta vs FP32 (pp) for one PE type at a capacity."""
+        d = self._deltas[_pe_name(pe_type)]
+        return d * (1.0 if macs is None else capacity_scale(macs))
+
+    def delta_array(self, macs: float | None = None) -> jnp.ndarray:
+        """Thin positional view aligned with ``PE_TYPE_NAMES`` — the jit
+        consumer form (gather by pe_type code)."""
+        return jnp.array([self.delta_pp(n, macs) for n in PE_TYPE_NAMES])
+
+    # -- calibration ---------------------------------------------------------
+
+    def calibrate(self, model_name: str, pe_type, accuracy: float) -> None:
+        """Record a measured top-1 accuracy (fraction) — overrides seeds."""
+        self._measured[(model_name, _pe_name(pe_type))] = float(accuracy)
+
+    def load_qat_results(self, path: str = "results/qat_pareto.json",
+                         model_name: str = "resnet20-cifar10") -> int:
+        """Ingest ``examples/train_qat.py --mode cnn`` output (a
+        ``{pe_name: {"top1_mean": ...}}`` table). Returns #entries loaded."""
+        with open(path) as f:
+            table = json.load(f)
+        n = 0
+        for pe, row in table.items():
+            if pe in PE_TYPE_CODES and "top1_mean" in row:
+                self.calibrate(model_name, pe, row["top1_mean"])
+                n += 1
+        return n
+
+    # -- prediction ----------------------------------------------------------
+
+    def predict(self, model_name: str, pe_type,
+                macs: float | None = None,
+                base_acc: float | None = None) -> float:
+        """Top-1 accuracy (fraction) of ``model_name`` under ``pe_type``.
+
+        Priority: measured (model, pe) point > measured FP32 base + seeded
+        delta > supplied/seeded base + seeded delta.
+        """
+        pe = _pe_name(pe_type)
+        if (model_name, pe) in self._measured:
+            return self._measured[(model_name, pe)]
+        base = self._measured.get((model_name, "fp32"))
+        if base is None:
+            base = (base_acc if base_acc is not None
+                    else seeded_base_accuracy(model_name, macs))
+        return base + self.delta_pp(pe, macs) / 100.0
+
+    def predict_per_type(self, model_name: str,
+                         macs: float | None = None,
+                         base_acc: float | None = None) -> np.ndarray:
+        """Predicted accuracy for every PE type, aligned with
+        ``PE_TYPE_NAMES`` (the per-model accuracy column of the joint DSE)."""
+        return np.array([self.predict(model_name, n, macs, base_acc)
+                         for n in PE_TYPE_NAMES])

@@ -190,6 +190,70 @@ def enumerate_space(space: dict | None = None,
     return space_points(idx, space)
 
 
+# ---------------------------------------------------------------------------
+# Joint (model x accelerator) space: the co-exploration axis (QUIDAM/QAPPA).
+#
+# The workload axis is one more mixed-radix digit, the SLOWEST-varying one:
+# joint flat index = model_id * space_size(space) + accelerator_index.  That
+# ordering matches ``itertools.product(models, accel_points)`` and means a
+# contiguous index range never straddles two models, so chunked walks keep
+# fixed layer shapes per chunk (one jit compilation per distinct layer
+# count, exactly like the single-workload path).
+# ---------------------------------------------------------------------------
+
+def joint_space_size(space: dict | None = None, num_models: int = 1) -> int:
+    """Number of (model, accelerator-config) points in the joint space."""
+    if num_models < 1:
+        raise ValueError(f"num_models must be >= 1, got {num_models}")
+    return num_models * space_size(space)
+
+
+def joint_space_points(
+        indices: np.ndarray, space: dict | None = None,
+        num_models: int = 1) -> tuple[np.ndarray, AcceleratorConfig]:
+    """Decode flat joint indices into (model_ids, batched accelerator config).
+
+    Inverse of the joint enumeration order: ``model_id = idx // A`` and the
+    accelerator point is ``space_points(idx % A)`` with ``A = space_size``.
+    Any index subset decodes in O(len) without materializing the grid.
+    """
+    a = space_size(space)
+    idx = np.asarray(indices, np.int64)
+    if idx.size and (idx.min() < 0 or idx.max() >= num_models * a):
+        raise ValueError(
+            f"joint index out of range for {num_models} models x {a} configs")
+    return idx // a, space_points(idx % a, space)
+
+
+def iter_joint_space_chunks(
+        space: dict | None = None,
+        num_models: int = 1,
+        chunk_size: int = 4096,
+        max_points: int | None = None,
+        seed: int = 0) -> Iterator[tuple[int, AcceleratorConfig, np.ndarray]]:
+    """Lazily yield ``(model_id, config_chunk, flat_joint_indices)``.
+
+    Chunks never mix models (the model axis is the slowest digit), so each
+    model's chunks share one fixed evaluation shape.  ``max_points``
+    subsamples the JOINT space uniformly — models with more sampled points
+    simply yield more chunks.  Memory stays O(chunk_size).
+    """
+    a = space_size(space)
+    n = joint_space_size(space, num_models)
+    keep = None
+    if max_points is not None and n > max_points:
+        rng = np.random.default_rng(seed)
+        keep = np.sort(rng.choice(n, size=max_points, replace=False))
+    for m in range(num_models):
+        if keep is None:
+            midx = np.arange(m * a, (m + 1) * a, dtype=np.int64)
+        else:
+            midx = keep[(keep >= m * a) & (keep < (m + 1) * a)]
+        for lo in range(0, len(midx), chunk_size):
+            idx = midx[lo:lo + chunk_size]
+            yield m, space_points(idx - m * a, space), idx
+
+
 def config_rows(cfg: AcceleratorConfig) -> Iterable[dict]:
     """Iterate a batched config as python dicts (for reports/CSV)."""
     n = int(np.asarray(cfg.pe_rows).shape[0]) if np.ndim(cfg.pe_rows) else 1

@@ -1,0 +1,266 @@
+"""Joint accelerator x model co-exploration (QUIDAM / QAPPA-style).
+
+QADAM's headline result is an *accuracy x hardware-efficiency* Pareto
+front, but the single-workload DSE in ``dse.py`` only sweeps the
+accelerator axis.  This module makes the **(model, accelerator-config)
+pair** the unit of design-space exploration:
+
+* the **joint space** is the mixed-radix product of a model axis (any
+  sequence of ``ModelEntry``; see ``workloads.MODEL_FAMILIES`` for the
+  parameterized generators) and the accelerator space — enumerated lazily
+  by ``arch.iter_joint_space_chunks`` with the model as the slowest digit,
+  so chunks never mix models and each model's chunks reuse one compiled
+  evaluation;
+* the **accuracy axis** comes from ``accuracy.AccuracySurrogate`` (seeded
+  from the paper's Figs. 5-6 deltas, calibratable with measured QAT
+  results — provenance contract in that module's docstring);
+* **per-model normalization** makes hardware objectives comparable across
+  workloads of wildly different sizes: throughput is MACs/s (not
+  inferences/s) per mm^2 and energy is pJ/MAC, so a big model is not
+  penalized for doing more work per inference;
+* the **3-objective front** (accuracy, MACs/s/mm^2, -pJ/MAC) is maintained
+  by the streaming ``ParetoArchive`` from PR 1 — the joint objective
+  matrix is never materialized, memory stays O(chunk + front).
+
+Typical use::
+
+    models = default_model_set()
+    front = coexplore_front(models, max_points=50_000)
+    report = coexplore_report(front)   # named (model, PE, config) points
+
+``report["claim"]`` checks the paper's qualitative story on the joint
+sweep: per model, the best LightPE beats the best INT16 on both hardware
+metrics while staying within 1pp of FP32 accuracy (see ``lightpe_claim``
+for exact semantics — best-of-aggregates, with indeterminate handling
+under subsampling).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence
+
+import numpy as np
+
+from repro.core.accuracy import AccuracySurrogate, seeded_base_accuracy
+from repro.core.arch import (AcceleratorConfig, PE_TYPE_NAMES, config_rows,
+                             iter_joint_space_chunks, joint_space_points,
+                             joint_space_size)
+from repro.core.dse import DEFAULT_CHUNK_SIZE, ParetoArchive, evaluate_chunk
+from repro.core.ppa import PPAModels
+from repro.core.workloads import (Workload, resnet_cifar, transformer_gemm,
+                                  vgg16, workload_macs)
+
+# The joint objectives, all HIGHER-IS-BETTER (column order of the archive).
+COEXPLORE_METRICS = ("accuracy", "macs_per_s_per_mm2", "neg_energy_per_mac_pj")
+
+
+class ModelEntry(NamedTuple):
+    """One point on the model axis: a workload plus its normalization
+    scalar (forward MACs) and FP32 base accuracy."""
+    name: str
+    workload: Workload
+    macs: float        # forward MACs of one inference (normalizer)
+    base_acc: float    # FP32 top-1 (fraction; proxy for non-classifiers)
+
+
+def model_entry(workload: Workload,
+                base_acc: float | None = None) -> ModelEntry:
+    """Wrap a Workload for the model axis (MACs + seeded FP32 accuracy).
+
+    Capacity is per-inference (batch divided out) — accuracy is a model
+    property and must not change with batching.
+    """
+    macs = workload_macs(workload, per_inference=True)
+    if base_acc is None:
+        base_acc = seeded_base_accuracy(workload.name, macs)
+    return ModelEntry(workload.name, workload, macs, float(base_acc))
+
+
+def default_model_set(batch: int = 1) -> tuple[ModelEntry, ...]:
+    """The canonical >= 8-model axis: paper CNNs, depth/width/resolution
+    scaled family members, and seq-length-scaled transformer GEMMs."""
+    tfm = dict(d_model=256, n_layers=6, n_heads=8, d_ff=1024, vocab=8192,
+               batch=batch)
+    return tuple(model_entry(wl) for wl in (
+        resnet_cifar(20, batch=batch),
+        resnet_cifar(32, batch=batch),
+        resnet_cifar(56, batch=batch),
+        resnet_cifar(20, batch=batch, width_mult=2.0),
+        resnet_cifar(20, batch=batch, resolution=16),
+        vgg16("cifar10", batch=batch),
+        vgg16("cifar10", batch=batch, width_mult=0.5),
+        transformer_gemm(seq=256, **tfm),
+        transformer_gemm(seq=1024, **tfm),
+    ))
+
+
+class CoexploreFront(NamedTuple):
+    """Result of a joint sweep: the streaming 3-objective archive plus the
+    context needed to decode it back to named design points."""
+    archive: ParetoArchive
+    models: tuple                  # ModelEntry, the model axis (in order)
+    space: dict | None             # accelerator space swept
+    metrics: tuple                 # objective column names (higher-better)
+    per_model_best: dict           # (model, pe_name) -> best-seen scalars
+    points_evaluated: int
+
+
+def _joint_objectives(res, acc_by_type: np.ndarray,
+                      pe_codes: np.ndarray) -> np.ndarray:
+    """(N, 3) higher-is-better objective matrix for one chunk.
+
+    MACs-normalized: throughput = MACs/s/mm^2, energy = pJ/MAC — the
+    per-model normalization that makes objectives comparable across
+    workloads (res.macs is the network's MAC count, constant per model).
+    """
+    lat = np.asarray(res.latency_s, np.float64)
+    area = np.asarray(res.area_mm2, np.float64)
+    energy = np.asarray(res.energy_j, np.float64)
+    macs = np.asarray(res.macs, np.float64)
+    mps_mm2 = macs / np.maximum(lat, 1e-12) / np.maximum(area, 1e-9)
+    e_per_mac = energy / np.maximum(macs, 1.0) * 1e12
+    return np.stack([acc_by_type[pe_codes], mps_mm2, -e_per_mac], axis=-1)
+
+
+def coexplore_front(
+        models: Sequence[ModelEntry],
+        space: dict | None = None,
+        surrogate: PPAModels | None = None,
+        accuracy: AccuracySurrogate | None = None,
+        chunk_size: int = DEFAULT_CHUNK_SIZE,
+        max_points: int | None = None,
+        seed: int = 0) -> CoexploreFront:
+    """Stream the joint (model x accelerator) space into a 3-objective
+    non-dominated archive.
+
+    ``surrogate`` switches clock/area/leakage from the synthesis oracle to
+    the fitted PPA models (same contract as ``evaluate_space``);
+    ``accuracy`` defaults to a fresh seeded ``AccuracySurrogate`` — pass a
+    calibrated one to use measured QAT results.  ``max_points`` subsamples
+    the JOINT space.  Memory stays O(chunk_size + front size); the joint
+    objective matrix is never materialized.
+    """
+    models = tuple(models)
+    if not models:
+        raise ValueError("need at least one ModelEntry on the model axis")
+    accuracy = AccuracySurrogate() if accuracy is None else accuracy
+    # per-model accuracy column, indexed by pe_type code (capacity-scaled,
+    # calibration-aware)
+    acc_by_type = [accuracy.predict_per_type(m.name, m.macs, m.base_acc)
+                   for m in models]
+    archive = ParetoArchive(len(COEXPLORE_METRICS))
+    per_model_best: dict[tuple[str, str], dict] = {}
+    total = 0
+    for m, cfg, idx in iter_joint_space_chunks(
+            space, num_models=len(models), chunk_size=chunk_size,
+            max_points=max_points, seed=seed):
+        entry = models[m]
+        res = evaluate_chunk(cfg, entry.workload, surrogate,
+                             pad_to=chunk_size)
+        codes = np.asarray(cfg.pe_type).astype(np.int64)
+        obj = _joint_objectives(res, acc_by_type[m], codes)
+        archive.update(obj, idx)
+        total += len(idx)
+        for code in np.unique(codes):
+            sel = codes == code
+            key = (entry.name, PE_TYPE_NAMES[int(code)])
+            best = per_model_best.setdefault(key, dict(
+                macs_per_s_per_mm2=-np.inf, energy_per_mac_pj=np.inf,
+                accuracy=float(acc_by_type[m][code])))
+            best["macs_per_s_per_mm2"] = max(best["macs_per_s_per_mm2"],
+                                             float(obj[sel, 1].max()))
+            best["energy_per_mac_pj"] = min(best["energy_per_mac_pj"],
+                                            float(-obj[sel, 2].max()))
+    return CoexploreFront(archive=archive, models=models, space=space,
+                          metrics=COEXPLORE_METRICS,
+                          per_model_best=per_model_best,
+                          points_evaluated=total)
+
+
+def lightpe_claim(front: CoexploreFront) -> dict:
+    """The paper's qualitative claim (Figs. 4-6 style), checked per model:
+    some LightPE beats INT16's per-type BESTS on both hardware metrics —
+    best MACs/s/mm^2 and lowest pJ/MAC, each aggregated over all sampled
+    configs of that PE type — while staying within 1pp of FP32 accuracy.
+
+    Note this is a best-of-aggregate comparison (what a streaming sweep
+    can compute), not a proof of pointwise dominance: the best-throughput
+    and best-energy LightPE configs may differ.  A model whose sampled
+    points include no INT16 or no FP32 design is *indeterminate*
+    (``ok=None``) and excluded from ``holds``; ``indeterminate`` counts
+    them.  ``holds`` is False when no model is determinate.
+    """
+    per_model, oks = {}, []
+    for entry in front.models:
+        int16 = front.per_model_best.get((entry.name, "int16"))
+        fp32 = front.per_model_best.get((entry.name, "fp32"))
+        if int16 is None or fp32 is None:
+            missing = [pe for pe, b in (("int16", int16), ("fp32", fp32))
+                       if b is None]
+            per_model[entry.name] = dict(
+                ok=None, note=f"no {'/'.join(missing)} design sampled "
+                              "for this model — indeterminate")
+            continue
+        verdicts = {}
+        for lp in ("lightpe1", "lightpe2"):
+            b = front.per_model_best.get((entry.name, lp))
+            if b is None:
+                continue
+            beats = (b["macs_per_s_per_mm2"] > int16["macs_per_s_per_mm2"]
+                     and b["energy_per_mac_pj"] < int16["energy_per_mac_pj"])
+            acc_gap_pp = 100.0 * (fp32["accuracy"] - b["accuracy"])
+            verdicts[lp] = dict(beats_int16_bests=bool(beats),
+                                acc_gap_vs_fp32_pp=acc_gap_pp,
+                                within_1pp=bool(acc_gap_pp <= 1.0))
+        if not verdicts:
+            per_model[entry.name] = dict(
+                ok=None, note="no LightPE design sampled for this model "
+                              "— indeterminate")
+            continue
+        ok = any(v["beats_int16_bests"] and v["within_1pp"]
+                 for v in verdicts.values())
+        per_model[entry.name] = dict(ok=bool(ok), **verdicts)
+        oks.append(ok)
+    return dict(holds=bool(oks) and all(oks),
+                indeterminate=sum(v["ok"] is None
+                                  for v in per_model.values()),
+                per_model=per_model,
+                statement="best LightPE beats best INT16 on perf/area and "
+                          "energy within 1pp of FP32 accuracy")
+
+
+def coexplore_report(front: CoexploreFront) -> dict:
+    """Decode the joint front back to named (model, PE, config) points.
+
+    Returns ``points`` (one dict per archive member: model name, PE-type
+    name, decoded config fields, the three objectives), ``front_counts``
+    (per model / per PE-type membership), and ``claim`` (``lightpe_claim``).
+    """
+    mids, cfgs = joint_space_points(front.archive.indices, front.space,
+                                    num_models=len(front.models))
+    points = []
+    for i, row in enumerate(config_rows(cfgs)):
+        acc, mps, neg_e = front.archive.objectives[i]
+        points.append(dict(
+            model=front.models[int(mids[i])].name,
+            pe_type=row["pe_type_name"],
+            accuracy=float(acc),
+            macs_per_s_per_mm2=float(mps),
+            energy_per_mac_pj=float(-neg_e),
+            config={k: row[k] for k in AcceleratorConfig._fields},
+            joint_index=int(front.archive.indices[i]),
+        ))
+    by_model: dict[str, int] = {}
+    by_pe: dict[str, int] = {}
+    for p in points:
+        by_model[p["model"]] = by_model.get(p["model"], 0) + 1
+        by_pe[p["pe_type"]] = by_pe.get(p["pe_type"], 0) + 1
+    return dict(
+        points=points,
+        front_size=len(points),
+        points_evaluated=front.points_evaluated,
+        space_size=joint_space_size(front.space, len(front.models)),
+        metrics=list(front.metrics),
+        front_counts=dict(by_model=by_model, by_pe_type=by_pe),
+        claim=lightpe_claim(front),
+    )

@@ -103,6 +103,26 @@ def _slice_config(cfg: AcceleratorConfig, lo: int, hi: int) -> AcceleratorConfig
     return AcceleratorConfig(*[f[lo:hi] for f in cfg])
 
 
+def evaluate_chunk(cfg: AcceleratorConfig, workload: Workload,
+                   surrogate: PPAModels | None = None,
+                   pad_to: int | None = None) -> DseResult:
+    """Evaluate one pre-chunked batch at a fixed jit shape (host result).
+
+    With ``pad_to`` set, the batch is padded (repeating its last point) up
+    to that fixed shape before the jit call and the padded lanes are
+    trimmed from the result — so every chunk of a streaming walk hits the
+    same compiled executable.  This is the shared building block of
+    ``evaluate_space_streaming`` and the joint co-exploration evaluator.
+    """
+    if np.ndim(cfg.pe_rows) == 0:  # single unbatched point: lift to (1,)
+        cfg = AcceleratorConfig(*[jnp.reshape(f, (1,)) for f in cfg])
+    n = int(np.shape(cfg.pe_rows)[0])
+    if pad_to is not None and n < pad_to:
+        cfg = _pad_config(cfg, pad_to - n)
+    res = _evaluate_batch(cfg, workload, surrogate)
+    return DseResult(*[np.asarray(f[:n]) for f in res])
+
+
 def evaluate_space(cfg: AcceleratorConfig, workload: Workload,
                    surrogate: PPAModels | None = None,
                    chunk_size: int | None = None) -> DseResult:
@@ -149,11 +169,8 @@ def evaluate_space_streaming(
     """
     for cfg, idx in iter_space_chunks(space, chunk_size=chunk_size,
                                       max_points=max_points, seed=seed):
-        valid = len(idx)
-        if valid < chunk_size:
-            cfg = _pad_config(cfg, chunk_size - valid)
-        res = _evaluate_batch(cfg, workload, surrogate)
-        yield DseResult(*[np.asarray(f[:valid]) for f in res]), idx
+        yield evaluate_chunk(cfg, workload, surrogate,
+                             pad_to=chunk_size), idx
 
 
 # ---------------------------------------------------------------------------

@@ -75,11 +75,21 @@ SPAD_E_PER_BIT_PJ = 1.0 / 16.0   # 1 pJ per 16-bit access
 SPAD_AREA_PER_BIT_UM2 = 0.50
 
 # --- accuracy proxy ----------------------------------------------------------
-# Mean top-1 accuracy deltas vs FP32 from the paper's Figs. 5-6 narrative
-# ("on par", gaps shrink with model size). Used only for synthetic Pareto
-# demos when no trained checkpoint is supplied; real numbers come from
-# examples/train_qat.py.
-ACC_DELTA_PP = jnp.array([0.0, -0.1, -0.9, -0.4, -0.5])
+# Mean top-1 accuracy deltas vs FP32 (percentage points) from the paper's
+# Figs. 5-6 narrative ("on par", gaps shrink with model size). Keyed by
+# PE-type NAME so reordering PE_TYPE_NAMES can never silently misalign a
+# delta with its PE type; ACC_DELTA_PP below is the thin positional array
+# view for jit consumers (gather by pe_type code). Used only for synthetic
+# Pareto demos when no trained checkpoint is supplied; real numbers come
+# from examples/train_qat.py via repro.core.accuracy's calibration hook.
+ACC_DELTA_BY_NAME = {
+    "fp32": 0.0,
+    "int16": -0.1,
+    "lightpe1": -0.9,
+    "lightpe2": -0.4,
+    "int8": -0.5,
+}
+ACC_DELTA_PP = jnp.array([ACC_DELTA_BY_NAME[n] for n in PE_TYPE_NAMES])
 
 
 def act_bits(pe_type):

@@ -80,37 +80,76 @@ def gemm(M, Kd, N, batch=1, count=1):
 # The paper's CNNs
 # ---------------------------------------------------------------------------
 
-def vgg16(dataset: str = "imagenet", batch: int = 1) -> Workload:
+def _scale_suffix(width_mult: float, resolution: int | None,
+                  base_res: int) -> str:
+    """Name suffix for scaled family members ('' for the canonical member)."""
+    parts = []
+    if width_mult != 1.0:
+        parts.append(f"w{width_mult:g}")
+    if resolution is not None and resolution != base_res:
+        parts.append(f"r{resolution}")
+    return "".join(f"-{p}" for p in parts)
+
+
+def vgg16(dataset: str = "imagenet", batch: int = 1,
+          width_mult: float = 1.0, resolution: int | None = None) -> Workload:
+    """VGG-16, optionally width- and resolution-scaled (family member).
+
+    ``width_mult`` scales every conv/fc channel count; ``resolution``
+    overrides the dataset's native input size.  Defaults reproduce the
+    paper's VGG-16 exactly.
+    """
     if dataset == "imagenet":
-        hw, n_cls, fc_in = 224, 1000, 7 * 7 * 512
-        fcs = [(fc_in, 4096), (4096, 4096), (4096, n_cls)]
+        base_res, n_cls, fc_w = 224, 1000, 4096
     else:  # cifar10 / cifar100
-        hw = 32
-        n_cls = 100 if dataset == "cifar100" else 10
-        fcs = [(512, 512), (512, n_cls)]
+        base_res = 32
+        n_cls, fc_w = (100 if dataset == "cifar100" else 10), 512
+    hw = base_res if resolution is None else resolution
+    if hw < 16:
+        # the 5th conv block runs at hw >> 4: below 16 its input collapses
+        # to 0x0 and the cost model degenerates to NaN
+        raise ValueError(f"vgg16 needs resolution >= 16, got {hw}")
+    w = lambda k: max(1, round(k * width_mult))  # noqa: E731
     rows, names = [], []
     cfg = [(64, 2), (128, 2), (256, 3), (512, 3), (512, 3)]
     c, h = 3, hw
     for blk, (k, reps) in enumerate(cfg):
         for r in range(reps):
-            rows.append(conv(h, h, c, k, 3, batch=batch))
+            rows.append(conv(h, h, c, w(k), 3, batch=batch))
             names.append(f"conv{blk + 1}_{r + 1}")
-            c = k
+            c = w(k)
         h //= 2  # maxpool
+    fc_in = max(h, 1) ** 2 * c
+    if dataset == "imagenet":
+        fcs = [(fc_in, w(fc_w)), (w(fc_w), w(fc_w)), (w(fc_w), n_cls)]
+    else:
+        fcs = [(fc_in, w(fc_w)), (w(fc_w), n_cls)]
     for i, (m, n) in enumerate(fcs):
         rows.append(gemm(1, m, n, batch=batch))
         names.append(f"fc{i + 1}")
-    return _stack(rows, f"vgg16-{dataset}", names)
+    name = f"vgg16-{dataset}" + _scale_suffix(width_mult, resolution, base_res)
+    return _stack(rows, name, names)
 
 
-def resnet_cifar(depth: int, dataset: str = "cifar10", batch: int = 1) -> Workload:
-    """ResNet-20/56 for CIFAR (He et al.): 3 stages of n=(depth-2)/6 blocks."""
+def resnet_cifar(depth: int, dataset: str = "cifar10", batch: int = 1,
+                 width_mult: float = 1.0, resolution: int = 32) -> Workload:
+    """ResNet-20/56 for CIFAR (He et al.): 3 stages of n=(depth-2)/6 blocks.
+
+    Depth (20/32/44/56/...), ``width_mult`` (stage channels 16/32/64 scaled)
+    and input ``resolution`` span the paper-faithful model family used for
+    co-exploration; defaults reproduce the paper's models exactly.
+    """
     n = (depth - 2) // 6
     n_cls = 100 if dataset == "cifar100" else 10
-    rows = [conv(32, 32, 3, 16, 3, batch=batch)]
+    if resolution < 4:
+        # stage 3 runs at resolution/4: below 4 its input collapses to 0x0
+        raise ValueError(f"resnet_cifar needs resolution >= 4, got {resolution}")
+    w = lambda k: max(1, round(k * width_mult))  # noqa: E731
+    rows = [conv(resolution, resolution, 3, w(16), 3, batch=batch)]
     names = ["stem"]
-    c, h = 16, 32
-    for stage, k in enumerate((16, 32, 64)):
+    c, h = w(16), resolution
+    for stage, k0 in enumerate((16, 32, 64)):
+        k = w(k0)
         for b in range(n):
             s = 2 if (stage > 0 and b == 0) else 1
             rows.append(conv(h // s if s == 1 else h, h // s if s == 1 else h,
@@ -122,9 +161,11 @@ def resnet_cifar(depth: int, dataset: str = "cifar10", batch: int = 1) -> Worklo
                 rows.append(conv(h * s, h * s, c, k, 1, stride=s, batch=batch))
                 names.append(f"s{stage}b{b}sc")
             c = k
-    rows.append(gemm(1, 64, n_cls, batch=batch))
+    rows.append(gemm(1, w(64), n_cls, batch=batch))
     names.append("fc")
-    return _stack(rows, f"resnet{depth}-{dataset}", names)
+    name = (f"resnet{depth}-{dataset}"
+            + _scale_suffix(width_mult, resolution, 32))
+    return _stack(rows, name, names)
 
 
 def resnet34(batch: int = 1) -> Workload:
@@ -228,3 +269,62 @@ def transformer_workload(cfg, seq: int, batch: int, mode: str = "train",
     # embeddings / head
     add("lm_head", tokens, d, cfg.vocab, 1)
     return _stack(rows, name or f"{cfg.name}-{mode}", names)
+
+
+# ---------------------------------------------------------------------------
+# Parameterized model families: the workload axis of the joint
+# (model x accelerator) co-exploration space (QUIDAM/QAPPA-style).
+# ---------------------------------------------------------------------------
+
+class _TfmSpec(NamedTuple):
+    """Minimal ArchConfig-like stand-in for ``transformer_workload``."""
+    name: str
+    d_model: int
+    n_layers: int
+    n_heads: int
+    kv_heads: int
+    d_ff: int
+    vocab: int
+    moe_experts: int = 0
+
+
+def transformer_gemm(seq: int = 512, d_model: int = 512, n_layers: int = 8,
+                     n_heads: int = 8, d_ff: int = 2048, vocab: int = 32000,
+                     batch: int = 1, mode: str = "prefill",
+                     name: str | None = None) -> Workload:
+    """Self-contained decoder-block GEMM workload, seq-length-scaled.
+
+    The transformer member of the co-exploration model family: no
+    ``repro.configs`` object needed — sweep ``seq`` (and width/depth via
+    ``d_model``/``n_layers``) to generate the model axis.  Reuses the same
+    GEMM extraction as ``transformer_workload``.
+    """
+    spec = _TfmSpec(name=name or f"tfm-d{d_model}-L{n_layers}",
+                    d_model=d_model, n_layers=n_layers, n_heads=n_heads,
+                    kv_heads=n_heads, d_ff=d_ff, vocab=vocab)
+    return transformer_workload(
+        spec, seq=seq, batch=batch, mode=mode,
+        name=name or f"tfm-d{d_model}-L{n_layers}-s{seq}-{mode}")
+
+
+# family name -> constructor; each constructor's keyword grid generates the
+# model axis (depth/width/resolution for the CNNs, seq/d_model/n_layers for
+# the transformer GEMMs).
+MODEL_FAMILIES = {
+    "resnet-cifar": resnet_cifar,
+    "vgg16": vgg16,
+    "transformer-gemm": transformer_gemm,
+}
+
+
+def workload_macs(wl: Workload, per_inference: bool = False) -> float:
+    """Total forward MACs of the workload (the per-model normalizer).
+
+    ``LayerSpec.macs()`` includes the batch factor; ``per_inference=True``
+    divides it back out — use that for batch-invariant model properties
+    (the accuracy surrogate's capacity), the default for total-work
+    normalization matching the cost model's ``res.macs``."""
+    m = np.asarray(wl.layers.macs(), np.float64)
+    if per_inference:
+        m = m / np.asarray(wl.layers.batch, np.float64)
+    return float(np.sum(m))

@@ -1,0 +1,348 @@
+"""Joint (model x accelerator) co-exploration: mixed-radix joint space,
+accuracy surrogate (name-keyed, calibratable), streaming 3-objective front
+vs the dense oracle, parameterized model families."""
+
+import itertools
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # CI images without hypothesis: deterministic fallback
+    from _hypothesis_fallback import given, settings, st
+
+from repro.core import (AccuracySurrogate, ModelEntry, PE_TYPE_CODES,
+                        PE_TYPE_NAMES, capacity_scale, coexplore_front,
+                        coexplore_report, default_model_set, enumerate_space,
+                        evaluate_space_streaming, iter_joint_space_chunks,
+                        joint_space_points, joint_space_size, model_entry,
+                        pareto_mask_dense, resnet_cifar, seeded_base_accuracy,
+                        space_size, transformer_gemm, vgg16, workload_macs)
+from repro.core.arch import AcceleratorConfig
+from repro.core.pe import ACC_DELTA_BY_NAME, ACC_DELTA_PP
+
+# 2*2*1*1*2*1*5*1 = 40 accelerator points: joint sweeps stay fast.
+TINY_SPACE = dict(
+    pe_rows=(8, 12), pe_cols=(8, 14), gbuf_kb=(54.0,), spad_ifmap=(12,),
+    spad_filter=(112, 224), spad_psum=(16,),
+    pe_type=tuple(range(5)), bandwidth_gbps=(25.6,),
+)
+
+
+def _config_matrix(cfg: AcceleratorConfig) -> np.ndarray:
+    return np.stack([np.asarray(getattr(cfg, f), np.float64)
+                     for f in AcceleratorConfig._fields], axis=-1)
+
+
+@pytest.fixture(scope="module")
+def tiny_models():
+    return (model_entry(resnet_cifar(20)),
+            model_entry(resnet_cifar(20, resolution=16)),
+            model_entry(transformer_gemm(seq=128, d_model=128, n_layers=2,
+                                         n_heads=4, d_ff=256, vocab=1024)))
+
+
+class TestJointSpace:
+    def test_size(self):
+        assert joint_space_size(TINY_SPACE, 3) == 3 * space_size(TINY_SPACE)
+        with pytest.raises(ValueError):
+            joint_space_size(TINY_SPACE, 0)
+
+    def test_decode_matches_nested_product(self):
+        """Joint decode == itertools.product(models, accel grid): the model
+        id is the slowest digit, the accel part reproduces enumerate_space."""
+        a = space_size(TINY_SPACE)
+        accel = _config_matrix(enumerate_space(TINY_SPACE))
+        ref = [(m, tuple(accel[i])) for m, i in
+               itertools.product(range(3), range(a))]
+        mids, cfg = joint_space_points(np.arange(3 * a), TINY_SPACE, 3)
+        got = list(zip(mids.tolist(), map(tuple, _config_matrix(cfg))))
+        assert got == ref
+
+    def test_decode_subset(self):
+        a = space_size(TINY_SPACE)
+        idx = np.array([0, a - 1, a, 2 * a + 7, 3 * a - 1])
+        mids, cfg = joint_space_points(idx, TINY_SPACE, 3)
+        np.testing.assert_array_equal(mids, [0, 0, 1, 2, 2])
+        full = _config_matrix(enumerate_space(TINY_SPACE))
+        np.testing.assert_array_equal(_config_matrix(cfg), full[idx % a])
+
+    def test_decode_out_of_range_raises(self):
+        with pytest.raises(ValueError):
+            joint_space_points(np.array([3 * space_size(TINY_SPACE)]),
+                               TINY_SPACE, 3)
+
+    @given(chunk=st.integers(1, 50), num_models=st.integers(1, 4))
+    @settings(max_examples=10, deadline=None)
+    def test_chunks_cover_space_and_never_mix_models(self, chunk, num_models):
+        a = space_size(TINY_SPACE)
+        seen = []
+        for m, cfg, idx in iter_joint_space_chunks(
+                TINY_SPACE, num_models=num_models, chunk_size=chunk):
+            assert 0 < len(idx) <= chunk
+            np.testing.assert_array_equal(idx // a, m)  # one model per chunk
+            np.testing.assert_array_equal(
+                _config_matrix(cfg),
+                _config_matrix(enumerate_space(TINY_SPACE))[idx % a])
+            seen.append(idx)
+        np.testing.assert_array_equal(np.concatenate(seen),
+                                      np.arange(num_models * a))
+
+    def test_subsample_is_sorted_unique_and_decodable(self):
+        n = joint_space_size(TINY_SPACE, 3)
+        idx = np.concatenate([i for _, _, i in iter_joint_space_chunks(
+            TINY_SPACE, num_models=3, chunk_size=7, max_points=25, seed=5)])
+        assert len(idx) == 25
+        assert (np.diff(idx) > 0).all()
+        assert idx.min() >= 0 and idx.max() < n
+
+
+class TestAccuracyDeltaNameKeying:
+    def test_array_view_aligned_with_names(self):
+        """The jit-facing positional array is DERIVED from the name-keyed
+        dict — reordering PE_TYPE_NAMES cannot misalign it."""
+        for code, name in enumerate(PE_TYPE_NAMES):
+            assert float(ACC_DELTA_PP[code]) == pytest.approx(
+                ACC_DELTA_BY_NAME[name])
+        assert set(ACC_DELTA_BY_NAME) == set(PE_TYPE_NAMES)
+
+    def test_fp32_is_reference(self):
+        assert ACC_DELTA_BY_NAME["fp32"] == 0.0
+        assert all(v <= 0.0 for v in ACC_DELTA_BY_NAME.values())
+
+
+class TestAccuracySurrogate:
+    def test_delta_by_name_and_code_agree(self):
+        s = AccuracySurrogate()
+        for name, code in PE_TYPE_CODES.items():
+            assert s.delta_pp(name) == s.delta_pp(code)
+            assert s.delta_pp(name) == ACC_DELTA_BY_NAME[name]
+
+    def test_delta_array_alignment(self):
+        s = AccuracySurrogate()
+        np.testing.assert_allclose(np.asarray(s.delta_array()),
+                                   np.asarray(ACC_DELTA_PP))
+
+    def test_unknown_pe_rejected(self):
+        s = AccuracySurrogate()
+        with pytest.raises(KeyError):
+            s.delta_pp("bf16")
+        with pytest.raises(KeyError):
+            AccuracySurrogate(deltas_pp={"bf16": -1.0})
+
+    def test_capacity_scale_shrinks_gap_with_model_size(self):
+        macs = [1e6, 4.1e7, 1e9, 1e12]
+        scales = [capacity_scale(m) for m in macs]
+        assert scales == sorted(scales, reverse=True)
+        assert capacity_scale(4.1e7) == pytest.approx(1.0)
+        assert all(0.25 <= s <= 1.0 for s in scales)
+
+    def test_scaled_member_falls_back_to_canonical_seed(self):
+        assert (seeded_base_accuracy("resnet20-cifar10-w2")
+                == seeded_base_accuracy("resnet20-cifar10"))
+        assert (seeded_base_accuracy("resnet20-cifar10-w0.5-r16")
+                == seeded_base_accuracy("resnet20-cifar10"))
+
+    def test_unseeded_base_monotone_in_capacity(self):
+        a = seeded_base_accuracy("mystery-net", 1e7)
+        b = seeded_base_accuracy("mystery-net", 1e10)
+        assert 0.3 <= a < b <= 0.99
+
+    def test_predict_applies_capacity_scaled_delta(self):
+        s = AccuracySurrogate()
+        base = seeded_base_accuracy("resnet20-cifar10", 4.1e7)
+        got = s.predict("resnet20-cifar10", "lightpe1", macs=4.1e7)
+        assert got == pytest.approx(base - 0.9 / 100.0)
+        # 32x the capacity -> strictly smaller gap
+        big = s.predict("resnet56-cifar10", "lightpe1", macs=32 * 4.1e7)
+        assert (seeded_base_accuracy("resnet56-cifar10") - big
+                < 0.9 / 100.0)
+
+    def test_calibration_overrides_seeds(self):
+        s = AccuracySurrogate()
+        s.calibrate("resnet20-cifar10", "lightpe1", 0.873)
+        assert s.predict("resnet20-cifar10", "lightpe1") == 0.873
+        # measured fp32 rebases the un-measured PE types
+        s.calibrate("resnet20-cifar10", "fp32", 0.880)
+        assert s.predict("resnet20-cifar10", "int16", macs=4.1e7) \
+            == pytest.approx(0.880 - 0.1 / 100.0)
+        # other models untouched
+        assert s.predict("resnet56-cifar10", "fp32") \
+            == seeded_base_accuracy("resnet56-cifar10")
+
+    def test_load_qat_results(self, tmp_path):
+        table = {"fp32": {"top1_mean": 0.41, "top1_std": 0.01},
+                 "lightpe1": {"top1_mean": 0.39, "top1_std": 0.02},
+                 "not_a_pe": {"top1_mean": 0.5}}
+        p = tmp_path / "qat_pareto.json"
+        p.write_text(json.dumps(table))
+        s = AccuracySurrogate()
+        assert s.load_qat_results(str(p), model_name="resnet8-syn") == 2
+        assert s.predict("resnet8-syn", "lightpe1") == 0.39
+        assert s.predict("resnet8-syn", "fp32") == 0.41
+
+
+class TestModelFamilies:
+    def test_width_scaling_quadruples_macs(self):
+        base = workload_macs(resnet_cifar(20))
+        wide = workload_macs(resnet_cifar(20, width_mult=2.0))
+        assert wide / base == pytest.approx(4.0, rel=0.15)
+
+    def test_resolution_scaling_quarters_macs(self):
+        base = workload_macs(resnet_cifar(20))
+        small = workload_macs(resnet_cifar(20, resolution=16))
+        assert base / small == pytest.approx(4.0, rel=0.4)
+
+    def test_vgg_width_scaling(self):
+        base = workload_macs(vgg16("cifar10"))
+        half = workload_macs(vgg16("cifar10", width_mult=0.5))
+        assert base / half == pytest.approx(4.0, rel=0.2)
+
+    def test_canonical_members_unchanged(self):
+        """width_mult=1, native resolution must reproduce the paper
+        workloads bit-for-bit (name included)."""
+        a, b = resnet_cifar(20), resnet_cifar(20, width_mult=1.0,
+                                              resolution=32)
+        assert a.name == b.name == "resnet20-cifar10"
+        for f in a.layers._fields:
+            np.testing.assert_array_equal(np.asarray(getattr(a.layers, f)),
+                                          np.asarray(getattr(b.layers, f)))
+
+    def test_scaled_names_tagged(self):
+        assert resnet_cifar(20, width_mult=2.0).name == "resnet20-cifar10-w2"
+        assert resnet_cifar(20, resolution=16).name == "resnet20-cifar10-r16"
+        assert vgg16("cifar10", width_mult=0.5).name == "vgg16-cifar10-w0.5"
+
+    def test_degenerate_resolutions_rejected(self):
+        """Resolutions that collapse a conv stage to 0x0 (NaN objectives
+        downstream) must fail loudly at construction."""
+        with pytest.raises(ValueError):
+            vgg16("cifar10", resolution=8)
+        with pytest.raises(ValueError):
+            resnet_cifar(20, resolution=2)
+        # smallest legal values still build
+        assert workload_macs(vgg16("cifar10", resolution=16)) > 0
+        assert workload_macs(resnet_cifar(20, resolution=4)) > 0
+
+    def test_transformer_seq_scaling(self):
+        s256 = workload_macs(transformer_gemm(seq=256))
+        s1024 = workload_macs(transformer_gemm(seq=1024))
+        assert s1024 > 4 * s256 * 0.9  # superlinear-ish (attn is quadratic)
+
+    def test_default_model_set(self):
+        models = default_model_set()
+        assert len(models) >= 8
+        names = [m.name for m in models]
+        assert len(set(names)) == len(names)
+        assert all(m.macs > 0 and 0.0 < m.base_acc <= 1.0 for m in models)
+        assert all(isinstance(m, ModelEntry) for m in models)
+
+    def test_model_entry_capacity_is_batch_invariant(self):
+        """Accuracy is a model property: batching must not change the
+        capacity the surrogate sees (nor therefore the predicted gap)."""
+        e1 = model_entry(resnet_cifar(20, batch=1))
+        e8 = model_entry(resnet_cifar(20, batch=8))
+        assert e8.macs == pytest.approx(e1.macs)
+        assert e8.base_acc == e1.base_acc
+        # while total-work normalization does scale with batch
+        assert workload_macs(resnet_cifar(20, batch=8)) \
+            == pytest.approx(8 * workload_macs(resnet_cifar(20)))
+
+
+class TestJointFrontEquivalence:
+    def test_streamed_joint_front_equals_dense(self, tiny_models):
+        """Joint archive front == dense front over the concatenated
+        per-model evaluations (same chunked numerics, same objectives)."""
+        chunk = 16
+        acc = AccuracySurrogate()
+        a = space_size(TINY_SPACE)
+        objs = []
+        for m, entry in enumerate(tiny_models):
+            acc_col = acc.predict_per_type(entry.name, entry.macs,
+                                           entry.base_acc)
+            for res, idx in evaluate_space_streaming(
+                    entry.workload, TINY_SPACE, chunk_size=chunk):
+                lat = np.asarray(res.latency_s, np.float64)
+                area = np.asarray(res.area_mm2, np.float64)
+                e = np.asarray(res.energy_j, np.float64)
+                macs = np.asarray(res.macs, np.float64)
+                codes = np.asarray(
+                    enumerate_space(TINY_SPACE).pe_type)[idx].astype(int)
+                objs.append(np.stack([
+                    np.asarray(acc_col)[codes],
+                    macs / np.maximum(lat, 1e-12) / np.maximum(area, 1e-9),
+                    -(e / np.maximum(macs, 1.0) * 1e12)], axis=-1))
+        dense_obj = np.concatenate(objs)
+        assert dense_obj.shape == (3 * a, 3)
+        dense = set(np.flatnonzero(np.asarray(
+            pareto_mask_dense(jnp.asarray(dense_obj)))).tolist())
+
+        front = coexplore_front(tiny_models, TINY_SPACE, chunk_size=chunk)
+        assert front.points_evaluated == 3 * a
+        assert set(front.archive.indices.tolist()) == dense
+
+    def test_subsample_front_is_subset_of_full(self, tiny_models):
+        full = coexplore_front(tiny_models, TINY_SPACE, chunk_size=16)
+        sub = coexplore_front(tiny_models, TINY_SPACE, chunk_size=16,
+                              max_points=60, seed=2)
+        assert sub.points_evaluated == 60
+        # a subsampled front point is either on the full front or dominated
+        # by it — never better than the full front on all objectives
+        for o in sub.archive.objectives:
+            assert not (o > full.archive.objectives).all(axis=-1).any()
+
+
+class TestCoexploreReport:
+    @pytest.fixture(scope="class")
+    def report(self, tiny_models):
+        return coexplore_report(
+            coexplore_front(tiny_models, TINY_SPACE, chunk_size=16))
+
+    def test_points_decode_to_named_models_and_pes(self, report, tiny_models):
+        names = {m.name for m in tiny_models}
+        assert report["front_size"] == len(report["points"]) > 0
+        for p in report["points"]:
+            assert p["model"] in names
+            assert p["pe_type"] in PE_TYPE_NAMES
+            assert set(p["config"]) == set(AcceleratorConfig._fields)
+            assert p["energy_per_mac_pj"] > 0
+            assert p["macs_per_s_per_mm2"] > 0
+            assert 0 < p["accuracy"] <= 1.0
+
+    def test_front_counts_sum_to_front_size(self, report):
+        assert sum(report["front_counts"]["by_model"].values()) \
+            == report["front_size"]
+        assert sum(report["front_counts"]["by_pe_type"].values()) \
+            == report["front_size"]
+
+    def test_lightpe_claim_holds_on_seeded_surrogate(self, report):
+        """The acceptance-criteria claim: LightPEs dominate INT16 on both
+        hardware metrics within 1pp of FP32 accuracy (seeded deltas)."""
+        claim = report["claim"]
+        assert claim["holds"] is True
+        assert claim["indeterminate"] == 0
+        for verdict in claim["per_model"].values():
+            assert verdict["ok"] is True
+            for lp in ("lightpe1", "lightpe2"):
+                assert verdict[lp]["within_1pp"] is True
+                assert verdict[lp]["beats_int16_bests"] is True
+
+    def test_claim_indeterminate_without_reference_pes(self, tiny_models):
+        """A sweep whose space has no INT16 (or FP32) designs can neither
+        confirm nor refute the claim — ok=None, excluded from holds."""
+        no_ref = dict(TINY_SPACE, pe_type=(PE_TYPE_CODES["lightpe1"],
+                                           PE_TYPE_CODES["lightpe2"]))
+        front = coexplore_front(tiny_models[:1], no_ref, chunk_size=16)
+        claim = coexplore_report(front)["claim"]
+        assert claim["holds"] is False       # nothing determinate
+        assert claim["indeterminate"] == 1
+        (verdict,) = claim["per_model"].values()
+        assert verdict["ok"] is None
+        assert "indeterminate" in verdict["note"]
+
+    def test_empty_model_axis_rejected(self):
+        with pytest.raises(ValueError):
+            coexplore_front((), TINY_SPACE)

@@ -92,6 +92,12 @@ class TestChunkedEvaluation:
             np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                        rtol=1e-6)
 
+    def test_evaluate_chunk_accepts_unbatched_config(self, workload):
+        from repro.core import evaluate_chunk, make_config
+        res = evaluate_chunk(make_config(), workload, pad_to=8)
+        assert np.shape(res.latency_s) == (1,)
+        assert np.isfinite(np.asarray(res.latency_s)).all()
+
     def test_streaming_equals_one_shot(self, one_shot, workload):
         _, ref = one_shot
         chunks = list(evaluate_space_streaming(workload, SMALL_SPACE,
@@ -230,3 +236,29 @@ class TestNormalizedReportFallback:
                                          index=rep["_reference"]["index"],
                                          fallback=False, note=None)
         assert rep["int16"]["norm_perf_per_area"] == pytest.approx(1.0)
+
+
+class TestReportPeTypes:
+    def test_drops_metadata_keeps_pe_entries(self):
+        rep = {"_reference": {"pe_type": "int16"}, "_future_meta": 1,
+               "fp32": {"norm_perf_per_area": 0.13},
+               "lightpe1": {"norm_perf_per_area": 3.2}}
+        assert report_pe_types(rep) == {
+            "fp32": {"norm_perf_per_area": 0.13},
+            "lightpe1": {"norm_perf_per_area": 3.2}}
+
+    def test_empty_report(self):
+        assert report_pe_types({"_reference": {}}) == {}
+
+    def test_round_trip_with_normalized_report(self):
+        wl = PAPER_WORKLOADS["resnet20-cifar10"]()
+        space = enumerate_space(SMALL_SPACE)
+        rep = normalized_report(evaluate_space(space, wl), space)
+        pes = report_pe_types(rep)
+        # every entry is a real PE-type name with the per-type fields
+        assert set(pes) <= set(PE_TYPE_CODES)
+        assert all(not k.startswith("_") for k in pes)
+        for r in pes.values():
+            assert {"best_perf_per_area", "norm_perf_per_area",
+                    "best_energy_j", "norm_energy",
+                    "energy_at_best_ppa"} <= set(r)
