@@ -8,6 +8,13 @@ joint points, streamed through the 3-objective (accuracy, MACs/s/mm^2,
 -pJ/MAC) archive in O(chunk) memory — the joint objective matrix is never
 materialized.
 
+The sweep runs TWICE: a cold pass (includes XLA compilation — one per
+layer-count bucket, <= 3 for the default axis instead of one per model)
+and a warm pass that reuses the compiled evaluators.  Both are reported
+with their ``n_compiles`` (a traced-function counter), so BENCH_dse.json
+shows the compile-amortization win separately from steady-state
+throughput; the warm row is the regression-guarded number.
+
 Claim under test (acceptance criterion, best-vs-best semantics — see
 ``lightpe_claim``): for every model, the best LightPE design beats the
 best INT16 design on perf-per-area AND on energy-per-MAC while staying
@@ -21,22 +28,29 @@ import time
 
 from benchmarks.common import emit, maxrss_mb
 from repro.core import (PE_TYPE_NAMES, coexplore_front, coexplore_report,
-                        default_model_set)
+                        default_model_set, trace_count)
 
 
 def run(max_points: int | None = None):
     rows = []
     models = default_model_set()
-    t0 = time.perf_counter()
-    front = coexplore_front(models, max_points=max_points)
-    dt = time.perf_counter() - t0
+    front = None
+    for phase in ("cold", "warm"):
+        c0 = trace_count()
+        t0 = time.perf_counter()
+        front = coexplore_front(models, max_points=max_points)
+        dt = time.perf_counter() - t0
+        rows.append(emit(
+            f"coexplore_joint_sweep_{phase}", dt * 1e6,
+            f"models={len(models)};points={front.points_evaluated};"
+            f"points_per_sec={front.points_evaluated / dt:.0f};"
+            f"n_compiles={trace_count() - c0};"
+            f"buckets={'/'.join(str(b) for b, _ in front.buckets)};"
+            f"peak_rss_mb={maxrss_mb():.0f}"))
     rep = coexplore_report(front)
     rows.append(emit(
-        "coexplore_joint_sweep", dt * 1e6,
-        f"models={len(models)};points={front.points_evaluated};"
-        f"space={rep['space_size']};"
-        f"points_per_sec={front.points_evaluated / dt:.0f};"
-        f"front={rep['front_size']};peak_rss_mb={maxrss_mb():.0f}"))
+        "coexplore_joint_space", 0.0,
+        f"space={rep['space_size']};front={rep['front_size']}"))
     mix = rep["front_counts"]["by_pe_type"]
     rows.append(emit(
         "coexplore_front_mix", 0.0,

@@ -7,6 +7,11 @@ full paper grid, and N=216,000 an axis-extended grid (finer PE-array and
 gbuf sweeps) exercising beyond-paper scale.  At 3k the streamed archive
 is cross-checked against the dense O(N^2) oracle.
 
+Every size is timed twice — a cold pass (includes any XLA compilation,
+counted by ``n_compiles``) and a warm pass reusing the compiled
+evaluator — because compile time dominates small runs and used to make
+the reported throughput look 8x worse than the engine's steady state.
+
 Peak memory is the process high-water mark (ru_maxrss); sizes run in
 increasing order, so a bounded-memory engine shows a near-flat column.
 """
@@ -20,7 +25,8 @@ import numpy as np
 from benchmarks.common import emit, maxrss_mb
 from repro.core import (DEFAULT_CHUNK_SIZE, DEFAULT_SPACE, PAPER_WORKLOADS,
                         ParetoArchive, enumerate_space, evaluate_space,
-                        pareto_front_streaming, pareto_mask, space_size)
+                        pareto_front_streaming, pareto_mask, space_size,
+                        trace_count)
 
 # DEFAULT_SPACE is 5*5*4*2*3*3*5*3 = 27,000; refining the PE-array and
 # gbuf axes gives 10*10*8*2*3*3*5*3 = 216,000.
@@ -65,15 +71,18 @@ def run(sizes: tuple = (3000, 27000, 216000)):
         else:
             space, mp = SCALED_SPACE, (None if n >= space_size(SCALED_SPACE)
                                        else n)
-        t0 = time.perf_counter()
-        archive, _front_cfg = pareto_front_streaming(
-            wl, space=space, chunk_size=DEFAULT_CHUNK_SIZE, max_points=mp)
-        dt = time.perf_counter() - t0
         total = space_size(space) if mp is None else mp
-        rows.append(emit(
-            f"dse_scale_n{total}", dt * 1e6,
-            f"points_per_sec={total / dt:.0f};front={len(archive)};"
-            f"peak_rss_mb={maxrss_mb():.0f};chunk={DEFAULT_CHUNK_SIZE}"))
+        for phase in ("cold", "warm"):
+            c0 = trace_count()
+            t0 = time.perf_counter()
+            archive, _front_cfg = pareto_front_streaming(
+                wl, space=space, chunk_size=DEFAULT_CHUNK_SIZE, max_points=mp)
+            dt = time.perf_counter() - t0
+            rows.append(emit(
+                f"dse_scale_n{total}_{phase}", dt * 1e6,
+                f"points_per_sec={total / dt:.0f};front={len(archive)};"
+                f"n_compiles={trace_count() - c0};"
+                f"peak_rss_mb={maxrss_mb():.0f};chunk={DEFAULT_CHUNK_SIZE}"))
     return rows
 
 

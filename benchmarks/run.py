@@ -7,13 +7,16 @@ writes the DSE-related rows to BENCH_dse.json.
 
 --fast shrinks the QAT training budget AND caps every DSE sweep's point
 count so the whole harness is CI-runnable in minutes; the default runs
-the full 27k paper grid (and 216k in dse_scale).
+the full 27k paper grid (and 216k in dse_scale).  Under --fast the joint
+sweep's WARM throughput is also guarded against the value committed in
+BENCH_dse.json (fails on a >30% drop; BENCH_SKIP_REGRESSION=1 skips).
 """
 
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 import traceback
 
@@ -27,6 +30,51 @@ FAST_COEXPLORE_POINTS = 4500
 # Benches whose rows land in BENCH_dse.json.
 DSE_BENCHES = ("fig2", "fig4", "fig56", "dse_transformers", "dse_scale",
                "coexplore")
+
+# --fast regression guard: fail if the joint warm throughput drops more
+# than this fraction below the value committed in BENCH_dse.json.
+# BENCH_SKIP_REGRESSION=1 skips the check (noisy/underpowered runners).
+REGRESSION_TOLERANCE = 0.30
+GUARDED_ROW = "coexplore_joint_sweep_warm"
+
+
+def _warm_row_fields(rows) -> dict | None:
+    """key=value fields of the guarded warm row in a list of CSV rows."""
+    for row in rows or ():
+        if row.startswith(GUARDED_ROW + ","):
+            return dict(part.split("=", 1)
+                        for part in row.split(",", 2)[2].split(";")
+                        if "=" in part)
+    return None
+
+
+def _check_regression(committed: dict, fresh_rows) -> str | None:
+    """Error string if the fresh warm joint throughput regressed.
+
+    Only rows with the same evaluated point count are compared: a full
+    (non---fast) run writes full-sweep numbers into BENCH_dse.json, and
+    its warm pts/s is structurally higher than a --fast subsample's
+    (less chunk padding) — comparing across modes would trip the guard
+    on an unchanged engine.
+    """
+    ref = _warm_row_fields(committed.get("coexplore"))
+    got = _warm_row_fields(fresh_rows)
+    if not ref or not got or "points_per_sec" not in ref \
+            or "points_per_sec" not in got:
+        return None  # no committed baseline / bench failed (reported anyway)
+    if ref.get("points") != got.get("points"):
+        print(f"regression guard: committed baseline has points="
+              f"{ref.get('points')} but this run has points="
+              f"{got.get('points')} (different run mode) — skipping "
+              f"comparison", file=sys.stderr)
+        return None
+    ref_pps, got_pps = float(ref["points_per_sec"]), float(got["points_per_sec"])
+    if got_pps < (1.0 - REGRESSION_TOLERANCE) * ref_pps:
+        return (f"joint warm throughput regressed: {got_pps:.0f} pts/s < "
+                f"{(1.0 - REGRESSION_TOLERANCE) * ref_pps:.0f} "
+                f"(committed {ref_pps:.0f} - {REGRESSION_TOLERANCE:.0%}); "
+                f"set BENCH_SKIP_REGRESSION=1 to skip on noisy runners")
+    return None
 
 
 def main() -> None:
@@ -58,6 +106,13 @@ def main() -> None:
             max_points=FAST_COEXPLORE_POINTS if args.fast else None),
         "roofline": roofline.run,
     }
+    # committed baseline, read BEFORE the fresh rows overwrite the file
+    try:
+        with open(args.dse_json) as f:
+            committed = json.load(f)
+    except (OSError, ValueError):
+        committed = {}
+
     print("name,us_per_call,derived")
     failed = []
     dse_rows = {}
@@ -71,6 +126,15 @@ def main() -> None:
         except Exception:  # noqa: BLE001
             failed.append(name)
             traceback.print_exc()
+
+    # throughput regression guard (--fast only: committed numbers are the
+    # --fast CI artifact, so the comparison is like-for-like)
+    if (args.fast and "coexplore" in dse_rows
+            and not os.environ.get("BENCH_SKIP_REGRESSION")):
+        err = _check_regression(committed, dse_rows["coexplore"])
+        if err:
+            print(f"REGRESSION: {err}", file=sys.stderr)
+            failed.append("coexplore_regression_guard")
     if dse_rows:
         if args.only or failed:  # partial run: merge, don't clobber
             try:

@@ -50,6 +50,9 @@ rep = coexplore_report(front)
 print(f"\nevaluated {rep['points_evaluated']:,} of {rep['space_size']:,} "
       f"joint points -> {rep['front_size']} on the 3-objective front "
       f"(accuracy, MACs/s/mm^2, -pJ/MAC)")
+for b in rep["layer_buckets"]:
+    print(f"  depth-{b['depth']} bucket (1 compile): "
+          f"{', '.join(b['models'])}")
 
 os.makedirs("results/coexplore", exist_ok=True)
 out = "results/coexplore/front.csv"

@@ -32,13 +32,16 @@ from repro.core.dse import (evaluate_chunk, evaluate_space,
                             pareto_mask, pareto_mask_dense, pareto_mask_tiled,
                             pareto_mask_2d, ParetoArchive,
                             normalized_report, report_pe_types, spread,
-                            DseResult, DEFAULT_CHUNK_SIZE)
+                            trace_count, reset_trace_count,
+                            DseResult, RESULT_DTYPES, DEFAULT_CHUNK_SIZE)
 from repro.core.ppa import fit_ppa_models, PPAModels, r2, mape
 from repro.core.synth import synthesize, SynthResult
-from repro.core.workloads import (Workload, LayerSpec, PAPER_WORKLOADS,
-                                  MODEL_FAMILIES, transformer_workload,
-                                  transformer_gemm, vgg16, resnet_cifar,
-                                  resnet34, resnet50, workload_macs)
+from repro.core.workloads import (Workload, LayerSpec, StackedWorkload,
+                                  PAPER_WORKLOADS, MODEL_FAMILIES,
+                                  transformer_workload, transformer_gemm,
+                                  vgg16, resnet_cifar, resnet34, resnet50,
+                                  workload_macs, workload_layers,
+                                  pad_workload, layer_bucket, stack_workloads)
 
 __all__ = [
     "AcceleratorConfig", "make_config", "stack_configs", "enumerate_space",
@@ -52,9 +55,11 @@ __all__ = [
     "pareto_front", "pareto_front_streaming",
     "pareto_mask", "pareto_mask_dense", "pareto_mask_tiled", "pareto_mask_2d",
     "ParetoArchive", "normalized_report", "report_pe_types", "spread",
-    "DseResult", "DEFAULT_CHUNK_SIZE",
+    "trace_count", "reset_trace_count",
+    "DseResult", "RESULT_DTYPES", "DEFAULT_CHUNK_SIZE",
     "fit_ppa_models", "PPAModels", "r2", "mape", "synthesize", "SynthResult",
-    "Workload", "LayerSpec", "PAPER_WORKLOADS", "MODEL_FAMILIES",
-    "transformer_workload", "transformer_gemm", "vgg16", "resnet_cifar",
-    "resnet34", "resnet50", "workload_macs",
+    "Workload", "LayerSpec", "StackedWorkload", "PAPER_WORKLOADS",
+    "MODEL_FAMILIES", "transformer_workload", "transformer_gemm", "vgg16",
+    "resnet_cifar", "resnet34", "resnet50", "workload_macs",
+    "workload_layers", "pad_workload", "layer_bucket", "stack_workloads",
 ]

@@ -194,11 +194,12 @@ def enumerate_space(space: dict | None = None,
 # Joint (model x accelerator) space: the co-exploration axis (QUIDAM/QAPPA).
 #
 # The workload axis is one more mixed-radix digit, the SLOWEST-varying one:
-# joint flat index = model_id * space_size(space) + accelerator_index.  That
-# ordering matches ``itertools.product(models, accel_points)`` and means a
-# contiguous index range never straddles two models, so chunked walks keep
-# fixed layer shapes per chunk (one jit compilation per distinct layer
-# count, exactly like the single-workload path).
+# joint flat index = model_id * space_size(space) + accelerator_index,
+# matching ``itertools.product(models, accel_points)``.  Chunked walks mix
+# models freely by default (lanes carry a model_id vector and the evaluator
+# gathers each lane's layer stack from a bucketed (M, L) pytree — one
+# compilation per layer-count bucket); ``group_by_model=True`` keeps the
+# historical never-mix walk as the oracle path.
 # ---------------------------------------------------------------------------
 
 def joint_space_size(space: dict | None = None, num_models: int = 1) -> int:
@@ -225,18 +226,45 @@ def joint_space_points(
     return idx // a, space_points(idx % a, space)
 
 
+def _validate_model_groups(model_groups, num_models: int) -> tuple:
+    groups = tuple(tuple(int(m) for m in g) for g in model_groups)
+    flat = [m for g in groups for m in g]
+    if any(m < 0 or m >= num_models for m in flat):
+        raise ValueError(f"model_groups reference models outside "
+                         f"[0, {num_models}): {groups}")
+    if len(flat) != len(set(flat)):
+        raise ValueError(f"model_groups assign a model twice: {groups}")
+    return groups
+
+
 def iter_joint_space_chunks(
         space: dict | None = None,
         num_models: int = 1,
         chunk_size: int = 4096,
         max_points: int | None = None,
-        seed: int = 0) -> Iterator[tuple[int, AcceleratorConfig, np.ndarray]]:
-    """Lazily yield ``(model_id, config_chunk, flat_joint_indices)``.
+        seed: int = 0,
+        group_by_model: bool = False,
+        model_groups: Sequence[Sequence[int]] | None = None,
+) -> Iterator[tuple[int | np.ndarray, AcceleratorConfig, np.ndarray]]:
+    """Lazily yield ``(model_ids, config_chunk, flat_joint_indices)``.
 
-    Chunks never mix models (the model axis is the slowest digit), so each
-    model's chunks share one fixed evaluation shape.  ``max_points``
-    subsamples the JOINT space uniformly — models with more sampled points
-    simply yield more chunks.  Memory stays O(chunk_size).
+    Default (mixed) mode yields dense fixed-shape chunks that freely cross
+    model boundaries — ``model_ids`` is an int64 array aligned with the
+    chunk lanes.  With layer-count-bucketed workloads every chunk then
+    hits the same compiled evaluator, which is what makes M-model joint
+    sweeps run at single-model throughput.  ``model_groups`` (disjoint
+    tuples of model ids) restricts mixing to within each group — the
+    bucketing policy's compilation classes; groups are walked in the
+    given order, models not in any group are skipped, and global joint
+    indices are preserved.
+
+    ``group_by_model=True`` restores the PR 2 behavior — yields a scalar
+    ``model_id`` per chunk and never mixes models (one compilation per
+    distinct layer count); kept as the oracle path for equivalence tests.
+
+    ``max_points`` subsamples the JOINT space uniformly with the same RNG
+    stream in both modes, so mixed and grouped walks visit the exact same
+    point set.  Memory stays O(chunk_size + max_points).
     """
     a = space_size(space)
     n = joint_space_size(space, num_models)
@@ -244,14 +272,35 @@ def iter_joint_space_chunks(
     if max_points is not None and n > max_points:
         rng = np.random.default_rng(seed)
         keep = np.sort(rng.choice(n, size=max_points, replace=False))
-    for m in range(num_models):
+    if group_by_model:
+        for m in range(num_models):
+            if keep is None:
+                midx = np.arange(m * a, (m + 1) * a, dtype=np.int64)
+            else:
+                midx = keep[(keep >= m * a) & (keep < (m + 1) * a)]
+            for lo in range(0, len(midx), chunk_size):
+                idx = midx[lo:lo + chunk_size]
+                yield m, space_points(idx - m * a, space), idx
+        return
+    if model_groups is None:
+        groups = (tuple(range(num_models)),)
+    else:
+        groups = _validate_model_groups(model_groups, num_models)
+    for group in groups:
+        g = np.asarray(group, np.int64)
         if keep is None:
-            midx = np.arange(m * a, (m + 1) * a, dtype=np.int64)
+            # lazy per-chunk decode of the group's local enumeration:
+            # local index l -> (model g[l // a], accel l % a)
+            g_n = len(g) * a
+            for lo in range(0, g_n, chunk_size):
+                loc = np.arange(lo, min(lo + chunk_size, g_n), dtype=np.int64)
+                mids = g[loc // a]
+                yield mids, space_points(loc % a, space), mids * a + loc % a
         else:
-            midx = keep[(keep >= m * a) & (keep < (m + 1) * a)]
-        for lo in range(0, len(midx), chunk_size):
-            idx = midx[lo:lo + chunk_size]
-            yield m, space_points(idx - m * a, space), idx
+            gidx = keep[np.isin(keep // a, g)]
+            for lo in range(0, len(gidx), chunk_size):
+                idx = gidx[lo:lo + chunk_size]
+                yield idx // a, space_points(idx % a, space), idx
 
 
 def config_rows(cfg: AcceleratorConfig) -> Iterable[dict]:

@@ -8,9 +8,10 @@ pair** the unit of design-space exploration:
 * the **joint space** is the mixed-radix product of a model axis (any
   sequence of ``ModelEntry``; see ``workloads.MODEL_FAMILIES`` for the
   parameterized generators) and the accelerator space — enumerated lazily
-  by ``arch.iter_joint_space_chunks`` with the model as the slowest digit,
-  so chunks never mix models and each model's chunks reuse one compiled
-  evaluation;
+  by ``arch.iter_joint_space_chunks`` with the model as the slowest digit;
+  chunks freely MIX models within a layer-count bucket (model-lane batched
+  evaluation over bit-exactly padded, stacked workloads), so the whole
+  sweep costs one XLA compilation per bucket instead of one per model;
 * the **accuracy axis** comes from ``accuracy.AccuracySurrogate`` (seeded
   from the paper's Figs. 5-6 deltas, calibratable with measured QAT
   results — provenance contract in that module's docstring);
@@ -47,8 +48,9 @@ from repro.core.arch import (AcceleratorConfig, PE_TYPE_NAMES, config_rows,
                              joint_space_size)
 from repro.core.dse import DEFAULT_CHUNK_SIZE, ParetoArchive, evaluate_chunk
 from repro.core.ppa import PPAModels
-from repro.core.workloads import (Workload, resnet_cifar, transformer_gemm,
-                                  vgg16, workload_macs)
+from repro.core.workloads import (Workload, layer_bucket, resnet_cifar,
+                                  stack_workloads, transformer_gemm, vgg16,
+                                  workload_layers, workload_macs)
 
 # The joint objectives, all HIGHER-IS-BETTER (column order of the archive).
 COEXPLORE_METRICS = ("accuracy", "macs_per_s_per_mm2", "neg_energy_per_mac_pj")
@@ -103,15 +105,16 @@ class CoexploreFront(NamedTuple):
     metrics: tuple                 # objective column names (higher-better)
     per_model_best: dict           # (model, pe_name) -> best-seen scalars
     points_evaluated: int
+    buckets: tuple = ()            # (padded depth, model names) per group
 
 
-def _joint_objectives(res, acc_by_type: np.ndarray,
-                      pe_codes: np.ndarray) -> np.ndarray:
+def _joint_objectives(res, lane_acc: np.ndarray) -> np.ndarray:
     """(N, 3) higher-is-better objective matrix for one chunk.
 
     MACs-normalized: throughput = MACs/s/mm^2, energy = pJ/MAC — the
     per-model normalization that makes objectives comparable across
-    workloads (res.macs is the network's MAC count, constant per model).
+    workloads (res.macs is each lane's own network MAC count, so a mixed
+    chunk normalizes every lane by its model for free).
     """
     lat = np.asarray(res.latency_s, np.float64)
     area = np.asarray(res.area_mm2, np.float64)
@@ -119,7 +122,24 @@ def _joint_objectives(res, acc_by_type: np.ndarray,
     macs = np.asarray(res.macs, np.float64)
     mps_mm2 = macs / np.maximum(lat, 1e-12) / np.maximum(area, 1e-9)
     e_per_mac = energy / np.maximum(macs, 1.0) * 1e12
-    return np.stack([acc_by_type[pe_codes], mps_mm2, -e_per_mac], axis=-1)
+    return np.stack([lane_acc, mps_mm2, -e_per_mac], axis=-1)
+
+
+def _update_per_model_best(best: dict, models: tuple, acc_matrix: np.ndarray,
+                           mids: np.ndarray, codes: np.ndarray,
+                           obj: np.ndarray) -> None:
+    """Fold one chunk into the (model, PE-type) best-seen aggregates."""
+    n_types = len(PE_TYPE_NAMES)
+    for k in np.unique(mids * n_types + codes):
+        m, code = divmod(int(k), n_types)
+        sel = (mids == m) & (codes == code)
+        entry = best.setdefault((models[m].name, PE_TYPE_NAMES[code]), dict(
+            macs_per_s_per_mm2=-np.inf, energy_per_mac_pj=np.inf,
+            accuracy=float(acc_matrix[m, code])))
+        entry["macs_per_s_per_mm2"] = max(entry["macs_per_s_per_mm2"],
+                                          float(obj[sel, 1].max()))
+        entry["energy_per_mac_pj"] = min(entry["energy_per_mac_pj"],
+                                         float(-obj[sel, 2].max()))
 
 
 def coexplore_front(
@@ -129,48 +149,87 @@ def coexplore_front(
         accuracy: AccuracySurrogate | None = None,
         chunk_size: int = DEFAULT_CHUNK_SIZE,
         max_points: int | None = None,
-        seed: int = 0) -> CoexploreFront:
+        seed: int = 0,
+        mix_models: bool = True,
+        layer_buckets: Sequence[int] | None = None) -> CoexploreFront:
     """Stream the joint (model x accelerator) space into a 3-objective
     non-dominated archive.
+
+    The default walk is the ONE-COMPILE fast path: models are bucketed to
+    canonical padded depths (``workloads.layer_bucket``; override the
+    sizes with ``layer_buckets``), each bucket's workloads are stacked
+    into an (M, L) pytree, and chunks freely mix models within a bucket —
+    every lane gathers its own layer stack inside the jitted evaluator,
+    so the whole joint sweep costs one XLA compilation per bucket (<= 3
+    for the default model zoo) instead of one per distinct layer count.
+    Padding is bit-exact, so the resulting front is IDENTICAL to the
+    per-model walk (``mix_models=False``, the PR 2 oracle path).
 
     ``surrogate`` switches clock/area/leakage from the synthesis oracle to
     the fitted PPA models (same contract as ``evaluate_space``);
     ``accuracy`` defaults to a fresh seeded ``AccuracySurrogate`` — pass a
     calibrated one to use measured QAT results.  ``max_points`` subsamples
-    the JOINT space.  Memory stays O(chunk_size + front size); the joint
-    objective matrix is never materialized.
+    the JOINT space (same RNG stream in both walks, so they visit the
+    exact same points).  Memory stays O(chunk_size + front size); the
+    joint objective matrix is never materialized.
     """
     models = tuple(models)
     if not models:
         raise ValueError("need at least one ModelEntry on the model axis")
     accuracy = AccuracySurrogate() if accuracy is None else accuracy
-    # per-model accuracy column, indexed by pe_type code (capacity-scaled,
+    # (M, n_pe_types) accuracy constants: the per-lane accuracy objective
+    # is the gather acc_matrix[model_id, pe_code] (capacity-scaled,
     # calibration-aware)
-    acc_by_type = [accuracy.predict_per_type(m.name, m.macs, m.base_acc)
-                   for m in models]
+    acc_matrix = np.stack([accuracy.predict_per_type(m.name, m.macs,
+                                                     m.base_acc)
+                           for m in models])
     archive = ParetoArchive(len(COEXPLORE_METRICS))
     per_model_best: dict[tuple[str, str], dict] = {}
     total = 0
+    if mix_models:
+        # group the model axis into layer-count buckets: each group gets
+        # one stacked (M_b, L_b) workload == one compiled evaluator
+        bucket_of = [layer_bucket(workload_layers(m.workload), layer_buckets)
+                     for m in models]
+        groups: dict[int, list[int]] = {}
+        for i, b in enumerate(bucket_of):
+            groups.setdefault(b, []).append(i)
+        group_ids = tuple(tuple(groups[b]) for b in sorted(groups))
+        stacked = {b: stack_workloads([models[i].workload for i in groups[b]],
+                                      pad_to=b) for b in groups}
+        # global model id -> position in its group's stack
+        local = np.full(len(models), -1, np.int64)
+        for b in groups:
+            local[groups[b]] = np.arange(len(groups[b]))
+        buckets_meta = tuple((b, tuple(models[i].name for i in groups[b]))
+                             for b in sorted(groups))
+        for mids, cfg, idx in iter_joint_space_chunks(
+                space, num_models=len(models), chunk_size=chunk_size,
+                max_points=max_points, seed=seed, model_groups=group_ids):
+            res = evaluate_chunk(cfg, stacked[bucket_of[int(mids[0])]],
+                                 surrogate, pad_to=chunk_size,
+                                 model_ids=local[mids])
+            codes = np.asarray(cfg.pe_type).astype(np.int64)
+            obj = _joint_objectives(res, acc_matrix[mids, codes])
+            archive.update(obj, idx)
+            total += len(idx)
+            _update_per_model_best(per_model_best, models, acc_matrix,
+                                   mids, codes, obj)
+        return CoexploreFront(archive=archive, models=models, space=space,
+                              metrics=COEXPLORE_METRICS,
+                              per_model_best=per_model_best,
+                              points_evaluated=total, buckets=buckets_meta)
     for m, cfg, idx in iter_joint_space_chunks(
             space, num_models=len(models), chunk_size=chunk_size,
-            max_points=max_points, seed=seed):
-        entry = models[m]
-        res = evaluate_chunk(cfg, entry.workload, surrogate,
+            max_points=max_points, seed=seed, group_by_model=True):
+        res = evaluate_chunk(cfg, models[m].workload, surrogate,
                              pad_to=chunk_size)
         codes = np.asarray(cfg.pe_type).astype(np.int64)
-        obj = _joint_objectives(res, acc_by_type[m], codes)
+        obj = _joint_objectives(res, acc_matrix[m][codes])
         archive.update(obj, idx)
         total += len(idx)
-        for code in np.unique(codes):
-            sel = codes == code
-            key = (entry.name, PE_TYPE_NAMES[int(code)])
-            best = per_model_best.setdefault(key, dict(
-                macs_per_s_per_mm2=-np.inf, energy_per_mac_pj=np.inf,
-                accuracy=float(acc_by_type[m][code])))
-            best["macs_per_s_per_mm2"] = max(best["macs_per_s_per_mm2"],
-                                             float(obj[sel, 1].max()))
-            best["energy_per_mac_pj"] = min(best["energy_per_mac_pj"],
-                                            float(-obj[sel, 2].max()))
+        _update_per_model_best(per_model_best, models, acc_matrix,
+                               np.full(len(codes), m, np.int64), codes, obj)
     return CoexploreFront(archive=archive, models=models, space=space,
                           metrics=COEXPLORE_METRICS,
                           per_model_best=per_model_best,
@@ -262,5 +321,7 @@ def coexplore_report(front: CoexploreFront) -> dict:
         space_size=joint_space_size(front.space, len(front.models)),
         metrics=list(front.metrics),
         front_counts=dict(by_model=by_model, by_pe_type=by_pe),
+        layer_buckets=[dict(depth=b, models=list(names))
+                       for b, names in front.buckets],
         claim=lightpe_claim(front),
     )

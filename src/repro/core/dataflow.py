@@ -157,13 +157,65 @@ def layer_cost(layer: LayerSpec, cfg: AcceleratorConfig,
         energy_mem_pj=e_mem, energy_dram_pj=e_dram)
 
 
+def _layer_fold(x: jnp.ndarray) -> jnp.ndarray:
+    """Strictly sequential left fold over the LAST (layer) axis.
+
+    ``jnp.sum`` lets XLA reassociate the reduction, and the association it
+    picks depends on the layer count — so a workload padded with exact-0.0
+    layers would sum to a *different* float32 value than its unpadded
+    oracle.  An unrolled left fold always adds layers in stack order:
+    trailing zeros land after the valid prefix and ``x + 0.0 == x`` is
+    exact.
+    """
+    acc = x[..., 0]
+    for i in range(1, x.shape[-1]):
+        acc = acc + x[..., i]
+    return acc
+
+
+def reduce_layer_costs(per_layer: LayerCost, counts: jnp.ndarray,
+                       barrier: bool = False) -> LayerCost:
+    """Mask padded layers to exact 0.0 and fold the LAST (layer) axis.
+
+    The padding contract: layers with ``count == 0`` contribute exact 0.0
+    to every summed field and weight 0 to the MAC-weighted utilization, so
+    a padded workload reduces to the same values as its unpadded oracle.
+
+    ``barrier=True`` (the DSE evaluators) additionally pins the per-layer
+    values with ``lax.optimization_barrier`` before the fold: without it,
+    XLA fuses the per-layer arithmetic into the fold chain and makes
+    ulp-level FMA/vectorization choices that depend on the padded length,
+    which would leak shape-dependent noise into otherwise-identical
+    results.  The barrier has no batching rule, so it is only available
+    outside ``vmap`` — ``network_cost`` (which is vmapped per lane by
+    legacy callers) skips it; under eager execution the fold is
+    bit-stable anyway because there is no cross-op fusion.
+    """
+    valid = counts > 0.0
+    per_layer = jax.tree.map(lambda x: jnp.where(valid, x, 0.0), per_layer)
+    if barrier:
+        per_layer = jax.lax.optimization_barrier(per_layer)
+    summed = jax.tree.map(_layer_fold, per_layer)
+    # utilization: MAC-weighted mean, not a sum
+    util = _layer_fold(per_layer.utilization * per_layer.macs) / \
+        jnp.maximum(_layer_fold(per_layer.macs), 1.0)
+    # rebuild the total from the folded components at a fixed association
+    # (folding per-layer totals would re-round differently than the sums)
+    return summed._replace(
+        utilization=util,
+        energy_pj=(summed.energy_mac_pj + summed.energy_mem_pj
+                   + summed.energy_dram_pj))
+
+
 def network_cost(layers: LayerSpec, cfg: AcceleratorConfig,
                  clock_ghz: jnp.ndarray) -> LayerCost:
-    """Sum layer costs over a stacked LayerSpec (vmapped over layers)."""
+    """Sum layer costs over a stacked LayerSpec (vmapped over layers).
+
+    Layers with ``count == 0`` are padding (``workloads.pad_workload``) and
+    are masked out of the reduction entirely — see ``reduce_layer_costs``
+    for the exact-padding contract that lets mixed-model chunks share one
+    compiled evaluator regardless of each model's true layer count.
+    """
     per_layer = jax.vmap(layer_cost, in_axes=(0, None, None))(
         layers, cfg, clock_ghz)
-    summed = jax.tree.map(lambda x: jnp.sum(x, axis=0), per_layer)
-    # utilization: MAC-weighted mean, not a sum
-    util = jnp.sum(per_layer.utilization * per_layer.macs) / \
-        jnp.maximum(jnp.sum(per_layer.macs), 1.0)
-    return summed._replace(utilization=util)
+    return reduce_layer_costs(per_layer, layers.count)

@@ -34,19 +34,36 @@ import numpy as np
 
 from repro.core.arch import (AcceleratorConfig, PE_INT16, PE_TYPE_NAMES,
                              iter_space_chunks, space_points)
-from repro.core.dataflow import network_cost
+from repro.core.dataflow import layer_cost, reduce_layer_costs
 from repro.core.ppa import PPAModels
 from repro.core.synth import synthesize
-from repro.core.workloads import Workload
+from repro.core.workloads import StackedWorkload, Workload
 
 # Default number of design points evaluated per jit call in the streaming
 # paths. Large enough to amortize dispatch, small enough that a chunk's
 # intermediates stay in cache-friendly territory.
 DEFAULT_CHUNK_SIZE = 4096
 
+# Host-side dtype of every DseResult column (what evaluate_chunk /
+# evaluate_space return).  The derived metric columns are computed ON HOST
+# in float64 from the device cost sums — one implementation shared by
+# every evaluation path, so identical device sums give bit-identical
+# columns regardless of batch shape or model mixing (XLA re-fuses the
+# derived arithmetic differently per compiled shape, which would otherwise
+# leak ulp-level noise into the Pareto objectives).  macs in particular
+# needs float64: it is a count that overflows float32's 24-bit mantissa
+# for ImageNet-scale networks.
+RESULT_DTYPES = dict.fromkeys((
+    "latency_s", "energy_j", "energy_total_j", "area_mm2", "power_mw",
+    "clock_ghz", "perf", "perf_per_area", "utilization", "macs"), np.float64)
+
 
 class DseResult(NamedTuple):
-    """Struct-of-arrays over N design points for one workload."""
+    """Struct-of-arrays over N design points for one workload.
+
+    Columns returned by ``evaluate_chunk`` / ``evaluate_space`` are host
+    numpy arrays with the dtypes in ``RESULT_DTYPES``.
+    """
     latency_s: jnp.ndarray
     energy_j: jnp.ndarray        # chip energy: MAC + on-chip mem + leakage*T
     energy_total_j: jnp.ndarray  # chip + DRAM (beyond-paper reporting)
@@ -59,43 +76,118 @@ class DseResult(NamedTuple):
     macs: jnp.ndarray
 
 
-@jax.jit
-def _evaluate(cfg: AcceleratorConfig, clock_ghz: jnp.ndarray,
-              area_mm2: jnp.ndarray, leak_mw: jnp.ndarray, layers) -> DseResult:
-    def one(c, clk):
-        return network_cost(layers, c, clk)
+# Number of times the jitted evaluators have been TRACED (== compiled for a
+# new shape).  Benchmarks read deltas of this to report n_compiles — the
+# compile-amortization story of bucketed one-compile sweeps.
+_TRACE_COUNT = 0
 
-    cost = jax.vmap(one)(cfg, clock_ghz)
-    latency_s = cost.cycles / (clock_ghz * 1e9)
+
+def trace_count() -> int:
+    """Cumulative evaluator trace/compile count for this process."""
+    return _TRACE_COUNT
+
+
+def reset_trace_count() -> None:
+    global _TRACE_COUNT
+    _TRACE_COUNT = 0
+
+
+def _count_trace() -> None:
+    # Python side effect inside a jitted function: runs once per trace.
+    global _TRACE_COUNT
+    _TRACE_COUNT += 1
+
+
+@jax.jit
+def _network_sums(cfg: AcceleratorConfig, clock_ghz: jnp.ndarray, layers):
+    """Summed network cost per design-point lane (the jitted hot path).
+
+    Per-layer costs are computed for all (lane, layer) pairs first, then
+    reduced OUTSIDE the vmap with the optimization barrier in place — the
+    structure that makes results a bit-identical function of the layer
+    values regardless of padded depth (see ``reduce_layer_costs``).
+    """
+    _count_trace()
+    per_layer = jax.vmap(
+        lambda c, clk: jax.vmap(layer_cost, in_axes=(0, None, None))(
+            layers, c, clk))(cfg, clock_ghz)      # leaves (lanes, L)
+    return reduce_layer_costs(per_layer, layers.count, barrier=True)
+
+
+@jax.jit
+def _network_sums_mixed(cfg: AcceleratorConfig, clock_ghz: jnp.ndarray,
+                        stacked_layers, model_ids: jnp.ndarray):
+    """Model-lane batched evaluation: each lane gathers its own layer stack
+    from the (M, L) pytree, so one compiled executable serves chunks that
+    freely mix models (the one-compile joint sweep)."""
+    _count_trace()
+    lane_layers = jax.tree.map(lambda x: x[model_ids], stacked_layers)
+    per_layer = jax.vmap(
+        lambda lay, c, clk: jax.vmap(layer_cost, in_axes=(0, None, None))(
+            lay, c, clk))(lane_layers, cfg, clock_ghz)  # leaves (lanes, L)
+    return reduce_layer_costs(per_layer, lane_layers.count, barrier=True)
+
+
+def _finish(cost, clock_ghz, area_mm2, leak_mw) -> DseResult:
+    """Network cost sums -> DSE metric columns, on HOST in float64.
+
+    Deliberately outside jit: the derived arithmetic is a handful of
+    elementwise ops per lane, and keeping it in one host implementation
+    makes the columns a deterministic function of the device sums — the
+    property that lets a mixed-model bucketed sweep reproduce the
+    per-model walk bit-for-bit.
+    """
+    f64 = lambda x: np.asarray(x, np.float64)  # noqa: E731
+    cycles, util, macs = f64(cost.cycles), f64(cost.utilization), f64(cost.macs)
+    e_mac, e_mem = f64(cost.energy_mac_pj), f64(cost.energy_mem_pj)
+    e_dram = f64(cost.energy_dram_pj)
+    clock_ghz, area_mm2 = f64(clock_ghz), f64(area_mm2)
+    latency_s = cycles / (clock_ghz * 1e9)
     # The paper's energy = synthesized chip power x simulated runtime: the
     # dynamic part is the access-count model (MAC + RF/NoC/gbuf), plus
     # leakage x runtime. DRAM energy is invisible to a DC synthesis flow and
     # is reported separately (energy_total_j).
-    e_chip = (cost.energy_mac_pj + cost.energy_mem_pj) * 1e-12 \
-        + leak_mw * 1e-3 * latency_s
-    e_total = e_chip + cost.energy_dram_pj * 1e-12
-    perf = 1.0 / jnp.maximum(latency_s, 1e-12)
+    e_chip = (e_mac + e_mem) * 1e-12 + f64(leak_mw) * 1e-3 * latency_s
+    perf = 1.0 / np.maximum(latency_s, 1e-12)
     return DseResult(
-        latency_s=latency_s, energy_j=e_chip, energy_total_j=e_total,
+        latency_s=latency_s, energy_j=e_chip,
+        energy_total_j=e_chip + e_dram * 1e-12,
         area_mm2=area_mm2,
-        power_mw=e_chip / jnp.maximum(latency_s, 1e-12) * 1e3,
+        power_mw=e_chip / np.maximum(latency_s, 1e-12) * 1e3,
         clock_ghz=clock_ghz, perf=perf,
-        perf_per_area=perf / jnp.maximum(area_mm2, 1e-9),
-        utilization=cost.utilization, macs=cost.macs)
+        perf_per_area=perf / np.maximum(area_mm2, 1e-9),
+        utilization=util, macs=macs)
+
+
+# One shape-keyed executable for the synthesis oracle, shared by every
+# evaluation path: avoids ~100 eager op dispatches per chunk AND pins the
+# clock/area/leakage bits to a single compiled graph, so mixed-model and
+# per-model walks can never diverge through the synthesis side.
+_synthesize_jit = jax.jit(synthesize)
 
 
 def _evaluate_batch(cfg: AcceleratorConfig, workload: Workload,
-                    surrogate: PPAModels | None) -> DseResult:
-    synth = synthesize(cfg) if surrogate is None else surrogate.predict(cfg)
-    return _evaluate(cfg, synth.clock_ghz, synth.area_mm2, synth.leakage_mw,
-                     workload.layers)
+                    surrogate: PPAModels | None,
+                    model_ids: jnp.ndarray | None = None) -> DseResult:
+    synth = (_synthesize_jit(cfg) if surrogate is None
+             else surrogate.predict(cfg))
+    if model_ids is not None:
+        cost = _network_sums_mixed(cfg, synth.clock_ghz, workload.layers,
+                                   model_ids)
+    else:
+        cost = _network_sums(cfg, synth.clock_ghz, workload.layers)
+    return _finish(cost, synth.clock_ghz, synth.area_mm2, synth.leakage_mw)
 
 
 def _pad_config(cfg: AcceleratorConfig, pad: int) -> AcceleratorConfig:
     """Repeat the last design point ``pad`` times so the chunk shape is
-    fixed — padded lanes are sliced off after evaluation."""
+    fixed — padded lanes are sliced off after evaluation.  Host numpy:
+    padding happens on every trailing partial chunk and eager device
+    concatenates cost more than the whole jit dispatch."""
     return AcceleratorConfig(*[
-        jnp.concatenate([f, jnp.broadcast_to(f[-1:], (pad,) + f.shape[1:])])
+        np.concatenate([np.asarray(f),
+                        np.broadcast_to(np.asarray(f)[-1:],
+                                        (pad,) + np.shape(f)[1:])])
         for f in cfg])
 
 
@@ -103,9 +195,15 @@ def _slice_config(cfg: AcceleratorConfig, lo: int, hi: int) -> AcceleratorConfig
     return AcceleratorConfig(*[f[lo:hi] for f in cfg])
 
 
-def evaluate_chunk(cfg: AcceleratorConfig, workload: Workload,
+def _next_pow2(n: int) -> int:
+    return 1 << max(n - 1, 0).bit_length()
+
+
+def evaluate_chunk(cfg: AcceleratorConfig,
+                   workload: Workload | StackedWorkload,
                    surrogate: PPAModels | None = None,
-                   pad_to: int | None = None) -> DseResult:
+                   pad_to: int | None = None,
+                   model_ids=None) -> DseResult:
     """Evaluate one pre-chunked batch at a fixed jit shape (host result).
 
     With ``pad_to`` set, the batch is padded (repeating its last point) up
@@ -113,14 +211,45 @@ def evaluate_chunk(cfg: AcceleratorConfig, workload: Workload,
     trimmed from the result — so every chunk of a streaming walk hits the
     same compiled executable.  This is the shared building block of
     ``evaluate_space_streaming`` and the joint co-exploration evaluator.
+
+    Passing a ``StackedWorkload`` plus a per-lane ``model_ids`` vector
+    (positions into the stack) evaluates a MIXED-model chunk: each lane
+    gathers its own layer stack inside the jitted function, so chunks
+    crossing model boundaries still share one compilation per (chunk
+    shape, stacked depth).  Lane results are bit-identical to evaluating
+    each lane under its own unpadded workload.
     """
+    stacked = isinstance(workload, StackedWorkload)
+    if stacked != (model_ids is not None):
+        raise ValueError("model_ids must be given with a StackedWorkload "
+                         "and only with one")
     if np.ndim(cfg.pe_rows) == 0:  # single unbatched point: lift to (1,)
         cfg = AcceleratorConfig(*[jnp.reshape(f, (1,)) for f in cfg])
     n = int(np.shape(cfg.pe_rows)[0])
+    mids = None
+    if stacked:
+        mids = np.asarray(model_ids, np.int32)
+        if mids.shape != (n,):
+            raise ValueError(f"model_ids shape {mids.shape} != ({n},)")
+        n_models = int(np.shape(workload.layers.H)[0])
+        if mids.size and (mids.min() < 0 or mids.max() >= n_models):
+            raise ValueError(f"model_ids out of range for {n_models} "
+                             f"stacked models")
     if pad_to is not None and n < pad_to:
         cfg = _pad_config(cfg, pad_to - n)
-    res = _evaluate_batch(cfg, workload, surrogate)
-    return DseResult(*[np.asarray(f[:n]) for f in res])
+        if mids is not None:  # padded lanes repeat the last (model, config)
+            mids = np.concatenate([mids, np.broadcast_to(mids[-1:],
+                                                         (pad_to - n,))])
+    res = _evaluate_batch(cfg, workload, surrogate,
+                          None if mids is None else jnp.asarray(mids))
+    return DseResult(*[np.asarray(col[:n], RESULT_DTYPES[f])
+                       for f, col in zip(DseResult._fields, res)])
+
+
+def _empty_result() -> DseResult:
+    """Zero-point DseResult with the documented per-column host dtypes."""
+    return DseResult(*[np.empty((0,), RESULT_DTYPES[f])
+                       for f in DseResult._fields])
 
 
 def evaluate_space(cfg: AcceleratorConfig, workload: Workload,
@@ -135,22 +264,29 @@ def evaluate_space(cfg: AcceleratorConfig, workload: Workload,
     under a single jit compilation (the final partial chunk is padded to
     the chunk shape), and the result columns are accumulated as host
     numpy arrays — device memory stays O(chunk_size) however large N is.
+
+    A batch that fits in one chunk is padded up to a canonical shape (the
+    chunk size if given, else the next power of two), so callers throwing
+    many distinct small N at the engine reuse a handful of compiled
+    executables instead of retracing per batch shape.
     """
     n = int(np.shape(cfg.pe_rows)[0]) if np.ndim(cfg.pe_rows) else 1
+    if n == 0:
+        return _empty_result()
     if chunk_size is None or n <= chunk_size:
-        # a single chunk costs one compilation either way — don't pad it
-        return _evaluate_batch(cfg, workload, surrogate)
+        # canonical next-pow-2 shape (capped at the chunk size) so many
+        # distinct small N share a handful of compiled executables without
+        # padding a tiny batch all the way up to a huge chunk
+        pad = _next_pow2(n) if chunk_size is None \
+            else min(chunk_size, _next_pow2(n))
+        return evaluate_chunk(cfg, workload, surrogate, pad_to=pad)
     cols: list[list[np.ndarray]] = [[] for _ in DseResult._fields]
     for lo in range(0, n, chunk_size):
-        chunk = _slice_config(cfg, lo, min(lo + chunk_size, n))
-        valid = int(np.shape(chunk.pe_rows)[0])
-        if valid < chunk_size:
-            chunk = _pad_config(chunk, chunk_size - valid)
-        res = _evaluate_batch(chunk, workload, surrogate)
+        res = evaluate_chunk(_slice_config(cfg, lo, min(lo + chunk_size, n)),
+                             workload, surrogate, pad_to=chunk_size)
         for acc, col in zip(cols, res):
-            acc.append(np.asarray(col[:valid]))
-    return DseResult(*[np.concatenate(c) if c else np.empty((0,), np.float32)
-                       for c in cols])
+            acc.append(col)
+    return DseResult(*[np.concatenate(c) for c in cols])
 
 
 def evaluate_space_streaming(
@@ -308,6 +444,24 @@ def pareto_front(result: DseResult,
                        method=method)
 
 
+def _dominated_by(points: np.ndarray, front: np.ndarray) -> np.ndarray:
+    """Boolean mask: is ``points[i]`` dominated by some row of ``front``?
+    O(len(points) * len(front) * D) — cheap while ``front`` is small."""
+    if len(front) == 0 or len(points) == 0:
+        return np.zeros(len(points), bool)
+    ge = np.all(front[None, :, :] >= points[:, None, :], axis=-1)
+    gt = np.any(front[None, :, :] > points[:, None, :], axis=-1)
+    return np.any(ge & gt, axis=1)
+
+
+def _self_nondominated(pts: np.ndarray) -> np.ndarray:
+    """Dense pairwise non-dominated mask of ``pts`` against itself,
+    O(N^2 * D) — reserve for small N (a block of a chunk)."""
+    ge = np.all(pts[None, :, :] >= pts[:, None, :], axis=-1)
+    gt = np.any(pts[None, :, :] > pts[:, None, :], axis=-1)
+    return ~np.any(ge & gt, axis=1)
+
+
 class ParetoArchive:
     """Streaming non-dominated archive.
 
@@ -336,40 +490,79 @@ class ParetoArchive:
         """Global flat indices of the current front's design points."""
         return self._idx
 
+    @staticmethod
+    def _chunk_front_mask(obj: np.ndarray, block: int = 512) -> np.ndarray:
+        """Exact non-dominated mask of one chunk, bounded memory/compute.
+
+        D == 2 uses the sort-based mask.  For D >= 3 the rows are scanned
+        in lexicographic-descending order in blocks: any dominator of a
+        point is lex-strictly-greater (the first differing objective must
+        favor it), so it lands in an earlier block (covered by checking
+        the block against the running front — transitivity guarantees an
+        *undominated* dominator exists there) or in the same block
+        (covered by a dense pass within the block).  Typical cost is
+        O(N log N + N * front * D) — the O(N^2) broadcast only ever
+        happens for pathological all-nondominated blocks, and then at
+        block granularity.
+        """
+        n, d = obj.shape
+        if d == 2:
+            return pareto_mask_2d(obj)
+        if n <= block:
+            return _self_nondominated(obj)
+        order = np.lexsort(tuple(-obj[:, k] for k in range(d - 1, -1, -1)))
+        s = obj[order]
+        keep = np.zeros(n, bool)
+        front = np.empty((0, d), np.float64)
+        for lo in range(0, n, block):
+            blk = s[lo:lo + block]
+            alive = np.flatnonzero(~_dominated_by(blk, front))
+            alive = alive[_self_nondominated(blk[alive])]
+            keep[lo + alive] = True
+            front = np.concatenate([front, blk[alive]])
+        mask = np.zeros(n, bool)
+        mask[order] = keep
+        return mask
+
     def update(self, objectives: np.ndarray,
                indices: np.ndarray | None = None) -> None:
         obj = np.asarray(objectives, np.float64)
         if obj.ndim != 2 or obj.shape[1] != self._obj.shape[1]:
             raise ValueError(f"expected (N, {self._obj.shape[1]}) objectives, "
                              f"got {obj.shape}")
+        if np.isnan(obj).any():
+            # NaN compares False both ways, so a NaN row would neither
+            # dominate nor be dominated — it would sit on the front forever,
+            # silently corrupting it.  Refuse loudly instead.
+            bad = np.flatnonzero(np.isnan(obj).any(axis=1))
+            raise ValueError(
+                f"objectives contain NaN in {len(bad)} row(s) "
+                f"(first: {bad[:5].tolist()}) — NaN rows can never be "
+                f"dominated and would corrupt the archive front")
         idx = (np.arange(self._seen, self._seen + len(obj))
                if indices is None else np.asarray(indices, np.int64))
         self._seen += len(obj)
-        # reduce the chunk to its own front first (bounds the merge cost);
+        # drop candidates the current front already dominates (one cheap
+        # O(N * front) pass that typically kills ~99% of a chunk), then
+        # reduce the survivors to their own front — this pair is what
+        # keeps the streaming update off the O(N^2) chunk broadcast;
         # stay in host float64 — routing through jnp would downcast to
         # float32 and drop points that differ only past float32 precision
+        if len(self._obj) and len(obj):
+            keep = ~_dominated_by(obj, self._obj)
+            obj, idx = obj[keep], idx[keep]
         if len(obj) > 1:
-            if obj.shape[1] == 2:
-                m = pareto_mask_2d(obj)
-            else:
-                ge = np.all(obj[None, :, :] >= obj[:, None, :], axis=-1)
-                gt = np.any(obj[None, :, :] > obj[:, None, :], axis=-1)
-                m = ~np.any(ge & gt, axis=1)
+            m = self._chunk_front_mask(obj)
             obj, idx = obj[m], idx[m]
         if len(obj) == 0:
             return
         if len(self._obj):
-            # archive points dominated by any new candidate
-            ge = np.all(obj[None, :, :] >= self._obj[:, None, :], axis=-1)
-            gt = np.any(obj[None, :, :] > self._obj[:, None, :], axis=-1)
-            keep_old = ~np.any(ge & gt, axis=1)
-            # candidates dominated by any surviving archive point
-            old = self._obj[keep_old]
-            ge = np.all(old[None, :, :] >= obj[:, None, :], axis=-1)
-            gt = np.any(old[None, :, :] > obj[:, None, :], axis=-1)
-            keep_new = ~np.any(ge & gt, axis=1)
-            self._obj = np.concatenate([old, obj[keep_new]])
-            self._idx = np.concatenate([self._idx[keep_old], idx[keep_new]])
+            # candidates already survived the front pre-filter and their
+            # own reduction, so the merge only evicts archive points a
+            # new candidate dominates
+            keep_old = ~_dominated_by(self._obj, obj)
+            self._obj = np.concatenate([self._obj[keep_old], obj])
+            self._idx = np.concatenate([self._idx[keep_old], idx])
         else:
             self._obj, self._idx = obj, idx
 

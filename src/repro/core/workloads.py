@@ -317,6 +317,111 @@ MODEL_FAMILIES = {
 }
 
 
+# ---------------------------------------------------------------------------
+# Layer-count padding + bucketing: the workload side of one-compile joint
+# sweeps.  Zero-count padding layers are masked to exact 0.0 in
+# dataflow.reduce_layer_costs and the layer fold is strictly sequential,
+# so models with different depths can share a fixed (M, L) evaluation
+# shape — and one XLA compilation — without perturbing a single result
+# (see pad_workload for the exact bit-identity contract).
+# ---------------------------------------------------------------------------
+
+# Padding row: every field at its smallest legal value, count=0.  count=0
+# zeroes MACs and every traffic/energy term exactly; the remaining fields
+# just have to keep the cost model finite (H=R=S=1 -> 1x1 output).
+_PAD_ROW = dict(H=1.0, W=1.0, C=1.0, K=1.0, R=1.0, S=1.0,
+                stride=1.0, batch=1.0, count=0.0)
+
+
+def workload_layers(wl: Workload) -> int:
+    """Number of stacked layers (including any padding rows)."""
+    return int(np.shape(wl.layers.H)[0])
+
+
+def pad_workload(wl: Workload, n_layers: int) -> Workload:
+    """Pad a workload to ``n_layers`` with zero-cost (count=0) layers.
+
+    The padding contract (property-tested): padding rows contribute exact
+    0.0 to every summed cost field and weight 0 to the MAC-weighted
+    utilization, so ``network_cost`` of the padded workload is
+    BIT-IDENTICAL to the unpadded oracle under eager execution and under
+    any fixed compiled evaluator shape.  (Comparing across two *different*
+    jit-compiled shapes can still see <=1-ulp noise from XLA's
+    shape-dependent FMA/vectorization choices in the per-layer kernel —
+    which is exactly why the joint engine buckets depths to a few
+    canonical shapes instead of padding each model to its own length.)
+    Idempotent for ``n_layers`` equal to the current depth; refuses to
+    truncate.
+    """
+    n = workload_layers(wl)
+    if n_layers < n:
+        raise ValueError(f"cannot pad {wl.name} ({n} layers) down to "
+                         f"{n_layers}")
+    if n_layers == n:
+        return wl
+    pad = n_layers - n
+    layers = LayerSpec(*[
+        jnp.concatenate([getattr(wl.layers, f),
+                         jnp.full((pad,), _PAD_ROW[f], jnp.float32)])
+        for f in LayerSpec._fields])
+    names = wl.layer_names + tuple(f"pad{i}" for i in range(pad))
+    return Workload(name=wl.name, layers=layers, layer_names=names)
+
+
+def layer_bucket(n_layers: int,
+                 buckets: Sequence[int] | None = None) -> int:
+    """Canonical padded depth for an ``n_layers``-deep model.
+
+    Default policy: next power of two, floored at 8 — the whole model zoo
+    collapses to a handful of canonical depths (the 9-model default axis
+    lands on {16, 32, 64} = at most 3 XLA compilations), and a new model
+    almost always reuses an existing compiled shape.  Pass explicit
+    ``buckets`` (ascending sizes) to override; counts above the largest
+    bucket fall back to the power-of-two policy.
+    """
+    if n_layers < 1:
+        raise ValueError(f"n_layers must be >= 1, got {n_layers}")
+    if buckets is not None:
+        for b in sorted(buckets):
+            if n_layers <= b:
+                return int(b)
+    return max(8, 1 << (n_layers - 1).bit_length())
+
+
+class StackedWorkload(NamedTuple):
+    """M workloads padded to one shared depth and stacked: leaves (M, L).
+
+    The model-lane form consumed by ``dse.evaluate_chunk(model_ids=...)``:
+    each evaluation lane gathers its row inside the jitted function, so a
+    chunk freely mixes models while hitting one compiled executable.
+    """
+    names: tuple            # model names, in stack order
+    layers: LayerSpec       # stacked+padded, leaves (M, L)
+    n_layers: tuple         # true (pre-padding) depth per model
+
+
+def stack_workloads(workloads: Sequence[Workload],
+                    pad_to: int | None = None,
+                    buckets: Sequence[int] | None = None) -> StackedWorkload:
+    """Stack workloads into an (M, L) pytree at one bucketed depth.
+
+    ``pad_to`` fixes the shared depth explicitly; the default buckets the
+    deepest member via ``layer_bucket`` so equal-bucket model sets stack
+    to the same shape (= the same compilation).
+    """
+    workloads = tuple(workloads)
+    if not workloads:
+        raise ValueError("need at least one workload to stack")
+    counts = [workload_layers(w) for w in workloads]
+    depth = layer_bucket(max(counts), buckets) if pad_to is None else pad_to
+    padded = [pad_workload(w, depth) for w in workloads]
+    layers = LayerSpec(*[
+        jnp.stack([getattr(p.layers, f) for p in padded])
+        for f in LayerSpec._fields])
+    return StackedWorkload(names=tuple(w.name for w in workloads),
+                           layers=layers, n_layers=tuple(counts))
+
+
 def workload_macs(wl: Workload, per_inference: bool = False) -> float:
     """Total forward MACs of the workload (the per-model normalizer).
 

@@ -77,11 +77,15 @@ class TestJointSpace:
 
     @given(chunk=st.integers(1, 50), num_models=st.integers(1, 4))
     @settings(max_examples=10, deadline=None)
-    def test_chunks_cover_space_and_never_mix_models(self, chunk, num_models):
+    def test_grouped_chunks_cover_space_and_never_mix_models(
+            self, chunk, num_models):
+        """group_by_model=True is the PR 2 oracle walk: scalar model id,
+        chunks never straddle a model boundary."""
         a = space_size(TINY_SPACE)
         seen = []
         for m, cfg, idx in iter_joint_space_chunks(
-                TINY_SPACE, num_models=num_models, chunk_size=chunk):
+                TINY_SPACE, num_models=num_models, chunk_size=chunk,
+                group_by_model=True):
             assert 0 < len(idx) <= chunk
             np.testing.assert_array_equal(idx // a, m)  # one model per chunk
             np.testing.assert_array_equal(
@@ -91,13 +95,66 @@ class TestJointSpace:
         np.testing.assert_array_equal(np.concatenate(seen),
                                       np.arange(num_models * a))
 
-    def test_subsample_is_sorted_unique_and_decodable(self):
+    @given(chunk=st.integers(1, 50), num_models=st.integers(1, 4))
+    @settings(max_examples=10, deadline=None)
+    def test_mixed_chunks_cover_space_densely(self, chunk, num_models):
+        """The default walk yields dense fixed-shape chunks that cross
+        model boundaries: every chunk but the last is exactly full."""
+        a = space_size(TINY_SPACE)
+        n = num_models * a
+        seen, sizes = [], []
+        for mids, cfg, idx in iter_joint_space_chunks(
+                TINY_SPACE, num_models=num_models, chunk_size=chunk):
+            np.testing.assert_array_equal(mids, idx // a)
+            np.testing.assert_array_equal(
+                _config_matrix(cfg),
+                _config_matrix(enumerate_space(TINY_SPACE))[idx % a])
+            seen.append(idx)
+            sizes.append(len(idx))
+        np.testing.assert_array_equal(np.concatenate(seen), np.arange(n))
+        assert all(s == chunk for s in sizes[:-1])
+        assert sizes[-1] == n - chunk * (len(sizes) - 1)
+
+    def test_model_groups_restrict_mixing(self):
+        a = space_size(TINY_SPACE)
+        groups = ((2, 0), (1,))
+        for mids, _, idx in iter_joint_space_chunks(
+                TINY_SPACE, num_models=3, chunk_size=7, model_groups=groups):
+            assert set(mids.tolist()) <= {2, 0} or set(mids.tolist()) == {1}
+            np.testing.assert_array_equal(mids, idx // a)
+        # all three models' points visited exactly once, group order first
+        idx = np.concatenate([i for _, _, i in iter_joint_space_chunks(
+            TINY_SPACE, num_models=3, chunk_size=7, model_groups=groups)])
+        assert sorted(idx.tolist()) == list(range(3 * a))
+        assert (idx[:a] // a).tolist() == [2] * a  # group (2, 0) walks 2 first
+
+    def test_model_groups_validated(self):
+        with pytest.raises(ValueError):
+            list(iter_joint_space_chunks(TINY_SPACE, num_models=2,
+                                         model_groups=((0, 2),)))
+        with pytest.raises(ValueError):
+            list(iter_joint_space_chunks(TINY_SPACE, num_models=2,
+                                         model_groups=((0,), (0, 1))))
+
+    @pytest.mark.parametrize("kwargs", [dict(), dict(group_by_model=True)])
+    def test_subsample_is_sorted_unique_and_decodable(self, kwargs):
         n = joint_space_size(TINY_SPACE, 3)
         idx = np.concatenate([i for _, _, i in iter_joint_space_chunks(
-            TINY_SPACE, num_models=3, chunk_size=7, max_points=25, seed=5)])
+            TINY_SPACE, num_models=3, chunk_size=7, max_points=25, seed=5,
+            **kwargs)])
         assert len(idx) == 25
         assert (np.diff(idx) > 0).all()
         assert idx.min() >= 0 and idx.max() < n
+
+    def test_mixed_and_grouped_subsample_visit_same_points(self):
+        """Same RNG stream in both walks: the mixed walk must evaluate the
+        exact point set of the grouped (oracle) walk."""
+        mixed = np.concatenate([i for _, _, i in iter_joint_space_chunks(
+            TINY_SPACE, num_models=3, chunk_size=7, max_points=40, seed=9)])
+        grouped = np.concatenate([i for _, _, i in iter_joint_space_chunks(
+            TINY_SPACE, num_models=3, chunk_size=7, max_points=40, seed=9,
+            group_by_model=True)])
+        np.testing.assert_array_equal(np.sort(mixed), np.sort(grouped))
 
 
 class TestAccuracyDeltaNameKeying:
@@ -283,6 +340,23 @@ class TestJointFrontEquivalence:
         front = coexplore_front(tiny_models, TINY_SPACE, chunk_size=chunk)
         assert front.points_evaluated == 3 * a
         assert set(front.archive.indices.tolist()) == dense
+
+    def test_mixed_front_equals_per_model_front_bitwise(self, tiny_models):
+        """The one-compile mixed walk must reproduce the PR 2 per-model
+        walk exactly: same front points AND bit-identical objectives and
+        per-(model, PE) aggregates."""
+        mixed = coexplore_front(tiny_models, TINY_SPACE, chunk_size=16)
+        oracle = coexplore_front(tiny_models, TINY_SPACE, chunk_size=16,
+                                 mix_models=False)
+        assert mixed.points_evaluated == oracle.points_evaluated
+        np.testing.assert_array_equal(np.sort(mixed.archive.indices),
+                                      np.sort(oracle.archive.indices))
+        order_m = np.argsort(mixed.archive.indices)
+        order_o = np.argsort(oracle.archive.indices)
+        np.testing.assert_array_equal(mixed.archive.objectives[order_m],
+                                      oracle.archive.objectives[order_o])
+        assert mixed.per_model_best == oracle.per_model_best
+        assert mixed.buckets and not oracle.buckets
 
     def test_subsample_front_is_subset_of_full(self, tiny_models):
         full = coexplore_front(tiny_models, TINY_SPACE, chunk_size=16)

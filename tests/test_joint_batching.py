@@ -1,0 +1,329 @@
+"""One-compile joint sweeps: layer padding bit-identity, layer-count
+bucketing, stacked-workload model-lane evaluation, the streaming archive's
+NaN guard and chunk-front reduction, and compile-count accounting."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # CI images without hypothesis: deterministic fallback
+    from _hypothesis_fallback import given, settings, st
+
+from repro.core import (DEFAULT_CHUNK_SIZE, RESULT_DTYPES, DseResult,
+                        ParetoArchive, StackedWorkload, enumerate_space,
+                        evaluate_chunk, evaluate_space, layer_bucket,
+                        make_config, pad_workload, resnet_cifar,
+                        stack_workloads, synthesize, trace_count,
+                        transformer_gemm, vgg16, workload_layers,
+                        workload_macs)
+from repro.core.dataflow import network_cost
+from repro.core.dse import _dominated_by
+from repro.core.workloads import _stack
+
+# 2*2*2*2*2*1*5*2 = 320 accelerator points covering every PE type and a
+# spread of every capacity knob — enough texture for equality tests.
+SPACE = dict(
+    pe_rows=(8, 12), pe_cols=(8, 14), gbuf_kb=(54.0, 108.0),
+    spad_ifmap=(12, 24), spad_filter=(112, 224), spad_psum=(16,),
+    pe_type=tuple(range(5)), bandwidth_gbps=(12.8, 25.6),
+)
+
+
+def _random_workload(rng, n_layers):
+    """Random-but-legal conv/GEMM layer stack (H >= R, W >= S, count >= 1)."""
+    rows = []
+    for _ in range(n_layers):
+        r = int(rng.integers(1, 4))
+        s = int(rng.integers(1, 4))
+        rows.append(dict(H=int(rng.integers(r, 17)), W=int(rng.integers(s, 17)),
+                         C=int(rng.integers(1, 9)), K=int(rng.integers(1, 9)),
+                         R=r, S=s, stride=int(rng.integers(1, 3)),
+                         batch=int(rng.integers(1, 3)),
+                         count=int(rng.integers(1, 4))))
+    return _stack(rows, "rand", [f"l{i}" for i in range(n_layers)])
+
+
+def _assert_results_equal(a: DseResult, b: DseResult):
+    for f in DseResult._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(a, f)),
+                                      np.asarray(getattr(b, f)),
+                                      err_msg=f"column {f}")
+
+
+class TestPaddingBitIdentity:
+    @given(seed=st.integers(0, 50), n_layers=st.integers(1, 24),
+           pad=st.integers(1, 40))
+    @settings(max_examples=15, deadline=None)
+    def test_network_cost_padded_equals_unpadded_oracle(self, seed, n_layers,
+                                                        pad):
+        """The padding contract at the cost-model level, eager execution:
+        zero-count layers add exact 0.0 to every fold, so the padded
+        network cost is bit-identical to the unpadded oracle.  (Eager is
+        the guaranteed regime — comparing two *different* jit-compiled
+        shapes can see ulp-level XLA codegen noise, which is why the
+        joint engine buckets depths to a few canonical compiled shapes.)
+        """
+        rng = np.random.default_rng(seed)
+        wl = _random_workload(rng, n_layers)
+        cfgs = enumerate_space(SPACE, max_points=32, seed=seed)
+        syn = synthesize(cfgs)
+        ref = jax.vmap(lambda c, k: network_cost(wl.layers, c, k))(
+            cfgs, syn.clock_ghz)
+        padded = pad_workload(wl, n_layers + pad)
+        got = jax.vmap(lambda c, k: network_cost(padded.layers, c, k))(
+            cfgs, syn.clock_ghz)
+        for f in ref._fields:
+            np.testing.assert_array_equal(np.asarray(getattr(ref, f)),
+                                          np.asarray(getattr(got, f)),
+                                          err_msg=f"field {f}")
+
+    # The columns the Pareto objectives are built from: these must be
+    # bit-identical across padded depths or the mixed walk could not
+    # reproduce the per-model front exactly.
+    OBJECTIVE_COLUMNS = ("latency_s", "area_mm2", "energy_j", "macs")
+
+    @pytest.mark.parametrize("wl_fn,bucket", [
+        (lambda: resnet_cifar(20), 32),
+        (lambda: vgg16("cifar10"), 16),
+        (lambda: transformer_gemm(seq=64, d_model=64, n_layers=2, n_heads=2,
+                                  d_ff=128, vocab=512), 16),
+    ])
+    def test_evaluate_chunk_padded_equals_unpadded(self, wl_fn, bucket):
+        """The jitted evaluator on the real model families: padding to the
+        bucket depth must not move the objective-forming columns by a
+        single bit.  The remaining diagnostics (e.g. utilization) compare
+        across two *different* compiled shapes here, where XLA's
+        shape-dependent codegen may differ in the last ulp — those are
+        held to 1e-6 instead of bit equality.
+        """
+        wl = wl_fn()
+        cfgs = enumerate_space(SPACE, max_points=64, seed=3)
+        ref = evaluate_chunk(cfgs, wl)
+        got = evaluate_chunk(cfgs, pad_workload(wl, bucket))
+        for f in DseResult._fields:
+            a, b = np.asarray(getattr(ref, f)), np.asarray(getattr(got, f))
+            if f in self.OBJECTIVE_COLUMNS:
+                np.testing.assert_array_equal(a, b, err_msg=f"column {f}")
+            else:
+                np.testing.assert_allclose(a, b, rtol=1e-6,
+                                           err_msg=f"column {f}")
+
+    def test_mixed_lanes_equal_per_model_evaluation(self):
+        """A chunk freely interleaving models through the stacked gather
+        evaluator must reproduce each lane's own per-model evaluation."""
+        wls = (resnet_cifar(20), resnet_cifar(20, resolution=16))
+        stacked = stack_workloads(wls)
+        cfgs = enumerate_space(SPACE, max_points=64, seed=7)
+        mids = np.arange(64) % 2
+        mixed = evaluate_chunk(cfgs, stacked, model_ids=mids)
+        refs = [evaluate_chunk(cfgs, wl) for wl in wls]
+        for f in DseResult._fields:
+            want = np.where(mids == 0, np.asarray(getattr(refs[0], f)),
+                            np.asarray(getattr(refs[1], f)))
+            np.testing.assert_array_equal(np.asarray(getattr(mixed, f)), want,
+                                          err_msg=f"column {f}")
+
+    def test_padding_is_inert_metadata(self):
+        wl = resnet_cifar(20)
+        n = workload_layers(wl)
+        padded = pad_workload(wl, n + 7)
+        assert workload_layers(padded) == n + 7
+        assert padded.name == wl.name
+        assert padded.layer_names[:n] == wl.layer_names
+        assert workload_macs(padded) == workload_macs(wl)
+        assert pad_workload(wl, n) is wl  # idempotent at current depth
+        with pytest.raises(ValueError):
+            pad_workload(wl, n - 1)       # refuses to truncate
+
+
+class TestLayerBucketing:
+    def test_next_pow2_policy(self):
+        assert layer_bucket(1) == 8     # floored at 8
+        assert layer_bucket(8) == 8
+        assert layer_bucket(9) == 16
+        assert layer_bucket(15) == 16
+        assert layer_bucket(22) == 32
+        assert layer_bucket(58) == 64
+
+    def test_default_model_zoo_collapses_to_three_buckets(self):
+        from repro.core import default_model_set
+        buckets = {layer_bucket(workload_layers(m.workload))
+                   for m in default_model_set()}
+        assert buckets == {16, 32, 64}
+
+    def test_explicit_buckets(self):
+        assert layer_bucket(10, buckets=(12, 48)) == 12
+        assert layer_bucket(13, buckets=(12, 48)) == 48
+        # above the largest bucket: falls back to next power of two
+        assert layer_bucket(50, buckets=(12, 48)) == 64
+
+    def test_invalid_count_rejected(self):
+        with pytest.raises(ValueError):
+            layer_bucket(0)
+
+
+class TestStackWorkloads:
+    def test_shapes_names_and_depths(self):
+        wls = (resnet_cifar(20), vgg16("cifar10"))
+        stacked = stack_workloads(wls)
+        counts = tuple(workload_layers(w) for w in wls)
+        depth = layer_bucket(max(counts))
+        assert isinstance(stacked, StackedWorkload)
+        assert stacked.names == tuple(w.name for w in wls)
+        assert stacked.n_layers == counts
+        for f in stacked.layers._fields:
+            assert np.shape(getattr(stacked.layers, f)) == (2, depth)
+
+    def test_pad_to_override_and_row_content(self):
+        wl = resnet_cifar(20)
+        stacked = stack_workloads([wl], pad_to=40)
+        n = workload_layers(wl)
+        np.testing.assert_array_equal(
+            np.asarray(stacked.layers.H)[0, :n], np.asarray(wl.layers.H))
+        np.testing.assert_array_equal(
+            np.asarray(stacked.layers.count)[0, n:], 0.0)
+
+    def test_empty_rejected(self):
+        with pytest.raises(ValueError):
+            stack_workloads([])
+
+    def test_model_ids_contract_enforced(self):
+        wl = resnet_cifar(20)
+        stacked = stack_workloads([wl])
+        cfgs = enumerate_space(SPACE, max_points=8, seed=0)
+        with pytest.raises(ValueError):            # stacked needs model_ids
+            evaluate_chunk(cfgs, stacked)
+        with pytest.raises(ValueError):            # plain forbids model_ids
+            evaluate_chunk(cfgs, wl, model_ids=np.zeros(8, int))
+        with pytest.raises(ValueError):            # wrong length
+            evaluate_chunk(cfgs, stacked, model_ids=np.zeros(5, int))
+        with pytest.raises(ValueError):            # id out of range
+            evaluate_chunk(cfgs, stacked, model_ids=np.ones(8, int))
+
+
+class TestCompileAmortization:
+    def test_same_shape_reuses_compiled_evaluator(self):
+        wl = resnet_cifar(20)
+        cfgs = enumerate_space(SPACE, max_points=16, seed=1)
+        evaluate_chunk(cfgs, wl, pad_to=32)           # ensure compiled
+        c0 = trace_count()
+        evaluate_chunk(cfgs, wl, pad_to=32)
+        assert trace_count() == c0                    # no retrace
+
+    def test_evaluate_space_small_batches_share_pow2_shapes(self):
+        """Distinct small N must stop retracing per batch shape: every N
+        in (pow2/2, pow2] hits the same compiled executable."""
+        wl = resnet_cifar(20)
+        space = enumerate_space(SPACE, max_points=16, seed=2)
+        sliced = lambda n: type(space)(*[f[:n] for f in space])  # noqa: E731
+        evaluate_space(sliced(9), wl)                 # compiles pad shape 16
+        c0 = trace_count()
+        for n in (10, 12, 13, 16):
+            res = evaluate_space(sliced(n), wl)
+            assert np.shape(res.latency_s) == (n,)
+        assert trace_count() == c0
+
+    def test_mixed_buckets_compile_once_each(self):
+        """Two models in one bucket = one stacked shape = one compilation,
+        reused by any lane mix."""
+        stacked = stack_workloads([resnet_cifar(20),
+                                   resnet_cifar(20, resolution=16)])
+        cfgs = enumerate_space(SPACE, max_points=32, seed=4)
+        evaluate_chunk(cfgs, stacked, model_ids=np.zeros(32, int))
+        c0 = trace_count()
+        evaluate_chunk(cfgs, stacked, model_ids=np.arange(32) % 2)
+        evaluate_chunk(cfgs, stacked, model_ids=np.ones(32, int))
+        assert trace_count() == c0
+
+
+class TestResultDtypes:
+    def test_empty_space_columns_correctly_dtyped(self):
+        wl = resnet_cifar(20)
+        empty = type(make_config())(*[jnp.zeros((0,)) for _ in range(8)])
+        res = evaluate_space(empty, wl)
+        for f in DseResult._fields:
+            col = getattr(res, f)
+            assert np.shape(col) == (0,)
+            assert np.asarray(col).dtype == RESULT_DTYPES[f], f
+
+    def test_chunked_and_single_columns_match_dtypes(self):
+        wl = resnet_cifar(20)
+        cfgs = enumerate_space(SPACE, max_points=20, seed=5)
+        for res in (evaluate_space(cfgs, wl),
+                    evaluate_space(cfgs, wl, chunk_size=7)):
+            for f in DseResult._fields:
+                assert np.asarray(getattr(res, f)).dtype == RESULT_DTYPES[f], f
+
+
+class TestArchiveNaNGuard:
+    def test_nan_rows_rejected_with_clear_error(self):
+        archive = ParetoArchive(3)
+        archive.update(np.zeros((2, 3)))
+        bad = np.array([[1.0, 2.0, 3.0], [np.nan, 0.0, 0.0]])
+        with pytest.raises(ValueError, match="NaN"):
+            archive.update(bad)
+
+    def test_archive_state_unchanged_after_rejection(self):
+        archive = ParetoArchive(2)
+        archive.update(np.array([[1.0, 1.0]]))
+        before = (archive.objectives.copy(), archive.indices.copy())
+        with pytest.raises(ValueError):
+            archive.update(np.array([[np.nan, 5.0]]))
+        np.testing.assert_array_equal(archive.objectives, before[0])
+        np.testing.assert_array_equal(archive.indices, before[1])
+        # and the archive still accepts clean updates afterwards
+        archive.update(np.array([[2.0, 2.0]]))
+        assert len(archive) == 1
+
+
+class TestChunkFrontMask:
+    """The streaming archive's lex-scan chunk reduction vs the dense oracle
+    (the O(N^2) broadcast it replaced on the hot path)."""
+
+    @given(seed=st.integers(0, 100), n=st.integers(1, 600),
+           d=st.integers(3, 4), block=st.integers(16, 128))
+    @settings(max_examples=20, deadline=None)
+    def test_matches_dense_oracle(self, seed, n, d, block):
+        rng = np.random.default_rng(seed)
+        pts = np.round(rng.normal(size=(n, d)), 1)   # ties + duplicates
+        pts[rng.integers(0, n, n // 4)] = pts[rng.integers(0, n, n // 4)]
+        ge = np.all(pts[None, :, :] >= pts[:, None, :], axis=-1)
+        gt = np.any(pts[None, :, :] > pts[:, None, :], axis=-1)
+        dense = ~np.any(ge & gt, axis=1)
+        got = ParetoArchive._chunk_front_mask(pts, block=block)
+        np.testing.assert_array_equal(got, dense)
+
+    def test_dominated_by_helper(self):
+        front = np.array([[2.0, 2.0], [0.0, 3.0]])
+        pts = np.array([[1.0, 1.0], [2.0, 2.0], [3.0, 0.0], [-1.0, 2.5]])
+        np.testing.assert_array_equal(
+            _dominated_by(pts, front), [True, False, False, True])
+        assert _dominated_by(pts, np.empty((0, 2))).sum() == 0
+
+
+class TestStreamedJointFrontVsDenseOracle:
+    def test_fully_mixed_stream_equals_per_model_dense_front(self):
+        """The acceptance property end-to-end on a small joint space: the
+        fully-mixed one-compile stream must decode to exactly the dense
+        per-model oracle front."""
+        from repro.core import (coexplore_front, model_entry,
+                                pareto_mask_dense)
+        models = (model_entry(resnet_cifar(20)),
+                  model_entry(vgg16("cifar10", width_mult=0.5)),
+                  model_entry(transformer_gemm(seq=64, d_model=64, n_layers=2,
+                                               n_heads=2, d_ff=128,
+                                               vocab=512)))
+        mixed = coexplore_front(models, SPACE, chunk_size=64)
+        oracle = coexplore_front(models, SPACE, chunk_size=64,
+                                 mix_models=False)
+        np.testing.assert_array_equal(np.sort(mixed.archive.indices),
+                                      np.sort(oracle.archive.indices))
+        # and the per-model walk itself equals the dense mask over its own
+        # accumulated objectives (oracle-of-the-oracle)
+        order = np.argsort(oracle.archive.indices)
+        objs = oracle.archive.objectives[order]
+        dense = np.asarray(pareto_mask_dense(jnp.asarray(objs)))
+        assert dense.all()  # archive members are mutually non-dominated
