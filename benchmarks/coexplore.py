@@ -20,6 +20,15 @@ Claim under test (acceptance criterion, best-vs-best semantics — see
 best INT16 design on perf-per-area AND on energy-per-MAC while staying
 within 1pp of FP32 accuracy.  ``max_points`` subsamples the joint space
 (the --fast CI knob in benchmarks/run.py).
+
+The CONSTRAINED sweep then re-runs the walk under a mid-range deployment
+budget (area <= 2 mm^2, power <= 250 mW — QUIDAM/QAPPA's framing of
+co-exploration under area/power envelopes): infeasible lanes are masked
+per chunk before the archive, the compiled evaluators are shared with the
+unconstrained sweep (its ``n_compiles`` stays 0 — constraints never touch
+the jitted path), and the rows report the feasible fraction plus
+per-constraint kill counts.  Its warm row is regression-guarded alongside
+the unconstrained one.
 """
 
 from __future__ import annotations
@@ -27,8 +36,13 @@ from __future__ import annotations
 import time
 
 from benchmarks.common import emit, maxrss_mb
-from repro.core import (PE_TYPE_NAMES, coexplore_front, coexplore_report,
-                        default_model_set, trace_count)
+from repro.core import (Budget, PE_TYPE_NAMES, coexplore_front,
+                        coexplore_report, default_model_set, trace_count)
+
+# The benchmark's deployment envelope: mid-range bounds (~55% of the
+# default joint space feasible) so the constrained walk does real masking
+# without annihilating any model's PE-type sample.
+CONSTRAINED_BUDGET = Budget(area_mm2=2.0, power_mw=250.0)
 
 
 def run(max_points: int | None = None):
@@ -47,6 +61,27 @@ def run(max_points: int | None = None):
             f"n_compiles={trace_count() - c0};"
             f"buckets={'/'.join(str(b) for b, _ in front.buckets)};"
             f"peak_rss_mb={maxrss_mb():.0f}"))
+    cfront = None
+    for phase in ("first", "warm"):
+        c0 = trace_count()
+        t0 = time.perf_counter()
+        cfront = coexplore_front(models, max_points=max_points,
+                                 budget=CONSTRAINED_BUDGET)
+        dt = time.perf_counter() - t0
+        stats = cfront.budget_stats
+        rows.append(emit(
+            f"coexplore_constrained_sweep_{phase}", dt * 1e6,
+            f"models={len(models)};points={cfront.points_evaluated};"
+            f"points_per_sec={cfront.points_evaluated / dt:.0f};"
+            f"feasible={stats.feasible};"
+            f"feasible_frac={stats.feasible_fraction:.3f};"
+            f"n_compiles={trace_count() - c0};"
+            f"front={len(cfront.archive)}"))
+    spec = "/".join(f"{k}={v:g}" for k, v in CONSTRAINED_BUDGET.spec().items())
+    rows.append(emit(
+        "coexplore_constrained_kills", 0.0,
+        ";".join(f"{name}:{n}" for name, n in
+                 cfront.budget_stats.kills.items()) + f";budget={spec}"))
     rep = coexplore_report(front)
     rows.append(emit(
         "coexplore_joint_space", 0.0,

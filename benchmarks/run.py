@@ -7,8 +7,9 @@ writes the DSE-related rows to BENCH_dse.json.
 
 --fast shrinks the QAT training budget AND caps every DSE sweep's point
 count so the whole harness is CI-runnable in minutes; the default runs
-the full 27k paper grid (and 216k in dse_scale).  Under --fast the joint
-sweep's WARM throughput is also guarded against the value committed in
+the full 27k paper grid (and 216k in dse_scale).  Under --fast the WARM
+throughput of both the unconstrained joint sweep and the constrained
+(area/power-budgeted) sweep is guarded against the values committed in
 BENCH_dse.json (fails on a >30% drop; BENCH_SKIP_REGRESSION=1 skips).
 """
 
@@ -31,25 +32,29 @@ FAST_COEXPLORE_POINTS = 4500
 DSE_BENCHES = ("fig2", "fig4", "fig56", "dse_transformers", "dse_scale",
                "coexplore")
 
-# --fast regression guard: fail if the joint warm throughput drops more
-# than this fraction below the value committed in BENCH_dse.json.
-# BENCH_SKIP_REGRESSION=1 skips the check (noisy/underpowered runners).
+# --fast regression guard: fail if a guarded warm throughput drops more
+# than this fraction below the value committed in BENCH_dse.json.  Both
+# the unconstrained joint sweep AND the constrained (budgeted) sweep are
+# guarded, so a slow feasibility-mask path can't hide behind the
+# unconstrained number.  BENCH_SKIP_REGRESSION=1 skips the check
+# (noisy/underpowered runners).
 REGRESSION_TOLERANCE = 0.30
-GUARDED_ROW = "coexplore_joint_sweep_warm"
+GUARDED_ROWS = ("coexplore_joint_sweep_warm",
+                "coexplore_constrained_sweep_warm")
 
 
-def _warm_row_fields(rows) -> dict | None:
-    """key=value fields of the guarded warm row in a list of CSV rows."""
+def _warm_row_fields(rows, guarded_row: str) -> dict | None:
+    """key=value fields of one guarded warm row in a list of CSV rows."""
     for row in rows or ():
-        if row.startswith(GUARDED_ROW + ","):
+        if row.startswith(guarded_row + ","):
             return dict(part.split("=", 1)
                         for part in row.split(",", 2)[2].split(";")
                         if "=" in part)
     return None
 
 
-def _check_regression(committed: dict, fresh_rows) -> str | None:
-    """Error string if the fresh warm joint throughput regressed.
+def _check_regression(committed: dict, fresh_rows) -> list[str]:
+    """Error strings for each guarded warm throughput that regressed.
 
     Only rows with the same evaluated point count are compared: a full
     (non---fast) run writes full-sweep numbers into BENCH_dse.json, and
@@ -57,24 +62,28 @@ def _check_regression(committed: dict, fresh_rows) -> str | None:
     (less chunk padding) — comparing across modes would trip the guard
     on an unchanged engine.
     """
-    ref = _warm_row_fields(committed.get("coexplore"))
-    got = _warm_row_fields(fresh_rows)
-    if not ref or not got or "points_per_sec" not in ref \
-            or "points_per_sec" not in got:
-        return None  # no committed baseline / bench failed (reported anyway)
-    if ref.get("points") != got.get("points"):
-        print(f"regression guard: committed baseline has points="
-              f"{ref.get('points')} but this run has points="
-              f"{got.get('points')} (different run mode) — skipping "
-              f"comparison", file=sys.stderr)
-        return None
-    ref_pps, got_pps = float(ref["points_per_sec"]), float(got["points_per_sec"])
-    if got_pps < (1.0 - REGRESSION_TOLERANCE) * ref_pps:
-        return (f"joint warm throughput regressed: {got_pps:.0f} pts/s < "
+    errs = []
+    for guarded in GUARDED_ROWS:
+        ref = _warm_row_fields(committed.get("coexplore"), guarded)
+        got = _warm_row_fields(fresh_rows, guarded)
+        if not ref or not got or "points_per_sec" not in ref \
+                or "points_per_sec" not in got:
+            continue  # no committed baseline / bench failed (reported anyway)
+        if ref.get("points") != got.get("points"):
+            print(f"regression guard: committed {guarded} baseline has "
+                  f"points={ref.get('points')} but this run has points="
+                  f"{got.get('points')} (different run mode) — skipping "
+                  f"comparison", file=sys.stderr)
+            continue
+        ref_pps = float(ref["points_per_sec"])
+        got_pps = float(got["points_per_sec"])
+        if got_pps < (1.0 - REGRESSION_TOLERANCE) * ref_pps:
+            errs.append(
+                f"{guarded} throughput regressed: {got_pps:.0f} pts/s < "
                 f"{(1.0 - REGRESSION_TOLERANCE) * ref_pps:.0f} "
                 f"(committed {ref_pps:.0f} - {REGRESSION_TOLERANCE:.0%}); "
                 f"set BENCH_SKIP_REGRESSION=1 to skip on noisy runners")
-    return None
+    return errs
 
 
 def main() -> None:
@@ -131,9 +140,10 @@ def main() -> None:
     # --fast CI artifact, so the comparison is like-for-like)
     if (args.fast and "coexplore" in dse_rows
             and not os.environ.get("BENCH_SKIP_REGRESSION")):
-        err = _check_regression(committed, dse_rows["coexplore"])
-        if err:
+        errs = _check_regression(committed, dse_rows["coexplore"])
+        for err in errs:
             print(f"REGRESSION: {err}", file=sys.stderr)
+        if errs:
             failed.append("coexplore_regression_guard")
     if dse_rows:
         if args.only or failed:  # partial run: merge, don't clobber

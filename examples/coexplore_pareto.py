@@ -10,6 +10,13 @@ results from examples/train_qat.py --mode cnn.
   PYTHONPATH=src python examples/coexplore_pareto.py \
       --qat-results results/qat_pareto.json
 
+Constraint-aware search under a deployment budget (QUIDAM/QAPPA-style:
+infeasible lanes are masked out inside the streaming walk, so the result
+is the Pareto front of the FEASIBLE joint subspace):
+
+  PYTHONPATH=src python examples/coexplore_pareto.py \
+      --area-mm2 2.0 --power-mw 250 --min-accuracy 0.40
+
 Writes results/coexplore/front.csv (one row per joint front point).
 """
 
@@ -17,8 +24,8 @@ import argparse
 import csv
 import os
 
-from repro.core import (AccuracySurrogate, coexplore_front, coexplore_report,
-                        default_model_set)
+from repro.core import (AccuracySurrogate, Budget, coexplore_front,
+                        coexplore_report, default_model_set)
 from repro.core.arch import AcceleratorConfig
 
 ap = argparse.ArgumentParser()
@@ -30,7 +37,26 @@ ap.add_argument("--qat-results", default=None,
 ap.add_argument("--qat-model", default="resnet20-cifar10",
                 help="model the QAT results were measured on")
 ap.add_argument("--seed", type=int, default=0)
+budget_args = ap.add_argument_group(
+    "deployment budget (any subset; omit all for an unconstrained sweep)")
+budget_args.add_argument("--area-mm2", type=float, default=None,
+                         help="max chip area (mm^2)")
+budget_args.add_argument("--power-mw", type=float, default=None,
+                         help="max average power (mW)")
+budget_args.add_argument("--latency-ms", type=float, default=None,
+                         help="max per-inference latency (ms)")
+budget_args.add_argument("--min-accuracy", type=float, default=None,
+                         help="min predicted accuracy (fraction)")
 args = ap.parse_args()
+
+budget = None
+if any(v is not None for v in (args.area_mm2, args.power_mw,
+                               args.latency_ms, args.min_accuracy)):
+    budget = Budget(
+        area_mm2=args.area_mm2, power_mw=args.power_mw,
+        latency_s=None if args.latency_ms is None else args.latency_ms * 1e-3,
+        min_accuracy=args.min_accuracy)
+    print(f"deployment budget: {budget.spec()}")
 
 accuracy = AccuracySurrogate()
 if args.qat_results:
@@ -45,11 +71,18 @@ for m in models:
           f"fp32_acc={m.base_acc:.3f}")
 
 front = coexplore_front(models, accuracy=accuracy,
-                        max_points=args.max_points or None, seed=args.seed)
+                        max_points=args.max_points or None, seed=args.seed,
+                        budget=budget)
 rep = coexplore_report(front)
 print(f"\nevaluated {rep['points_evaluated']:,} of {rep['space_size']:,} "
       f"joint points -> {rep['front_size']} on the 3-objective front "
       f"(accuracy, MACs/s/mm^2, -pJ/MAC)")
+if "budget" in rep:
+    b = rep["budget"]
+    print(f"budget: {b['feasible']:,}/{b['evaluated']:,} points feasible "
+          f"({100 * b['feasible_fraction']:.1f}%); kills per constraint:")
+    for name, n in b["kills"].items():
+        print(f"  {name:24s} killed {n:,}")
 for b in rep["layer_buckets"]:
     print(f"  depth-{b['depth']} bucket (1 compile): "
           f"{', '.join(b['models'])}")

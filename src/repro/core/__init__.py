@@ -8,6 +8,8 @@ Submodules:
   dataflow  — row-stationary analytical cost model (vmap-able)
   synth     — synthesis oracle (stand-in for Synopsys DC + FreePDK45)
   ppa       — polynomial-regression PPA surrogates + k-fold CV selection
+  constraints — declarative deployment budgets (area/power/latency/...)
+              compiled to streaming per-chunk feasibility masks
   dse       — vectorized design-space exploration + Pareto analysis
   workloads — layer-wise workload extraction (paper CNNs + assigned archs
               + parameterized model families)
@@ -19,9 +21,11 @@ from repro.core.accuracy import (AccuracySurrogate, capacity_scale,
                                  seeded_base_accuracy)
 from repro.core.arch import (AcceleratorConfig, make_config, stack_configs,
                              enumerate_space, iter_space_chunks, space_points,
-                             space_size, joint_space_size, joint_space_points,
-                             iter_joint_space_chunks, DEFAULT_SPACE,
-                             PE_TYPE_NAMES, PE_TYPE_CODES)
+                             space_size, subsample_indices, joint_space_size,
+                             joint_space_points, iter_joint_space_chunks,
+                             DEFAULT_SPACE, PE_TYPE_NAMES, PE_TYPE_CODES)
+from repro.core.constraints import (Budget, BudgetStats, Constraint,
+                                    apply_budget, mask_result)
 from repro.core.coexplore import (COEXPLORE_METRICS, CoexploreFront,
                                   ModelEntry, coexplore_front,
                                   coexplore_report, default_model_set,
@@ -45,9 +49,10 @@ from repro.core.workloads import (Workload, LayerSpec, StackedWorkload,
 
 __all__ = [
     "AcceleratorConfig", "make_config", "stack_configs", "enumerate_space",
-    "iter_space_chunks", "space_points", "space_size", "joint_space_size",
-    "joint_space_points", "iter_joint_space_chunks", "DEFAULT_SPACE",
-    "PE_TYPE_NAMES", "PE_TYPE_CODES",
+    "iter_space_chunks", "space_points", "space_size", "subsample_indices",
+    "joint_space_size", "joint_space_points", "iter_joint_space_chunks",
+    "DEFAULT_SPACE", "PE_TYPE_NAMES", "PE_TYPE_CODES",
+    "Budget", "BudgetStats", "Constraint", "apply_budget", "mask_result",
     "AccuracySurrogate", "capacity_scale", "seeded_base_accuracy",
     "COEXPLORE_METRICS", "CoexploreFront", "ModelEntry", "coexplore_front",
     "coexplore_report", "default_model_set", "lightpe_claim", "model_entry",

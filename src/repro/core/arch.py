@@ -112,6 +112,25 @@ def space_size(space: dict | None = None) -> int:
     return int(np.prod([len(a) for a in _space_axes(space)]))
 
 
+def subsample_indices(n: int, max_points: int | None,
+                      seed: int = 0) -> np.ndarray | None:
+    """Sorted unique flat indices of a uniform subsample, or ``None`` for
+    the full walk.
+
+    THE one RNG stream every walk shares: ``iter_space_chunks``,
+    ``enumerate_space`` and both modes of ``iter_joint_space_chunks`` all
+    draw their subsample here, so the same ``(n, max_points, seed)``
+    always visits the same point set — which is what lets a constrained
+    walk account feasibility against exactly the points an unconstrained
+    walk of the same arguments evaluates (``constraints.BudgetStats``
+    counts lanes of these chunks, pre-mask).
+    """
+    if max_points is None or n <= max_points:
+        return None
+    rng = np.random.default_rng(seed)
+    return np.sort(rng.choice(n, size=max_points, replace=False))
+
+
 def _cols_to_config(cols: dict) -> AcceleratorConfig:
     return AcceleratorConfig(
         pe_rows=jnp.asarray(cols["pe_rows"], jnp.float32),
@@ -160,9 +179,8 @@ def iter_space_chunks(space: dict | None = None,
     (same RNG stream as ``enumerate_space``).
     """
     n = space_size(space)
-    if max_points is not None and n > max_points:
-        rng = np.random.default_rng(seed)
-        keep = np.sort(rng.choice(n, size=max_points, replace=False))
+    keep = subsample_indices(n, max_points, seed)
+    if keep is not None:
         for lo in range(0, len(keep), chunk_size):
             idx = keep[lo:lo + chunk_size]
             yield space_points(idx, space), idx
@@ -182,10 +200,8 @@ def enumerate_space(space: dict | None = None,
     materialized, only the N selected points.
     """
     n = space_size(space)
-    if max_points is not None and n > max_points:
-        rng = np.random.default_rng(seed)
-        idx = np.sort(rng.choice(n, size=max_points, replace=False))
-    else:
+    idx = subsample_indices(n, max_points, seed)
+    if idx is None:
         idx = np.arange(n, dtype=np.int64)
     return space_points(idx, space)
 
@@ -268,10 +284,7 @@ def iter_joint_space_chunks(
     """
     a = space_size(space)
     n = joint_space_size(space, num_models)
-    keep = None
-    if max_points is not None and n > max_points:
-        rng = np.random.default_rng(seed)
-        keep = np.sort(rng.choice(n, size=max_points, replace=False))
+    keep = subsample_indices(n, max_points, seed)
     if group_by_model:
         for m in range(num_models):
             if keep is None:

@@ -29,6 +29,15 @@ Typical use::
     front = coexplore_front(models, max_points=50_000)
     report = coexplore_report(front)   # named (model, PE, config) points
 
+Constraint-aware search (QUIDAM/QAPPA's deployment-budget framing)::
+
+    from repro.core import Budget
+    front = coexplore_front(models, budget=Budget(area_mm2=8.0,
+                                                  power_mw=4000.0,
+                                                  min_accuracy=0.38))
+    # front of the FEASIBLE joint subspace; report["budget"] carries
+    # per-constraint kill counts and the feasible fraction
+
 ``report["claim"]`` checks the paper's qualitative story on the joint
 sweep: per model, the best LightPE beats the best INT16 on both hardware
 metrics while staying within 1pp of FP32 accuracy (see ``lightpe_claim``
@@ -46,6 +55,7 @@ from repro.core.accuracy import AccuracySurrogate, seeded_base_accuracy
 from repro.core.arch import (AcceleratorConfig, PE_TYPE_NAMES, config_rows,
                              iter_joint_space_chunks, joint_space_points,
                              joint_space_size)
+from repro.core.constraints import Budget, BudgetStats
 from repro.core.dse import DEFAULT_CHUNK_SIZE, ParetoArchive, evaluate_chunk
 from repro.core.ppa import PPAModels
 from repro.core.workloads import (Workload, layer_bucket, resnet_cifar,
@@ -106,6 +116,8 @@ class CoexploreFront(NamedTuple):
     per_model_best: dict           # (model, pe_name) -> best-seen scalars
     points_evaluated: int
     buckets: tuple = ()            # (padded depth, model names) per group
+    budget: Budget | None = None   # the deployment budget, if constrained
+    budget_stats: BudgetStats | None = None  # kill counts / feasible share
 
 
 def _joint_objectives(res, lane_acc: np.ndarray) -> np.ndarray:
@@ -151,7 +163,8 @@ def coexplore_front(
         max_points: int | None = None,
         seed: int = 0,
         mix_models: bool = True,
-        layer_buckets: Sequence[int] | None = None) -> CoexploreFront:
+        layer_buckets: Sequence[int] | None = None,
+        budget: Budget | None = None) -> CoexploreFront:
     """Stream the joint (model x accelerator) space into a 3-objective
     non-dominated archive.
 
@@ -172,6 +185,18 @@ def coexplore_front(
     the JOINT space (same RNG stream in both walks, so they visit the
     exact same points).  Memory stays O(chunk_size + front size); the
     joint objective matrix is never materialized.
+
+    ``budget`` (``constraints.Budget``) makes the walk CONSTRAINT-AWARE:
+    each chunk's infeasible lanes (area/power/latency/energy over budget,
+    utilization or predicted accuracy under it) are masked out on host
+    before the archive or the per-(model, PE) aggregates see them — the
+    compiled evaluators are untouched and the result is the front of the
+    FEASIBLE subset, bit-identical to post-hoc filtering of the
+    unconstrained walk in BOTH walk modes.  ``points_evaluated`` still
+    counts every evaluated (pre-mask) lane; per-constraint kill counts
+    and the feasible fraction land in the returned ``budget_stats`` (and
+    in ``coexplore_report``).  Note ``lightpe_claim`` then compares
+    best-of-FEASIBLE aggregates — the claim under deployment limits.
     """
     models = tuple(models)
     if not models:
@@ -185,7 +210,32 @@ def coexplore_front(
                            for m in models])
     archive = ParetoArchive(len(COEXPLORE_METRICS))
     per_model_best: dict[tuple[str, str], dict] = {}
+    stats = BudgetStats() if budget is not None else None
     total = 0
+
+    def _fold_chunk(res, idx, mids, codes):
+        """One evaluated chunk -> (mask by budget) -> archive + aggregates.
+
+        Shared by both walks, so the constrained mixed walk stays
+        bit-identical to the constrained per-model oracle walk for the
+        same reason the unconstrained ones match: identical host-side
+        arithmetic on identical device sums, and row masking commutes
+        with both the archive reduction and the best-seen aggregates.
+        """
+        nonlocal total
+        lane_acc = acc_matrix[mids, codes]
+        obj = _joint_objectives(res, lane_acc)
+        total += len(idx)
+        if budget is not None:
+            mask, kills = budget.feasibility(res, accuracy=lane_acc)
+            stats.record(mask, kills)
+            if not mask.all():
+                obj, idx = obj[mask], idx[mask]
+                mids, codes = mids[mask], codes[mask]
+        archive.update(obj, idx)
+        _update_per_model_best(per_model_best, models, acc_matrix,
+                               mids, codes, obj)
+
     if mix_models:
         # group the model axis into layer-count buckets: each group gets
         # one stacked (M_b, L_b) workload == one compiled evaluator
@@ -209,31 +259,25 @@ def coexplore_front(
             res = evaluate_chunk(cfg, stacked[bucket_of[int(mids[0])]],
                                  surrogate, pad_to=chunk_size,
                                  model_ids=local[mids])
-            codes = np.asarray(cfg.pe_type).astype(np.int64)
-            obj = _joint_objectives(res, acc_matrix[mids, codes])
-            archive.update(obj, idx)
-            total += len(idx)
-            _update_per_model_best(per_model_best, models, acc_matrix,
-                                   mids, codes, obj)
+            _fold_chunk(res, idx, mids,
+                        np.asarray(cfg.pe_type).astype(np.int64))
         return CoexploreFront(archive=archive, models=models, space=space,
                               metrics=COEXPLORE_METRICS,
                               per_model_best=per_model_best,
-                              points_evaluated=total, buckets=buckets_meta)
+                              points_evaluated=total, buckets=buckets_meta,
+                              budget=budget, budget_stats=stats)
     for m, cfg, idx in iter_joint_space_chunks(
             space, num_models=len(models), chunk_size=chunk_size,
             max_points=max_points, seed=seed, group_by_model=True):
         res = evaluate_chunk(cfg, models[m].workload, surrogate,
                              pad_to=chunk_size)
         codes = np.asarray(cfg.pe_type).astype(np.int64)
-        obj = _joint_objectives(res, acc_matrix[m][codes])
-        archive.update(obj, idx)
-        total += len(idx)
-        _update_per_model_best(per_model_best, models, acc_matrix,
-                               np.full(len(codes), m, np.int64), codes, obj)
+        _fold_chunk(res, idx, np.full(len(codes), m, np.int64), codes)
     return CoexploreFront(archive=archive, models=models, space=space,
                           metrics=COEXPLORE_METRICS,
                           per_model_best=per_model_best,
-                          points_evaluated=total)
+                          points_evaluated=total,
+                          budget=budget, budget_stats=stats)
 
 
 def lightpe_claim(front: CoexploreFront) -> dict:
@@ -244,7 +288,9 @@ def lightpe_claim(front: CoexploreFront) -> dict:
 
     Note this is a best-of-aggregate comparison (what a streaming sweep
     can compute), not a proof of pointwise dominance: the best-throughput
-    and best-energy LightPE configs may differ.  A model whose sampled
+    and best-energy LightPE configs may differ.  Under a ``budget`` the
+    aggregates cover FEASIBLE sampled designs only — the claim is then
+    evaluated within the deployment envelope.  A model whose sampled
     points include no INT16 or no FP32 design is *indeterminate*
     (``ok=None``) and excluded from ``holds``; ``indeterminate`` counts
     them.  ``holds`` is False when no model is determinate.
@@ -294,6 +340,10 @@ def coexplore_report(front: CoexploreFront) -> dict:
     Returns ``points`` (one dict per archive member: model name, PE-type
     name, decoded config fields, the three objectives), ``front_counts``
     (per model / per PE-type membership), and ``claim`` (``lightpe_claim``).
+    A constrained sweep additionally gets a ``"budget"`` section: the
+    active bounds, evaluated/feasible counts, the feasible fraction, and
+    per-constraint kill counts (independent counts — a lane violating two
+    bounds is killed by both).
     """
     mids, cfgs = joint_space_points(front.archive.indices, front.space,
                                     num_models=len(front.models))
@@ -314,7 +364,7 @@ def coexplore_report(front: CoexploreFront) -> dict:
     for p in points:
         by_model[p["model"]] = by_model.get(p["model"], 0) + 1
         by_pe[p["pe_type"]] = by_pe.get(p["pe_type"], 0) + 1
-    return dict(
+    rep = dict(
         points=points,
         front_size=len(points),
         points_evaluated=front.points_evaluated,
@@ -325,3 +375,7 @@ def coexplore_report(front: CoexploreFront) -> dict:
                        for b, names in front.buckets],
         claim=lightpe_claim(front),
     )
+    if front.budget is not None:
+        rep["budget"] = dict(spec=front.budget.spec(),
+                             **front.budget_stats.as_dict())
+    return rep

@@ -1,0 +1,230 @@
+"""Constraint-aware search: declarative deployment budgets for the DSE.
+
+QADAM / QUIDAM / QAPPA frame accelerator co-exploration as a search for
+Pareto-optimal designs *under real deployment limits* — an area envelope,
+a power (thermal) budget, a latency SLO, a minimum acceptable accuracy.
+This module is the declarative spec for those limits and the machinery
+that applies them INSIDE the streaming walks:
+
+* ``Budget`` — a frozen dataclass of optional bounds
+  (``area_mm2``/``power_mw``/``latency_s``/``energy_j`` are upper bounds,
+  ``min_utilization``/``min_accuracy`` are lower bounds).  Construction
+  validates every bound once; ``constraints()`` compiles the active
+  fields into ``Constraint`` tuples naming the result column each one
+  reads.
+* ``Budget.feasibility(result, accuracy=...)`` — the per-chunk
+  feasibility mask: one vectorized comparison per active constraint
+  against the HOST float64 columns of an evaluated chunk, plus
+  per-constraint kill counts.  The compiled (jitted) evaluators are
+  untouched — masking happens after ``evaluate_chunk`` returns host
+  columns and before the chunk reaches the ``ParetoArchive``, so an
+  infeasible lane never enters the front and memory stays
+  O(chunk + front).
+* ``BudgetStats`` — streaming accumulator of evaluated/feasible counts
+  and per-constraint kills across chunks (what ``coexplore_report``
+  surfaces as the feasible fraction).
+
+Feasibility semantics are *exactly* post-hoc filtering: dropping
+infeasible lanes chunk-by-chunk before the archive yields the identical
+front — indices and objectives, bit-for-bit — as evaluating the whole
+walk unconstrained and then reducing only the feasible rows (masking is
+row-wise and elementwise, so it commutes with the archive's exact
+reduction).  ``tests/test_constraints.py`` property-tests this on both
+the mixed and per-model joint walks.
+
+The module is dependency-light (numpy only) so ``dse``/``coexplore`` can
+import it without cycles; ``DseResult`` is duck-typed via ``getattr``.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field, fields as _dc_fields
+from typing import NamedTuple
+
+import numpy as np
+
+
+class Constraint(NamedTuple):
+    """One compiled bound: ``column`` of an evaluated chunk vs ``bound``.
+
+    ``kind`` is ``"max"`` (feasible iff value <= bound) or ``"min"``
+    (feasible iff value >= bound).  ``name`` is the human-readable form
+    used as the key of kill counts (e.g. ``"area_mm2<=12"``).
+    """
+    name: str
+    column: str
+    kind: str
+    bound: float
+
+
+# Budget field -> (result column it reads, bound direction).  "accuracy"
+# is not a DseResult column: it is the per-lane accuracy objective of the
+# JOINT walk (coexplore), passed to ``feasibility`` explicitly.
+_BUDGET_FIELDS: dict[str, tuple[str, str]] = {
+    "area_mm2": ("area_mm2", "max"),
+    "power_mw": ("power_mw", "max"),
+    "latency_s": ("latency_s", "max"),
+    "energy_j": ("energy_j", "max"),
+    "min_utilization": ("utilization", "min"),
+    "min_accuracy": ("accuracy", "min"),
+}
+
+
+@dataclass(frozen=True)
+class Budget:
+    """Declarative deployment budget over evaluated design points.
+
+    Every field is optional; a ``None`` bound is inactive.  Upper bounds
+    (``<=``): chip area (mm^2), average power (mW), per-inference latency
+    (s), per-inference chip energy (J).  Lower bounds (``>=``): PE-array
+    utilization (0..1) and — joint co-exploration walks only — predicted
+    accuracy (0..1).
+
+    Bounds are validated at construction (finite, non-negative; the two
+    fractional lower bounds must lie in [0, 1]), so a walk can trust the
+    compiled constraint list without re-checking per chunk.
+    """
+    area_mm2: float | None = None
+    power_mw: float | None = None
+    latency_s: float | None = None
+    energy_j: float | None = None
+    min_utilization: float | None = None
+    min_accuracy: float | None = None
+
+    def __post_init__(self):
+        for f in _dc_fields(self):
+            v = getattr(self, f.name)
+            if v is None:
+                continue
+            v = float(v)
+            if not np.isfinite(v) or v < 0.0:
+                raise ValueError(
+                    f"Budget.{f.name} must be a finite non-negative bound, "
+                    f"got {v!r}")
+            if f.name in ("min_utilization", "min_accuracy") and v > 1.0:
+                raise ValueError(
+                    f"Budget.{f.name} is a fraction in [0, 1], got {v!r}")
+            object.__setattr__(self, f.name, v)
+
+    def constraints(self) -> tuple[Constraint, ...]:
+        """The active bounds compiled to ``Constraint`` tuples (stable
+        field order, so kill-count keys are deterministic)."""
+        out = []
+        for fname, (column, kind) in _BUDGET_FIELDS.items():
+            v = getattr(self, fname)
+            if v is not None:
+                op = "<=" if kind == "max" else ">="
+                out.append(Constraint(f"{column}{op}{v:g}", column, kind, v))
+        return tuple(out)
+
+    @property
+    def active(self) -> bool:
+        """Whether any bound is set (an empty Budget filters nothing)."""
+        return any(getattr(self, f.name) is not None
+                   for f in _dc_fields(self))
+
+    def spec(self) -> dict:
+        """The active bounds as a plain dict (for reports / JSON)."""
+        return {f.name: getattr(self, f.name) for f in _dc_fields(self)
+                if getattr(self, f.name) is not None}
+
+    def feasibility(self, result,
+                    accuracy: np.ndarray | None = None
+                    ) -> tuple[np.ndarray, dict[str, int]]:
+        """Per-lane feasibility mask of one evaluated chunk + kill counts.
+
+        ``result`` is any struct with the DseResult host columns
+        (duck-typed).  ``accuracy`` is the per-lane accuracy objective of
+        a joint walk; a ``min_accuracy`` bound without it is an error —
+        the plain accelerator-only DSE has no accuracy axis to constrain.
+
+        Returns ``(mask, kills)``: ``mask[i]`` is True iff lane *i*
+        satisfies every active bound; ``kills[name]`` counts the lanes
+        each constraint rejects, counted INDEPENDENTLY (a lane violating
+        two bounds appears in both counts, so kills can sum past the
+        number of infeasible lanes).
+        """
+        n = int(np.shape(np.asarray(result.latency_s))[0])
+        mask = np.ones(n, bool)
+        kills: dict[str, int] = {}
+        for c in self.constraints():
+            if c.column == "accuracy":
+                if accuracy is None:
+                    raise ValueError(
+                        "Budget.min_accuracy needs the joint co-exploration "
+                        "walk (coexplore_front) — a plain DSE result has no "
+                        "accuracy column")
+                vals = np.asarray(accuracy, np.float64)
+            else:
+                vals = np.asarray(getattr(result, c.column), np.float64)
+            bad = ~np.isfinite(vals)
+            if bad.any():
+                # A NaN/inf lane fails every bound, so masking it would
+                # silently relabel evaluator corruption as an over-budget
+                # kill — the same corruption the unconstrained walk
+                # reports loudly at the archive.  Stay loud here too.
+                first = np.flatnonzero(bad)[:5].tolist()
+                raise ValueError(
+                    f"constraint {c.name!r} reads non-finite values in "
+                    f"{int(bad.sum())} lane(s) (first: {first}) — refusing "
+                    f"to count evaluator corruption as budget kills")
+            ok = vals <= c.bound if c.kind == "max" else vals >= c.bound
+            kills[c.name] = int(n - np.count_nonzero(ok))
+            mask &= ok
+        return mask, kills
+
+
+@dataclass
+class BudgetStats:
+    """Streaming accumulator of a constrained walk's feasibility telemetry.
+
+    ``evaluated`` counts every lane the walk evaluated (pre-mask — the
+    subsample accounting, so feasible_fraction is relative to the points
+    actually visited, not the full space), ``feasible`` the lanes that
+    survived every bound, ``kills`` the per-constraint rejection counts
+    (independent counts; see ``Budget.feasibility``).
+    """
+    evaluated: int = 0
+    feasible: int = 0
+    kills: dict[str, int] = field(default_factory=dict)
+
+    def record(self, mask: np.ndarray, kills: dict[str, int]) -> None:
+        """Fold one chunk's feasibility outcome into the totals."""
+        self.evaluated += int(len(mask))
+        self.feasible += int(np.count_nonzero(mask))
+        for name, n in kills.items():
+            self.kills[name] = self.kills.get(name, 0) + int(n)
+
+    @property
+    def feasible_fraction(self) -> float:
+        """Feasible share of evaluated points (0.0 before any chunk)."""
+        return self.feasible / self.evaluated if self.evaluated else 0.0
+
+    def as_dict(self) -> dict:
+        """JSON-friendly summary (what coexplore_report embeds)."""
+        return dict(evaluated=self.evaluated, feasible=self.feasible,
+                    feasible_fraction=self.feasible_fraction,
+                    kills=dict(self.kills))
+
+
+def mask_result(result, mask: np.ndarray):
+    """Row-filter every column of a DseResult-like struct (host numpy)."""
+    return type(result)(*[np.asarray(col)[mask] for col in result])
+
+
+def apply_budget(result, indices: np.ndarray, budget: Budget,
+                 accuracy: np.ndarray | None = None,
+                 stats: BudgetStats | None = None):
+    """Drop a chunk's infeasible lanes before it reaches the archive.
+
+    Returns the filtered ``(result, indices)`` pair; records the chunk
+    into ``stats`` when given.  The all-feasible fast path returns the
+    inputs untouched (no copy).
+    """
+    mask, kills = budget.feasibility(result, accuracy)
+    if stats is not None:
+        stats.record(mask, kills)
+    idx = np.asarray(indices)
+    if mask.all():
+        return result, idx
+    return mask_result(result, mask), idx[mask]

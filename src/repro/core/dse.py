@@ -34,6 +34,7 @@ import numpy as np
 
 from repro.core.arch import (AcceleratorConfig, PE_INT16, PE_TYPE_NAMES,
                              iter_space_chunks, space_points)
+from repro.core.constraints import Budget, BudgetStats, apply_budget
 from repro.core.dataflow import layer_cost, reduce_layer_costs
 from repro.core.ppa import PPAModels
 from repro.core.synth import synthesize
@@ -235,6 +236,11 @@ def evaluate_chunk(cfg: AcceleratorConfig,
         if mids.size and (mids.min() < 0 or mids.max() >= n_models):
             raise ValueError(f"model_ids out of range for {n_models} "
                              f"stacked models")
+    if n == 0:
+        # nothing to evaluate; _pad_config cannot broadcast f[-1:] of an
+        # empty array, so return the canonical empty columns directly
+        # (same contract as evaluate_space's N == 0 path)
+        return _empty_result()
     if pad_to is not None and n < pad_to:
         cfg = _pad_config(cfg, pad_to - n)
         if mids is not None:  # padded lanes repeat the last (model, config)
@@ -295,18 +301,33 @@ def evaluate_space_streaming(
         surrogate: PPAModels | None = None,
         chunk_size: int = DEFAULT_CHUNK_SIZE,
         max_points: int | None = None,
-        seed: int = 0) -> Iterator[tuple[DseResult, np.ndarray]]:
+        seed: int = 0,
+        budget: Budget | None = None,
+        budget_stats: BudgetStats | None = None,
+) -> Iterator[tuple[DseResult, np.ndarray]]:
     """Lazily evaluate the cartesian design space chunk-by-chunk.
 
     Yields ``(chunk_result, flat_indices)`` with every chunk evaluated at
     the fixed ``chunk_size`` shape (single jit compilation per workload
     layer count); the padded tail of the final chunk is trimmed before it
     is yielded.  Memory never exceeds O(chunk_size).
+
+    With a ``budget`` (``constraints.Budget``) set, each chunk's
+    infeasible lanes are dropped on host BEFORE the chunk is yielded —
+    the compiled evaluator is untouched and a downstream archive only
+    ever sees feasible points (bit-identical to filtering the
+    unconstrained walk post hoc).  Fully-infeasible chunks are skipped;
+    pass a ``budget_stats`` (``constraints.BudgetStats``) to collect
+    evaluated/feasible counts and per-constraint kills.
     """
     for cfg, idx in iter_space_chunks(space, chunk_size=chunk_size,
                                       max_points=max_points, seed=seed):
-        yield evaluate_chunk(cfg, workload, surrogate,
-                             pad_to=chunk_size), idx
+        res = evaluate_chunk(cfg, workload, surrogate, pad_to=chunk_size)
+        if budget is not None:
+            res, idx = apply_budget(res, idx, budget, stats=budget_stats)
+            if len(idx) == 0:
+                continue
+        yield res, idx
 
 
 # ---------------------------------------------------------------------------
@@ -530,15 +551,19 @@ class ParetoArchive:
         if obj.ndim != 2 or obj.shape[1] != self._obj.shape[1]:
             raise ValueError(f"expected (N, {self._obj.shape[1]}) objectives, "
                              f"got {obj.shape}")
-        if np.isnan(obj).any():
+        if not np.isfinite(obj).all():
             # NaN compares False both ways, so a NaN row would neither
-            # dominate nor be dominated — it would sit on the front forever,
-            # silently corrupting it.  Refuse loudly instead.
-            bad = np.flatnonzero(np.isnan(obj).any(axis=1))
+            # dominate nor be dominated — it would sit on the front forever.
+            # A +inf objective is just as corrupting: that row can never be
+            # dominated, so it enthrones itself and evicts every real point
+            # (the surrogate's old zero-clock/zero-area lanes did exactly
+            # this via perf_per_area = +inf).  Refuse all non-finite loudly.
+            bad = np.flatnonzero(~np.isfinite(obj).all(axis=1))
             raise ValueError(
-                f"objectives contain NaN in {len(bad)} row(s) "
-                f"(first: {bad[:5].tolist()}) — NaN rows can never be "
-                f"dominated and would corrupt the archive front")
+                f"objectives contain non-finite values (NaN/inf) in "
+                f"{len(bad)} row(s) (first: {bad[:5].tolist()}) — a NaN row "
+                f"can never be dominated and a +inf row dominates "
+                f"everything; either corrupts the archive front")
         idx = (np.arange(self._seen, self._seen + len(obj))
                if indices is None else np.asarray(indices, np.int64))
         self._seen += len(obj)
@@ -574,17 +599,27 @@ def pareto_front_streaming(
         surrogate: PPAModels | None = None,
         chunk_size: int = DEFAULT_CHUNK_SIZE,
         max_points: int | None = None,
-        seed: int = 0) -> tuple[ParetoArchive, AcceleratorConfig]:
+        seed: int = 0,
+        budget: Budget | None = None,
+        budget_stats: BudgetStats | None = None,
+) -> tuple[ParetoArchive, AcceleratorConfig]:
     """Pareto front of an arbitrarily large design space in O(chunk) memory.
 
     Streams the space through ``evaluate_space_streaming`` and merges every
     chunk into a non-dominated archive.  Returns the archive (objectives +
     global flat indices) and the decoded front configs.
+
+    With ``budget`` set the walk is CONSTRAINT-AWARE: infeasible lanes are
+    masked out per chunk before the archive sees them, so the result is
+    the Pareto front OF THE FEASIBLE SUBSET (bit-identical, indices and
+    objectives, to filtering an unconstrained walk post hoc and reducing
+    the survivors).  ``budget_stats`` collects kill telemetry.
     """
     archive = ParetoArchive(len(metrics))
     for res, idx in evaluate_space_streaming(
             workload, space, surrogate=surrogate, chunk_size=chunk_size,
-            max_points=max_points, seed=seed):
+            max_points=max_points, seed=seed, budget=budget,
+            budget_stats=budget_stats):
         archive.update(_objective_columns(res, metrics), idx)
     return archive, space_points(archive.indices, space)
 

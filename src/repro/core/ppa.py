@@ -27,7 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.arch import AcceleratorConfig, PE_TYPE_NAMES
-from repro.core.synth import SynthResult, synthesize
+from repro.core.synth import LEAKAGE_MW_PER_MM2, SynthResult, synthesize
 
 # Regression features: every knob except pe_type (models are per PE type).
 FEATURE_FIELDS = ("pe_rows", "pe_cols", "gbuf_kb", "spad_ifmap",
@@ -94,8 +94,19 @@ def fit_poly(x: jnp.ndarray, y: jnp.ndarray, degree: int,
 
 def kfold_mse(x: jnp.ndarray, y: jnp.ndarray, degree: int, k: int = 5,
               log_target: bool = True) -> float:
-    """k-fold CV mean squared error (in log space if log_target)."""
-    n = x.shape[0]
+    """k-fold CV mean squared error (in log space if log_target).
+
+    ``k`` is clamped to the sample count: with k > n, np.array_split
+    would yield empty folds whose MSE is a mean over an empty array
+    (NaN + RuntimeWarning), silently breaking degree selection in
+    ``select_and_fit`` (NaN compares False, so the first degree always
+    won).  Cross-validation needs at least 2 samples.
+    """
+    n = int(x.shape[0])
+    if n < 2:
+        raise ValueError(f"kfold_mse needs >= 2 samples to hold one out, "
+                         f"got {n}")
+    k = min(k, n)
     idx = np.arange(n)
     rng = np.random.default_rng(0)
     rng.shuffle(idx)
@@ -131,13 +142,38 @@ class PPAModels:
     models: Dict[str, Dict[str, PolyModel]] = field(default_factory=dict)
 
     def predict(self, cfg: AcceleratorConfig) -> SynthResult:
-        """Surrogate SynthResult for a batched config (mixed PE types OK)."""
+        """Surrogate SynthResult for a batched config (mixed PE types OK).
+
+        Every PE type present in ``cfg`` must have a fitted model —
+        lanes of an unfitted type would otherwise silently predict zero
+        power/clock/area, i.e. a 1e6 ns critical path, zero area and a
+        +inf perf/area objective that corrupts any Pareto front built on
+        them.  Raises ``ValueError`` naming the missing types instead.
+        """
         x = config_features(cfg)
-        pt = np.atleast_1d(np.asarray(cfg.pe_type))
+        pt = np.atleast_1d(np.asarray(cfg.pe_type)).astype(int)
+        codes = np.unique(pt)
+        invalid = codes[(codes < 0) | (codes >= len(PE_TYPE_NAMES))]
+        if invalid.size:
+            # a negative code would alias a real type via Python indexing
+            # below (its lanes silently keeping the zero prediction this
+            # guard exists to prevent); an oversized one would IndexError
+            raise ValueError(
+                f"pe_type codes {invalid.tolist()} are outside "
+                f"[0, {len(PE_TYPE_NAMES)}) — not a known PE type")
+        missing = sorted({PE_TYPE_NAMES[c] for c in codes
+                          if PE_TYPE_NAMES[c] not in self.models})
+        if missing:
+            raise ValueError(
+                f"PPAModels has no fitted model for PE type(s) "
+                f"{missing} present in the config batch (fitted: "
+                f"{sorted(self.models)}); predicting them would silently "
+                f"yield zero power/clock/area — fit on a design sample "
+                f"covering every PE type the DSE sweeps")
         out = {t: np.zeros(x.shape[0], np.float64) for t in TARGETS}
         for code, name in enumerate(PE_TYPE_NAMES):
             sel = pt == code
-            if not sel.any() or name not in self.models:
+            if not sel.any():
                 continue
             for t in TARGETS:
                 out[t][sel] = np.asarray(
@@ -147,7 +183,7 @@ class PPAModels:
         power = jnp.asarray(out["power_mw"], jnp.float32)
         return SynthResult(area_mm2=area, crit_path_ns=1.0 / jnp.maximum(clock, 1e-6),
                            clock_ghz=clock, power_mw=power,
-                           leakage_mw=2.5 * area)
+                           leakage_mw=LEAKAGE_MW_PER_MM2 * area)
 
 
 def fit_ppa_models(cfg: AcceleratorConfig,

@@ -36,6 +36,13 @@ class SynthResult(NamedTuple):
 
 _NOISE_AMP = 0.03
 
+# 45 nm leakage power density: mW of static power per mm^2 of synthesized
+# area.  THE shared constant — the PPA surrogate's SynthResult derives its
+# leakage from predicted area with this same value, so the surrogate and
+# oracle DSE paths can only diverge through the fitted power/clock/area
+# polynomials, never through a drifting leakage model.
+LEAKAGE_MW_PER_MM2 = 3.5
+
 
 def _noise(cfg: AcceleratorConfig, salt: float):
     """Deterministic ~3% 'synthesis variability' from a config hash."""
@@ -86,7 +93,7 @@ def synthesize(cfg: AcceleratorConfig) -> SynthResult:
         * E.gbuf_energy_per_bit(cfg.gbuf_kb)
     dyn_mw = activity * clock_ghz * (n_pes * pe_pj_per_cycle
                                      + gbuf_pj_per_cycle)  # pJ * GHz = mW
-    leak_mw = 3.5 * area_mm2  # 45 nm leakage density
+    leak_mw = LEAKAGE_MW_PER_MM2 * area_mm2
     power_mw = (dyn_mw + leak_mw) * _noise(cfg, 3.0)
     return SynthResult(area_mm2=area_mm2, crit_path_ns=crit,
                        clock_ghz=clock_ghz, power_mw=power_mw,

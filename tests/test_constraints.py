@@ -1,0 +1,329 @@
+"""Constraint-aware search: declarative ``Budget`` specs, streaming
+feasibility masks, and the bit-identity of constrained walks with post-hoc
+filtering of the unconstrained walk (indices AND objectives), on the plain
+DSE walk and BOTH joint co-exploration walks."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # CI images without hypothesis: deterministic fallback
+    from _hypothesis_fallback import given, settings, st
+
+from repro.core import (AccuracySurrogate, Budget, BudgetStats, DseResult,
+                        PAPER_WORKLOADS, apply_budget, coexplore_front,
+                        coexplore_report, evaluate_chunk,
+                        evaluate_space_streaming, iter_joint_space_chunks,
+                        mask_result, model_entry, pareto_front_streaming,
+                        pareto_mask_dense, resnet_cifar, space_size,
+                        transformer_gemm)
+from repro.core.coexplore import _joint_objectives
+from repro.core.dse import _objective_columns
+
+# 2*2*1*1*2*1*5*1 = 40 accelerator points keeps every walk here cheap.
+TINY_SPACE = dict(
+    pe_rows=(8, 12), pe_cols=(8, 14), gbuf_kb=(54.0,), spad_ifmap=(12,),
+    spad_filter=(112, 224), spad_psum=(16,),
+    pe_type=tuple(range(5)), bandwidth_gbps=(25.6,),
+)
+CHUNK = 16
+METRICS = ("perf_per_area", "neg_energy_j")
+
+
+def _concat_results(chunks) -> DseResult:
+    return DseResult(*[np.concatenate([np.asarray(r[i]) for r in chunks])
+                       for i in range(len(DseResult._fields))])
+
+
+@pytest.fixture(scope="module")
+def workload():
+    return PAPER_WORKLOADS["resnet20-cifar10"]()
+
+
+@pytest.fixture(scope="module")
+def full_result(workload) -> DseResult:
+    """Unconstrained evaluation of all of TINY_SPACE at the walk's own
+    chunking — the post-hoc reference every constrained walk must match
+    bit-for-bit."""
+    return _concat_results([r for r, _ in evaluate_space_streaming(
+        workload, TINY_SPACE, chunk_size=CHUNK)])
+
+
+@pytest.fixture(scope="module")
+def tiny_models():
+    return (model_entry(resnet_cifar(20)),
+            model_entry(transformer_gemm(seq=128, d_model=128, n_layers=2,
+                                         n_heads=4, d_ff=256, vocab=1024)))
+
+
+@pytest.fixture(scope="module")
+def full_joint(tiny_models):
+    """(full DseResult, per-lane accuracy, joint indices) of the whole
+    unconstrained joint walk — the oracle-walk numerics (the mixed walk is
+    bit-identical to them by the PR 3 padding property)."""
+    acc = AccuracySurrogate()
+    acc_matrix = np.stack([acc.predict_per_type(m.name, m.macs, m.base_acc)
+                           for m in tiny_models])
+    res_chunks, lane_accs, idxs = [], [], []
+    for m, cfg, idx in iter_joint_space_chunks(
+            TINY_SPACE, num_models=len(tiny_models), chunk_size=CHUNK,
+            group_by_model=True):
+        res_chunks.append(evaluate_chunk(cfg, tiny_models[m].workload,
+                                         pad_to=CHUNK))
+        codes = np.asarray(cfg.pe_type).astype(np.int64)
+        lane_accs.append(acc_matrix[m][codes])
+        idxs.append(idx)
+    return (_concat_results(res_chunks), np.concatenate(lane_accs),
+            np.concatenate(idxs))
+
+
+def _posthoc_front(obj: np.ndarray, mask: np.ndarray):
+    """(indices, objectives) of the dense front of the FEASIBLE rows —
+    the post-hoc-filtering semantics the streaming walks must reproduce."""
+    feas = np.flatnonzero(mask)
+    if not len(feas):
+        return feas.astype(np.int64), np.empty((0, obj.shape[1]))
+    keep = np.asarray(pareto_mask_dense(jnp.asarray(obj[mask])))
+    return feas[keep], obj[mask][keep]
+
+
+def _assert_front_equal(indices, objectives, ref_idx, ref_obj):
+    """Same front membership AND bit-identical objectives, index-aligned."""
+    np.testing.assert_array_equal(np.sort(indices), np.sort(ref_idx))
+    order, ref_order = np.argsort(indices), np.argsort(ref_idx)
+    np.testing.assert_array_equal(np.asarray(objectives)[order],
+                                  np.asarray(ref_obj)[ref_order])
+
+
+class TestBudgetSpec:
+    def test_constraints_compile_active_fields_only(self):
+        b = Budget(area_mm2=8.0, min_accuracy=0.9)
+        cons = b.constraints()
+        assert [(c.column, c.kind, c.bound) for c in cons] == [
+            ("area_mm2", "max", 8.0), ("accuracy", "min", 0.9)]
+        assert [c.name for c in cons] == ["area_mm2<=8", "accuracy>=0.9"]
+        assert b.active and b.spec() == dict(area_mm2=8.0, min_accuracy=0.9)
+
+    def test_empty_budget_is_inactive_and_filters_nothing(self, full_result):
+        b = Budget()
+        assert not b.active and b.constraints() == () and b.spec() == {}
+        mask, kills = b.feasibility(full_result)
+        assert mask.all() and kills == {}
+
+    @pytest.mark.parametrize("kwargs", [
+        dict(area_mm2=-1.0), dict(power_mw=float("nan")),
+        dict(latency_s=float("inf")), dict(min_accuracy=1.5),
+        dict(min_utilization=-0.1),
+    ])
+    def test_invalid_bounds_rejected_at_construction(self, kwargs):
+        with pytest.raises(ValueError):
+            Budget(**kwargs)
+
+    def test_min_accuracy_needs_joint_walk(self, full_result):
+        with pytest.raises(ValueError, match="co-exploration"):
+            Budget(min_accuracy=0.5).feasibility(full_result)
+
+    @pytest.mark.parametrize("bad_val", [np.nan, np.inf])
+    def test_non_finite_constrained_column_raises(self, full_result,
+                                                  bad_val):
+        """A NaN/inf lane fails every bound, so silently masking it would
+        relabel evaluator corruption as an over-budget kill — feasibility
+        must stay as loud as the archive's non-finite guard."""
+        cols = {f: np.array(getattr(full_result, f))
+                for f in DseResult._fields}
+        cols["latency_s"][3] = bad_val
+        corrupt = DseResult(**cols)
+        with pytest.raises(ValueError, match="non-finite"):
+            Budget(latency_s=1.0).feasibility(corrupt)
+        # un-constrained columns are not scanned: no false alarms
+        mask, _ = Budget(area_mm2=1e6).feasibility(corrupt)
+        assert mask.all()
+
+    def test_kill_counts_are_independent_per_constraint(self, full_result):
+        area = np.asarray(full_result.area_mm2)
+        lat = np.asarray(full_result.latency_s)
+        b = Budget(area_mm2=float(np.median(area)),
+                   latency_s=float(np.median(lat)))
+        mask, kills = b.feasibility(full_result)
+        assert kills["area_mm2<=" + f"{np.median(area):g}"] \
+            == int((area > np.median(area)).sum())
+        assert kills["latency_s<=" + f"{np.median(lat):g}"] \
+            == int((lat > np.median(lat)).sum())
+        np.testing.assert_array_equal(
+            mask, (area <= np.median(area)) & (lat <= np.median(lat)))
+
+    def test_mask_result_filters_every_column(self, full_result):
+        mask = np.zeros(len(np.asarray(full_result.latency_s)), bool)
+        mask[[1, 5]] = True
+        sub = mask_result(full_result, mask)
+        for f in DseResult._fields:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(sub, f)),
+                np.asarray(getattr(full_result, f))[mask])
+
+    def test_apply_budget_fast_path_returns_inputs_untouched(self,
+                                                             full_result):
+        idx = np.arange(len(np.asarray(full_result.latency_s)))
+        stats = BudgetStats()
+        res, out = apply_budget(full_result, idx, Budget(area_mm2=1e6),
+                                stats=stats)
+        assert res is full_result
+        assert stats.feasible == stats.evaluated == len(idx)
+        assert stats.feasible_fraction == 1.0
+
+    def test_budget_stats_accumulate(self):
+        stats = BudgetStats()
+        assert stats.feasible_fraction == 0.0
+        stats.record(np.array([True, False, False]), {"a<=1": 2})
+        stats.record(np.array([True, True]), {"a<=1": 0, "b>=2": 0})
+        assert stats.evaluated == 5 and stats.feasible == 3
+        assert stats.kills == {"a<=1": 2, "b>=2": 0}
+        assert stats.as_dict()["feasible_fraction"] == pytest.approx(0.6)
+
+
+class TestConstrainedDseWalk:
+    @given(q_area=st.floats(0.0, 1.0), q_power=st.floats(0.0, 1.0))
+    @settings(max_examples=12, deadline=None)
+    def test_front_equals_posthoc_filtering(self, workload, full_result,
+                                            q_area, q_power):
+        """Masking inside the streaming walk == evaluating unconstrained
+        and filtering after the fact, bit-for-bit (indices + objectives),
+        for budgets drawn across the whole feasibility spectrum."""
+        budget = Budget(
+            area_mm2=float(np.quantile(full_result.area_mm2, q_area)),
+            power_mw=float(np.quantile(full_result.power_mw, q_power)))
+        mask, _ = budget.feasibility(full_result)
+        ref_idx, ref_obj = _posthoc_front(
+            _objective_columns(full_result, METRICS), mask)
+        stats = BudgetStats()
+        archive, _ = pareto_front_streaming(
+            workload, TINY_SPACE, metrics=METRICS, chunk_size=CHUNK,
+            budget=budget, budget_stats=stats)
+        _assert_front_equal(archive.indices, archive.objectives,
+                            ref_idx, ref_obj)
+        assert stats.evaluated == space_size(TINY_SPACE)
+        assert stats.feasible == int(mask.sum())
+
+    def test_all_feasible_budget_matches_unconstrained(self, workload):
+        free = pareto_front_streaming(workload, TINY_SPACE, metrics=METRICS,
+                                      chunk_size=CHUNK)[0]
+        stats = BudgetStats()
+        bounded = pareto_front_streaming(
+            workload, TINY_SPACE, metrics=METRICS, chunk_size=CHUNK,
+            budget=Budget(area_mm2=1e6, power_mw=1e9, latency_s=1e3),
+            budget_stats=stats)[0]
+        _assert_front_equal(bounded.indices, bounded.objectives,
+                            free.indices, free.objectives)
+        assert stats.feasible == stats.evaluated
+        assert all(v == 0 for v in stats.kills.values())
+
+    def test_empty_feasible_set_yields_empty_front(self, workload):
+        stats = BudgetStats()
+        archive, cfgs = pareto_front_streaming(
+            workload, TINY_SPACE, metrics=METRICS, chunk_size=CHUNK,
+            budget=Budget(area_mm2=0.0), budget_stats=stats)
+        assert len(archive) == 0
+        assert np.asarray(cfgs.pe_rows).shape == (0,)
+        assert stats.feasible == 0
+        assert stats.evaluated == space_size(TINY_SPACE)
+        assert stats.feasible_fraction == 0.0
+
+    def test_streaming_chunks_are_prefiltered(self, workload, full_result):
+        """evaluate_space_streaming with a budget must never yield an
+        infeasible lane (the archive-protection contract)."""
+        bound = float(np.median(full_result.area_mm2))
+        budget = Budget(area_mm2=bound)
+        seen = 0
+        for res, idx in evaluate_space_streaming(
+                workload, TINY_SPACE, chunk_size=7, budget=budget):
+            assert (np.asarray(res.area_mm2) <= bound).all()
+            assert len(idx) > 0          # fully-killed chunks are skipped
+            seen += len(idx)
+        assert seen == int((np.asarray(full_result.area_mm2) <= bound).sum())
+
+
+class TestConstrainedJointWalks:
+    @given(q_area=st.floats(0.0, 1.0), q_acc=st.floats(0.0, 1.0),
+           mix=st.booleans())
+    @settings(max_examples=10, deadline=None)
+    def test_front_equals_posthoc_filtering_both_walks(
+            self, tiny_models, full_joint, q_area, q_acc, mix):
+        """coexplore_front(budget=...) == post-hoc filtering of the
+        unconstrained joint walk, bit-identically, in BOTH the mixed
+        one-compile walk and the group_by_model oracle walk."""
+        full, lane_acc, idx = full_joint
+        budget = Budget(
+            area_mm2=float(np.quantile(full.area_mm2, q_area)),
+            min_accuracy=float(np.quantile(lane_acc, q_acc)))
+        mask, kills = budget.feasibility(full, accuracy=lane_acc)
+        ref_idx, ref_obj = _posthoc_front(_joint_objectives(full, lane_acc),
+                                          mask)
+        front = coexplore_front(tiny_models, TINY_SPACE, chunk_size=CHUNK,
+                                mix_models=mix, budget=budget)
+        _assert_front_equal(front.archive.indices, front.archive.objectives,
+                            idx[ref_idx], ref_obj)
+        assert front.points_evaluated == len(idx)      # pre-mask accounting
+        assert front.budget_stats.evaluated == len(idx)
+        assert front.budget_stats.feasible == int(mask.sum())
+        assert front.budget_stats.kills == kills
+
+    def test_all_feasible_matches_unconstrained_bitwise(self, tiny_models):
+        free = coexplore_front(tiny_models, TINY_SPACE, chunk_size=CHUNK)
+        bounded = coexplore_front(
+            tiny_models, TINY_SPACE, chunk_size=CHUNK,
+            budget=Budget(area_mm2=1e6, power_mw=1e9, min_accuracy=0.0))
+        _assert_front_equal(bounded.archive.indices,
+                            bounded.archive.objectives,
+                            free.archive.indices, free.archive.objectives)
+        assert bounded.per_model_best == free.per_model_best
+        assert bounded.budget_stats.feasible \
+            == bounded.budget_stats.evaluated == free.points_evaluated
+
+    def test_empty_feasible_set_reports_cleanly(self, tiny_models):
+        front = coexplore_front(tiny_models, TINY_SPACE, chunk_size=CHUNK,
+                                budget=Budget(area_mm2=0.0))
+        rep = coexplore_report(front)
+        assert rep["front_size"] == 0 and rep["points"] == []
+        assert rep["budget"]["feasible"] == 0
+        assert rep["budget"]["feasible_fraction"] == 0.0
+        # nothing feasible -> no aggregates -> the claim is indeterminate
+        assert rep["claim"]["holds"] is False
+        assert rep["claim"]["indeterminate"] == len(tiny_models)
+
+    def test_report_budget_section(self, tiny_models, full_joint):
+        full, lane_acc, _ = full_joint
+        bound = float(np.median(full.area_mm2))
+        front = coexplore_front(tiny_models, TINY_SPACE, chunk_size=CHUNK,
+                                budget=Budget(area_mm2=bound))
+        rep = coexplore_report(front)
+        b = rep["budget"]
+        assert b["spec"] == dict(area_mm2=bound)
+        assert b["evaluated"] == front.points_evaluated
+        assert 0 < b["feasible"] < b["evaluated"]
+        assert b["feasible_fraction"] == pytest.approx(
+            b["feasible"] / b["evaluated"])
+        assert b["kills"] == {f"area_mm2<={bound:g}":
+                              b["evaluated"] - b["feasible"]}
+        # unconstrained reports carry no budget section
+        assert "budget" not in coexplore_report(
+            coexplore_front(tiny_models, TINY_SPACE, chunk_size=CHUNK))
+
+    def test_subsampled_constrained_walk_accounts_evaluated_points(
+            self, tiny_models):
+        """max_points subsampling + budget: feasibility is accounted
+        against the points actually visited (the subsample), and both
+        walk modes agree on it (same RNG stream)."""
+        budget = Budget(power_mw=400.0)
+        fronts = [coexplore_front(tiny_models, TINY_SPACE, chunk_size=7,
+                                  max_points=30, seed=4, mix_models=mix,
+                                  budget=budget) for mix in (True, False)]
+        for f in fronts:
+            assert f.points_evaluated == 30
+            assert f.budget_stats.evaluated == 30
+        assert fronts[0].budget_stats == fronts[1].budget_stats
+        _assert_front_equal(fronts[0].archive.indices,
+                            fronts[0].archive.objectives,
+                            fronts[1].archive.indices,
+                            fronts[1].archive.objectives)

@@ -119,6 +119,77 @@ class TestPPAFit:
             assert mape(getattr(truth, t), getattr(pred, t)) < 0.08, t
 
 
+class TestPPAHardening:
+    def test_predict_missing_pe_type_raises(self):
+        """Lanes of an unfitted PE type used to silently predict zero
+        power/clock/area (1e6 ns crit path, +inf perf/area downstream);
+        the surrogate must name the missing types loudly instead."""
+        int16_only = enumerate_space(dict(
+            pe_rows=(8, 12, 16), pe_cols=(8, 14), gbuf_kb=(54.0, 108.0),
+            spad_ifmap=(12, 24), spad_filter=(112, 224), spad_psum=(16, 24),
+            pe_type=(1,), bandwidth_gbps=(12.8, 25.6)))
+        models = fit_ppa_models(int16_only, degrees=(1,), k=3)
+        mixed = stack_configs([make_config(pe_type="int16"),
+                               make_config(pe_type="lightpe1"),
+                               make_config(pe_type="fp32")])
+        with pytest.raises(ValueError) as e:
+            models.predict(mixed)
+        assert "lightpe1" in str(e.value) and "fp32" in str(e.value)
+        assert "int16" not in str(e.value).split("fitted:")[0]
+        # fitted types still predict fine
+        res = models.predict(stack_configs([make_config(pe_type="int16")]))
+        assert np.isfinite(np.asarray(res.clock_ghz)).all()
+        assert (np.asarray(res.area_mm2) > 0).all()
+
+    @pytest.mark.parametrize("code", [-1, 99])
+    def test_predict_out_of_range_code_raises(self, code):
+        """A negative code would alias a real PE type through Python
+        indexing (its lanes silently keeping zero predictions); an
+        oversized one would IndexError — both must fail as ValueError."""
+        space = enumerate_space(max_points=200, seed=5)
+        models = fit_ppa_models(space, degrees=(1,), k=3)
+        bad = stack_configs([make_config(pe_type=code)])
+        with pytest.raises(ValueError, match="not a known PE type"):
+            models.predict(bad)
+
+    def test_surrogate_leakage_matches_oracle_density(self):
+        """The surrogate derives leakage from predicted area with the SAME
+        named constant the synthesis oracle uses (no drifting duplicate)."""
+        from repro.core.synth import LEAKAGE_MW_PER_MM2
+        space = enumerate_space(max_points=300, seed=7)
+        models = fit_ppa_models(space, degrees=(1,), k=3)
+        pred = models.predict(space)
+        np.testing.assert_allclose(
+            np.asarray(pred.leakage_mw),
+            LEAKAGE_MW_PER_MM2 * np.asarray(pred.area_mm2), rtol=1e-6)
+        truth = synthesize(space)
+        np.testing.assert_allclose(
+            np.asarray(truth.leakage_mw),
+            LEAKAGE_MW_PER_MM2 * np.asarray(truth.area_mm2), rtol=1e-6)
+
+    def test_kfold_clamps_k_to_sample_count(self):
+        """k > n used to split into empty folds whose MSE is a mean over
+        an empty slice (NaN + RuntimeWarning), silently breaking degree
+        selection; the fold count is clamped instead."""
+        from repro.core.ppa import kfold_mse, select_and_fit
+        x = config_features(enumerate_space(max_points=3, seed=2))
+        y = jnp.asarray([1.0, 2.0, 3.0])
+        import warnings
+        with warnings.catch_warnings():
+            warnings.simplefilter("error", RuntimeWarning)
+            mse = kfold_mse(x, y, degree=1, k=5)
+        assert np.isfinite(mse)
+        # degree selection over the tiny sample stays NaN-free too
+        model = select_and_fit(x, y, degrees=(1, 2), k=5)
+        assert model.degree in (1, 2)
+
+    def test_kfold_needs_two_samples(self):
+        from repro.core.ppa import kfold_mse
+        x = config_features(enumerate_space(max_points=1, seed=2))
+        with pytest.raises(ValueError, match=">= 2"):
+            kfold_mse(x, jnp.asarray([1.0]), degree=1)
+
+
 class TestPareto:
     def test_pareto_mask_correct(self, rng):
         pts = jnp.asarray(rng.normal(size=(200, 2)))

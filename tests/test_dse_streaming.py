@@ -98,6 +98,17 @@ class TestChunkedEvaluation:
         assert np.shape(res.latency_s) == (1,)
         assert np.isfinite(np.asarray(res.latency_s)).all()
 
+    def test_evaluate_chunk_empty_with_pad_to(self, workload):
+        """An N=0 chunk with pad_to set must return the canonical empty
+        result (matching evaluate_space), not crash padding f[-1:] of an
+        empty array."""
+        from repro.core import RESULT_DTYPES, evaluate_chunk
+        empty = space_points(np.empty(0, np.int64), SMALL_SPACE)
+        res = evaluate_chunk(empty, workload, pad_to=8)
+        for f in res._fields:
+            col = np.asarray(getattr(res, f))
+            assert col.shape == (0,) and col.dtype == RESULT_DTYPES[f], f
+
     def test_streaming_equals_one_shot(self, one_shot, workload):
         _, ref = one_shot
         chunks = list(evaluate_space_streaming(workload, SMALL_SPACE,
@@ -185,6 +196,21 @@ class TestParetoArchive:
         archive = ParetoArchive(2)
         with pytest.raises(ValueError):
             archive.update(np.zeros((4, 3)))
+
+    @pytest.mark.parametrize("bad_val", [np.nan, np.inf, -np.inf])
+    def test_rejects_non_finite_rows(self, bad_val):
+        """+inf corrupts the front exactly like NaN (an all-+inf-beating
+        row can never be dominated), so the guard covers all non-finite
+        values — and rejection must leave the archive untouched."""
+        archive = ParetoArchive(2)
+        archive.update(np.array([[1.0, 1.0]]))
+        before = (archive.objectives.copy(), archive.indices.copy())
+        with pytest.raises(ValueError, match="non-finite"):
+            archive.update(np.array([[2.0, 2.0], [bad_val, 0.0]]))
+        np.testing.assert_array_equal(archive.objectives, before[0])
+        np.testing.assert_array_equal(archive.indices, before[1])
+        archive.update(np.array([[2.0, 2.0]]))   # clean updates still work
+        assert len(archive) == 1
 
     def test_preserves_float64_precision(self):
         """Chunk self-reduction must not round through float32: these two
