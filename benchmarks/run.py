@@ -8,9 +8,10 @@ writes the DSE-related rows to BENCH_dse.json.
 --fast shrinks the QAT training budget AND caps every DSE sweep's point
 count so the whole harness is CI-runnable in minutes; the default runs
 the full 27k paper grid (and 216k in dse_scale).  Under --fast the WARM
-throughput of both the unconstrained joint sweep and the constrained
-(area/power-budgeted) sweep is guarded against the values committed in
-BENCH_dse.json (fails on a >30% drop; BENCH_SKIP_REGRESSION=1 skips).
+throughputs of the unconstrained joint sweep, the constrained
+(area/power-budgeted) sweep and the tight-budget two-stage PRUNED sweep
+are guarded against the values committed in BENCH_dse.json (fails on a
+>30% drop; BENCH_SKIP_REGRESSION=1 skips).
 """
 
 from __future__ import annotations
@@ -24,8 +25,8 @@ import traceback
 # DSE point cap + dse_scale sizes under --fast (full grids otherwise).
 FAST_DSE_POINTS = 1500
 FAST_SCALE_SIZES = (1000, 3000)
-# --fast cap for the JOINT (model x accelerator) sweep: ~500 points per
-# model of the default 9-model axis.
+# --fast cap for the JOINT (model x accelerator) sweep: ~450 points per
+# model of the default 10-model axis.
 FAST_COEXPLORE_POINTS = 4500
 
 # Benches whose rows land in BENCH_dse.json.
@@ -33,14 +34,16 @@ DSE_BENCHES = ("fig2", "fig4", "fig56", "dse_transformers", "dse_scale",
                "coexplore")
 
 # --fast regression guard: fail if a guarded warm throughput drops more
-# than this fraction below the value committed in BENCH_dse.json.  Both
-# the unconstrained joint sweep AND the constrained (budgeted) sweep are
-# guarded, so a slow feasibility-mask path can't hide behind the
+# than this fraction below the value committed in BENCH_dse.json.  The
+# unconstrained joint sweep, the constrained (budgeted) sweep AND the
+# tight-budget two-stage pruned sweep are guarded, so neither a slow
+# feasibility-mask path nor a regressed pruner can hide behind the
 # unconstrained number.  BENCH_SKIP_REGRESSION=1 skips the check
 # (noisy/underpowered runners).
 REGRESSION_TOLERANCE = 0.30
 GUARDED_ROWS = ("coexplore_joint_sweep_warm",
-                "coexplore_constrained_sweep_warm")
+                "coexplore_constrained_sweep_warm",
+                "coexplore_pruned_sweep_warm")
 
 
 def _warm_row_fields(rows, guarded_row: str) -> dict | None:

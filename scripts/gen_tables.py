@@ -53,21 +53,100 @@ def perf_table():
                     f"{t_c:.2e} | {t_m:.2e} | {t_l:.2e} | {dom[0]} | {max(t_c,t_m,t_l):.3f}s |")
     return rows
 
+def _kv_fields(derived):
+    """key=value tokens of a bench row's derived field.
+
+    NOT safe for the `_kills` rows: their tokens are `constraint:count`
+    pairs whose names contain `<=`/`>=` — a naive first-'=' split mangles
+    `area_mm2<=2:1755` into key 'area_mm2<' — so kills rows must go
+    through `_kills_rows` instead of this parser.
+    """
+    out = {}
+    for part in derived.split(";"):
+        if "=" in part:
+            k, v = part.split("=", 1)
+            out[k] = v
+    return out
+
+
+def _kills_rows(derived):
+    """(constraint, lanes_killed) pairs + budget spec of a `_kills` row
+    (tokens are `name:count` with `<=`/`>=` inside the name)."""
+    pairs, budget = [], ""
+    for tok in derived.split(";"):
+        if tok.startswith("budget="):
+            budget = tok.split("=", 1)[1]
+        elif ":" in tok:
+            name, count = tok.rsplit(":", 1)
+            pairs.append((name, count))
+    return pairs, budget
+
+
+# Sweep-row columns rendered by the structured coexplore table, in order.
+_SWEEP_COLS = ("points", "points_per_sec", "n_compiles", "feasible",
+               "feasible_frac", "pruned", "speedup_vs_singlestage", "front",
+               "budget")
+
+
+def _coexplore_tables(entries):
+    """Structured rendering of a coexplore section: one sweep-throughput
+    table (constrained + pruned rows included, remaining keys kept in an
+    `other` column instead of dropped), one per-constraint kill-count
+    table per `_kills` row, and the generic raw table for the rest."""
+    sweeps, kills, others = [], [], []
+    for e in entries:
+        name, us, derived = e.split(",", 2)
+        if name.endswith("_kills"):
+            kills.append((name, derived))
+        elif "_sweep_" in name or "singlestage" in name:
+            sweeps.append((name, float(us), _kv_fields(derived)))
+        else:
+            others.append(e)
+    out = []
+    if sweeps:
+        out += ["| sweep | s/call | " + " | ".join(_SWEEP_COLS)
+                + " | other |",
+                "|---|---:|" + "---:|" * len(_SWEEP_COLS) + "---|"]
+        for name, us, kv in sweeps:
+            cells = [kv.get(k, "") for k in _SWEEP_COLS]
+            other = ";".join(f"{k}={v}" for k, v in kv.items()
+                             if k not in _SWEEP_COLS)
+            out.append(f"| {name} | {us / 1e6:.2f} | "
+                       + " | ".join(cells) + f" | {other} |")
+        out.append("")
+    for name, derived in kills:
+        pairs, budget = _kills_rows(derived)
+        out += [f"**{name}**" + (f" (budget: {budget})" if budget else ""),
+                "", "| constraint | lanes killed |", "|---|---:|"]
+        out += [f"| `{cname}` | {count} |" for cname, count in pairs]
+        out.append("")
+    if others:
+        out += _generic_bench_table(others)
+    return out
+
+
+def _generic_bench_table(entries):
+    rows = ["| name | us_per_call | derived |", "|---|---:|---|"]
+    for e in entries:
+        name, us, derived = e.split(",", 2)
+        rows.append(f"| {name} | {float(us):.1f} | "
+                    f"{derived.replace(';', ' ; ')} |")
+    rows.append("")
+    return rows
+
+
 def bench_dse_table(section=None, path="BENCH_dse.json"):
     """Render BENCH_dse.json sections (fig2/fig4/fig56/dse_scale/coexplore)
-    as markdown tables; ``section`` selects one (e.g. 'coexplore')."""
+    as markdown tables; ``section`` selects one (e.g. 'coexplore').  The
+    coexplore section gets the structured sweep + kill-count rendering."""
     data = json.load(open(path))
     out = []
     for sec, entries in data.items():
         if section and sec != section:
             continue
-        out += [f"### {sec}", "",
-                "| name | us_per_call | derived |", "|---|---:|---|"]
-        for e in entries:
-            name, us, derived = e.split(",", 2)
-            out.append(f"| {name} | {float(us):.1f} | "
-                       f"{derived.replace(';', ' ; ')} |")
-        out.append("")
+        out += [f"### {sec}", ""]
+        out += (_coexplore_tables(entries) if sec == "coexplore"
+                else _generic_bench_table(entries))
     return out
 
 if __name__ == "__main__":

@@ -8,9 +8,13 @@ Submodules:
   dataflow  — row-stationary analytical cost model (vmap-able)
   synth     — synthesis oracle (stand-in for Synopsys DC + FreePDK45)
   ppa       — polynomial-regression PPA surrogates + k-fold CV selection
+  costmodel — pluggable batched cost-model backends (oracle/surrogate):
+              the jitted PPA stage of the evaluator + registry
   constraints — declarative deployment budgets (area/power/latency/...)
-              compiled to streaming per-chunk feasibility masks
+              compiled to streaming per-chunk feasibility masks with
+              config-stage vs workload-stage classification
   dse       — vectorized design-space exploration + Pareto analysis
+              (two-stage config-only constraint pre-pruning)
   workloads — layer-wise workload extraction (paper CNNs + assigned archs
               + parameterized model families)
   accuracy  — per-(model, PE-type) accuracy surrogate with QAT calibration
@@ -20,26 +24,33 @@ Submodules:
 from repro.core.accuracy import (AccuracySurrogate, capacity_scale,
                                  seeded_base_accuracy)
 from repro.core.arch import (AcceleratorConfig, make_config, stack_configs,
+                             concat_configs, take_config,
                              enumerate_space, iter_space_chunks, space_points,
                              space_size, subsample_indices, joint_space_size,
                              joint_space_points, iter_joint_space_chunks,
                              DEFAULT_SPACE, PE_TYPE_NAMES, PE_TYPE_CODES)
 from repro.core.constraints import (Budget, BudgetStats, Constraint,
+                                    CONFIG_STAGE_COLUMNS,
                                     apply_budget, mask_result)
+from repro.core.costmodel import (COST_MODELS, CostModel, OracleCostModel,
+                                  SurrogateCostModel, as_cost_model,
+                                  cost_model, register_cost_model)
 from repro.core.coexplore import (COEXPLORE_METRICS, CoexploreFront,
-                                  ModelEntry, coexplore_front,
+                                  JointDesignPoint, ModelEntry,
+                                  coexplore_front,
                                   coexplore_report, default_model_set,
                                   lightpe_claim, model_entry)
-from repro.core.dse import (evaluate_chunk, evaluate_space,
+from repro.core.dse import (TwoStagePruner, evaluate_chunk, evaluate_space,
                             evaluate_space_streaming,
                             pareto_front, pareto_front_streaming,
                             pareto_mask, pareto_mask_dense, pareto_mask_tiled,
                             pareto_mask_2d, ParetoArchive,
                             normalized_report, report_pe_types, spread,
-                            trace_count, reset_trace_count,
+                            trace_count, ppa_trace_count, reset_trace_count,
                             DseResult, RESULT_DTYPES, DEFAULT_CHUNK_SIZE)
-from repro.core.ppa import fit_ppa_models, PPAModels, r2, mape
-from repro.core.synth import synthesize, SynthResult
+from repro.core.ppa import (fit_ppa_models, surrogate_ppa, PPAModels, r2,
+                            mape)
+from repro.core.synth import synthesize, oracle_ppa, SynthResult
 from repro.core.workloads import (Workload, LayerSpec, StackedWorkload,
                                   PAPER_WORKLOADS, MODEL_FAMILIES,
                                   transformer_workload, transformer_gemm,
@@ -48,21 +59,28 @@ from repro.core.workloads import (Workload, LayerSpec, StackedWorkload,
                                   pad_workload, layer_bucket, stack_workloads)
 
 __all__ = [
-    "AcceleratorConfig", "make_config", "stack_configs", "enumerate_space",
+    "AcceleratorConfig", "make_config", "stack_configs", "concat_configs",
+    "take_config", "enumerate_space",
     "iter_space_chunks", "space_points", "space_size", "subsample_indices",
     "joint_space_size", "joint_space_points", "iter_joint_space_chunks",
     "DEFAULT_SPACE", "PE_TYPE_NAMES", "PE_TYPE_CODES",
-    "Budget", "BudgetStats", "Constraint", "apply_budget", "mask_result",
+    "Budget", "BudgetStats", "Constraint", "CONFIG_STAGE_COLUMNS",
+    "apply_budget", "mask_result",
+    "COST_MODELS", "CostModel", "OracleCostModel", "SurrogateCostModel",
+    "as_cost_model", "cost_model", "register_cost_model",
     "AccuracySurrogate", "capacity_scale", "seeded_base_accuracy",
-    "COEXPLORE_METRICS", "CoexploreFront", "ModelEntry", "coexplore_front",
+    "COEXPLORE_METRICS", "CoexploreFront", "JointDesignPoint", "ModelEntry",
+    "coexplore_front",
     "coexplore_report", "default_model_set", "lightpe_claim", "model_entry",
-    "evaluate_chunk", "evaluate_space", "evaluate_space_streaming",
+    "TwoStagePruner", "evaluate_chunk", "evaluate_space",
+    "evaluate_space_streaming",
     "pareto_front", "pareto_front_streaming",
     "pareto_mask", "pareto_mask_dense", "pareto_mask_tiled", "pareto_mask_2d",
     "ParetoArchive", "normalized_report", "report_pe_types", "spread",
-    "trace_count", "reset_trace_count",
+    "trace_count", "ppa_trace_count", "reset_trace_count",
     "DseResult", "RESULT_DTYPES", "DEFAULT_CHUNK_SIZE",
-    "fit_ppa_models", "PPAModels", "r2", "mape", "synthesize", "SynthResult",
+    "fit_ppa_models", "surrogate_ppa", "PPAModels", "r2", "mape",
+    "synthesize", "oracle_ppa", "SynthResult",
     "Workload", "LayerSpec", "StackedWorkload", "PAPER_WORKLOADS",
     "MODEL_FAMILIES", "transformer_workload", "transformer_gemm", "vgg16",
     "resnet_cifar", "resnet34", "resnet50", "workload_macs",

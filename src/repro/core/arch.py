@@ -83,6 +83,24 @@ def stack_configs(configs: Sequence[AcceleratorConfig]) -> AcceleratorConfig:
                                for f in AcceleratorConfig._fields])
 
 
+def concat_configs(configs: Sequence[AcceleratorConfig]) -> AcceleratorConfig:
+    """Concatenate batched configs along the lane axis, on HOST numpy.
+
+    The survivor-buffer primitive of the two-stage pruned walk: fragments
+    of config chunks accumulate on host (field dtypes preserved — float32
+    knobs, int32 pe_type) until they fill a full compiled chunk shape.
+    """
+    return AcceleratorConfig(*[
+        np.concatenate([np.asarray(getattr(c, f)) for c in configs])
+        for f in AcceleratorConfig._fields])
+
+
+def take_config(cfg: AcceleratorConfig, rows) -> AcceleratorConfig:
+    """Row-select a batched config (boolean mask or index array), HOST
+    numpy — dtype-preserving, like ``concat_configs``."""
+    return AcceleratorConfig(*[np.asarray(f)[rows] for f in cfg])
+
+
 # ---------------------------------------------------------------------------
 # The paper's design space (Sec. III-C): the grid swept for PPA model fitting
 # and for the DSE case studies.

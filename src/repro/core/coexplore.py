@@ -56,7 +56,9 @@ from repro.core.arch import (AcceleratorConfig, PE_TYPE_NAMES, config_rows,
                              iter_joint_space_chunks, joint_space_points,
                              joint_space_size)
 from repro.core.constraints import Budget, BudgetStats
-from repro.core.dse import DEFAULT_CHUNK_SIZE, ParetoArchive, evaluate_chunk
+from repro.core.costmodel import CostModel, as_cost_model
+from repro.core.dse import (DEFAULT_CHUNK_SIZE, ParetoArchive, TwoStagePruner,
+                            evaluate_chunk)
 from repro.core.ppa import PPAModels
 from repro.core.workloads import (Workload, layer_bucket, resnet_cifar,
                                   stack_workloads, transformer_gemm, vgg16,
@@ -90,7 +92,15 @@ def model_entry(workload: Workload,
 
 def default_model_set(batch: int = 1) -> tuple[ModelEntry, ...]:
     """The canonical >= 8-model axis: paper CNNs, depth/width/resolution
-    scaled family members, and seq-length-scaled transformer GEMMs."""
+    scaled family members (including an ImageNet-scale 224-resolution
+    ResNet), and seq-length-scaled transformer GEMMs.
+
+    Growing this axis is compile-free by construction: a new member lands
+    in an existing layer-count bucket (the 224-resolution ResNet has the
+    same depth as its CIFAR sibling, bucket 32), so it costs lanes in an
+    already-compiled evaluator, not an XLA compilation — the default zoo
+    still collapses to the {16, 32, 64} bucket set.
+    """
     tfm = dict(d_model=256, n_layers=6, n_heads=8, d_ff=1024, vocab=8192,
                batch=batch)
     return tuple(model_entry(wl) for wl in (
@@ -99,11 +109,21 @@ def default_model_set(batch: int = 1) -> tuple[ModelEntry, ...]:
         resnet_cifar(56, batch=batch),
         resnet_cifar(20, batch=batch, width_mult=2.0),
         resnet_cifar(20, batch=batch, resolution=16),
+        resnet_cifar(20, batch=batch, resolution=224),
         vgg16("cifar10", batch=batch),
         vgg16("cifar10", batch=batch, width_mult=0.5),
         transformer_gemm(seq=256, **tfm),
         transformer_gemm(seq=1024, **tfm),
     ))
+
+
+class JointDesignPoint(NamedTuple):
+    """One decoded front member of a joint sweep: the named (model, PE,
+    config) triple — ``config`` maps every ``AcceleratorConfig`` field to
+    a python scalar."""
+    model: str
+    pe_type: str
+    config: dict
 
 
 class CoexploreFront(NamedTuple):
@@ -118,6 +138,23 @@ class CoexploreFront(NamedTuple):
     buckets: tuple = ()            # (padded depth, model names) per group
     budget: Budget | None = None   # the deployment budget, if constrained
     budget_stats: BudgetStats | None = None  # kill counts / feasible share
+
+    def decoded_front(self) -> tuple[JointDesignPoint, ...]:
+        """The archive decoded to named ``(model, PE, config)`` points —
+        the joint equivalent of ``pareto_front_streaming``'s decoded-
+        config return.  Index-aligned with ``archive.indices`` /
+        ``archive.objectives``, so ``zip(front.decoded_front(),
+        front.archive.objectives)`` pairs every named design point with
+        its objective row without going through ``coexplore_report``.
+        """
+        mids, cfgs = joint_space_points(self.archive.indices, self.space,
+                                        num_models=len(self.models))
+        return tuple(
+            JointDesignPoint(model=self.models[int(m)].name,
+                             pe_type=row["pe_type_name"],
+                             config={k: row[k]
+                                     for k in AcceleratorConfig._fields})
+            for m, row in zip(mids, config_rows(cfgs)))
 
 
 def _joint_objectives(res, lane_acc: np.ndarray) -> np.ndarray:
@@ -157,14 +194,15 @@ def _update_per_model_best(best: dict, models: tuple, acc_matrix: np.ndarray,
 def coexplore_front(
         models: Sequence[ModelEntry],
         space: dict | None = None,
-        surrogate: PPAModels | None = None,
+        surrogate: PPAModels | CostModel | str | None = None,
         accuracy: AccuracySurrogate | None = None,
         chunk_size: int = DEFAULT_CHUNK_SIZE,
         max_points: int | None = None,
         seed: int = 0,
         mix_models: bool = True,
         layer_buckets: Sequence[int] | None = None,
-        budget: Budget | None = None) -> CoexploreFront:
+        budget: Budget | None = None,
+        prune: bool = True) -> CoexploreFront:
     """Stream the joint (model x accelerator) space into a 3-objective
     non-dominated archive.
 
@@ -197,11 +235,22 @@ def coexplore_front(
     and the feasible fraction land in the returned ``budget_stats`` (and
     in ``coexplore_report``).  Note ``lightpe_claim`` then compares
     best-of-FEASIBLE aggregates — the claim under deployment limits.
+
+    Budgets with CONFIG-stage bounds run TWO-STAGE by default (``prune``,
+    ``dse.TwoStagePruner``): chip area comes from the batched PPA stage
+    and the per-lane accuracy from the (model, PE-type) gather, so both
+    bounds kill lanes BEFORE the per-layer dataflow fold; survivors are
+    re-packed into full chunks for the expensive stage.  The resulting
+    front, aggregates, evaluated counts and config-stage kills are
+    bit-identical to the single-stage path (``prune=False``) in both walk
+    modes; ``budget_stats.pruned`` reports the lanes that never paid for
+    a dataflow fold.
     """
     models = tuple(models)
     if not models:
         raise ValueError("need at least one ModelEntry on the model axis")
     accuracy = AccuracySurrogate() if accuracy is None else accuracy
+    cost_model = as_cost_model(surrogate)
     # (M, n_pe_types) accuracy constants: the per-lane accuracy objective
     # is the gather acc_matrix[model_id, pe_code] (capacity-scaled,
     # calibration-aware)
@@ -211,6 +260,10 @@ def coexplore_front(
     archive = ParetoArchive(len(COEXPLORE_METRICS))
     per_model_best: dict[tuple[str, str], dict] = {}
     stats = BudgetStats() if budget is not None else None
+    engage = (budget is not None and prune
+              and bool(budget.config_constraints()))
+    pruner = TwoStagePruner(budget, chunk_size, cost_model, stats) \
+        if engage else None
     total = 0
 
     def _fold_chunk(res, idx, mids, codes):
@@ -236,6 +289,32 @@ def coexplore_front(
         _update_per_model_best(per_model_best, models, acc_matrix,
                                mids, codes, obj)
 
+    def _fold_flush(res, idx, aux):
+        """One fully-feasible two-stage flush -> archive + aggregates."""
+        obj = _joint_objectives(res, aux["accuracy"])
+        archive.update(obj, idx)
+        _update_per_model_best(per_model_best, models, acc_matrix,
+                               aux["mids"], aux["codes"], obj)
+
+    def _feed(cfg, idx, workload, mids, codes, model_ids=None):
+        """Route one raw chunk through the engaged walk (pruned or not)."""
+        nonlocal total
+        if not engage:
+            res = evaluate_chunk(cfg, workload, cost_model,
+                                 pad_to=chunk_size, model_ids=model_ids)
+            _fold_chunk(res, idx, mids, codes)
+            return
+        total += len(idx)
+        aux = dict(accuracy=acc_matrix[mids, codes], mids=mids, codes=codes)
+        for out in pruner.feed(cfg, idx, workload, model_ids=model_ids,
+                               aux=aux):
+            _fold_flush(*out)
+
+    def _finish_walk():
+        if engage:
+            for out in pruner.finish():
+                _fold_flush(*out)
+
     if mix_models:
         # group the model axis into layer-count buckets: each group gets
         # one stacked (M_b, L_b) workload == one compiled evaluator
@@ -256,11 +335,10 @@ def coexplore_front(
         for mids, cfg, idx in iter_joint_space_chunks(
                 space, num_models=len(models), chunk_size=chunk_size,
                 max_points=max_points, seed=seed, model_groups=group_ids):
-            res = evaluate_chunk(cfg, stacked[bucket_of[int(mids[0])]],
-                                 surrogate, pad_to=chunk_size,
-                                 model_ids=local[mids])
-            _fold_chunk(res, idx, mids,
-                        np.asarray(cfg.pe_type).astype(np.int64))
+            _feed(cfg, idx, stacked[bucket_of[int(mids[0])]], mids,
+                  np.asarray(cfg.pe_type).astype(np.int64),
+                  model_ids=local[mids])
+        _finish_walk()
         return CoexploreFront(archive=archive, models=models, space=space,
                               metrics=COEXPLORE_METRICS,
                               per_model_best=per_model_best,
@@ -269,10 +347,10 @@ def coexplore_front(
     for m, cfg, idx in iter_joint_space_chunks(
             space, num_models=len(models), chunk_size=chunk_size,
             max_points=max_points, seed=seed, group_by_model=True):
-        res = evaluate_chunk(cfg, models[m].workload, surrogate,
-                             pad_to=chunk_size)
         codes = np.asarray(cfg.pe_type).astype(np.int64)
-        _fold_chunk(res, idx, np.full(len(codes), m, np.int64), codes)
+        _feed(cfg, idx, models[m].workload,
+              np.full(len(codes), m, np.int64), codes)
+    _finish_walk()
     return CoexploreFront(archive=archive, models=models, space=space,
                           metrics=COEXPLORE_METRICS,
                           per_model_best=per_model_best,
@@ -341,22 +419,25 @@ def coexplore_report(front: CoexploreFront) -> dict:
     name, decoded config fields, the three objectives), ``front_counts``
     (per model / per PE-type membership), and ``claim`` (``lightpe_claim``).
     A constrained sweep additionally gets a ``"budget"`` section: the
-    active bounds, evaluated/feasible counts, the feasible fraction, and
-    per-constraint kill counts (independent counts — a lane violating two
-    bounds is killed by both).
+    active bounds, evaluated/feasible counts, the feasible fraction, the
+    ``pruned`` lane count, and per-constraint kill counts.  Kill counts
+    are independent per constraint (a lane violating two bounds is
+    killed by both) — but under the default two-stage walk the
+    WORKLOAD-stage bounds are only checked against config-feasible
+    survivors, so their counts are not comparable to a ``prune=False``
+    (or pre-PR 5) run's; config-stage counts always match post-hoc
+    filtering exactly.
     """
-    mids, cfgs = joint_space_points(front.archive.indices, front.space,
-                                    num_models=len(front.models))
     points = []
-    for i, row in enumerate(config_rows(cfgs)):
+    for i, p in enumerate(front.decoded_front()):
         acc, mps, neg_e = front.archive.objectives[i]
         points.append(dict(
-            model=front.models[int(mids[i])].name,
-            pe_type=row["pe_type_name"],
+            model=p.model,
+            pe_type=p.pe_type,
             accuracy=float(acc),
             macs_per_s_per_mm2=float(mps),
             energy_per_mac_pj=float(-neg_e),
-            config={k: row[k] for k in AcceleratorConfig._fields},
+            config=p.config,
             joint_index=int(front.archive.indices[i]),
         ))
     by_model: dict[str, int] = {}

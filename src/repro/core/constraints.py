@@ -32,6 +32,15 @@ row-wise and elementwise, so it commutes with the archive's exact
 reduction).  ``tests/test_constraints.py`` property-tests this on both
 the mixed and per-model joint walks.
 
+Bounds additionally carry a **stage** classification
+(``Constraint.stage``): ``"config"`` bounds (chip area; the joint walk's
+accuracy) are decidable from the evaluator's config-only PPA stage
+alone, so the streaming walks kill their violators BEFORE running the
+per-layer dataflow fold (``dse.TwoStagePruner``) — same front, same
+config-stage kill counts, a fraction of the evaluation cost under tight
+budgets.  ``"workload"`` bounds (latency, energy, average power,
+utilization) are applied to the survivors after the dataflow stage.
+
 The module is dependency-light (numpy only) so ``dse``/``coexplore`` can
 import it without cycles; ``DseResult`` is duck-typed via ``getattr``.
 """
@@ -49,13 +58,28 @@ class Constraint(NamedTuple):
 
     ``kind`` is ``"max"`` (feasible iff value <= bound) or ``"min"``
     (feasible iff value >= bound).  ``name`` is the human-readable form
-    used as the key of kill counts (e.g. ``"area_mm2<=12"``).
+    used as the key of kill counts (e.g. ``"area_mm2<=12"``).  ``stage``
+    classifies WHEN the bound is decidable: ``"config"`` bounds read
+    columns that are a pure function of the design config (and, on joint
+    walks, the (model, PE-type) pair) — exactly what the evaluator's
+    batched PPA stage produces — so a two-stage walk can kill their
+    violators BEFORE paying for the per-layer dataflow fold.
+    ``"workload"`` bounds need the full evaluation.
     """
     name: str
     column: str
     kind: str
     bound: float
+    stage: str = "workload"
 
+
+# Result columns decidable from the config-only PPA stage: chip area is
+# the synthesized/predicted area verbatim, and the joint walk's accuracy
+# objective is a (model, PE-type) gather — neither touches the dataflow
+# walk.  Average power/latency/energy/utilization are workload-dependent
+# (the result's power_mw is chip energy over runtime, NOT the PPA
+# stage's nominal-activity power).
+CONFIG_STAGE_COLUMNS = frozenset({"area_mm2", "accuracy"})
 
 # Budget field -> (result column it reads, bound direction).  "accuracy"
 # is not a DseResult column: it is the per-lane accuracy objective of the
@@ -114,8 +138,19 @@ class Budget:
             v = getattr(self, fname)
             if v is not None:
                 op = "<=" if kind == "max" else ">="
-                out.append(Constraint(f"{column}{op}{v:g}", column, kind, v))
+                stage = ("config" if column in CONFIG_STAGE_COLUMNS
+                         else "workload")
+                out.append(Constraint(f"{column}{op}{v:g}", column, kind, v,
+                                      stage))
         return tuple(out)
+
+    def config_constraints(self) -> tuple[Constraint, ...]:
+        """Active bounds decidable from the config-only PPA stage."""
+        return tuple(c for c in self.constraints() if c.stage == "config")
+
+    def workload_constraints(self) -> tuple[Constraint, ...]:
+        """Active bounds that need the full workload evaluation."""
+        return tuple(c for c in self.constraints() if c.stage == "workload")
 
     @property
     def active(self) -> bool:
@@ -128,8 +163,16 @@ class Budget:
         return {f.name: getattr(self, f.name) for f in _dc_fields(self)
                 if getattr(self, f.name) is not None}
 
+    @staticmethod
+    def _raise_needs_joint_walk():
+        raise ValueError(
+            "Budget.min_accuracy needs the joint co-exploration "
+            "walk (coexplore_front) — a plain DSE result has no "
+            "accuracy column")
+
     def feasibility(self, result,
-                    accuracy: np.ndarray | None = None
+                    accuracy: np.ndarray | None = None,
+                    constraints: tuple[Constraint, ...] | None = None,
                     ) -> tuple[np.ndarray, dict[str, int]]:
         """Per-lane feasibility mask of one evaluated chunk + kill counts.
 
@@ -138,22 +181,45 @@ class Budget:
         a joint walk; a ``min_accuracy`` bound without it is an error —
         the plain accelerator-only DSE has no accuracy axis to constrain.
 
+        ``constraints`` restricts the check to a subset of the active
+        bounds (default: all of them) — how the two-stage walk applies
+        the config-stage bounds against the PPA-stage columns alone and
+        the workload-stage bounds against the surviving full evaluation
+        (``result`` then only needs the columns those constraints read).
+
         Returns ``(mask, kills)``: ``mask[i]`` is True iff lane *i*
-        satisfies every active bound; ``kills[name]`` counts the lanes
-        each constraint rejects, counted INDEPENDENTLY (a lane violating
-        two bounds appears in both counts, so kills can sum past the
-        number of infeasible lanes).
+        satisfies every checked bound; ``kills[name]`` counts the lanes
+        each constraint rejects, counted INDEPENDENTLY over the lanes in
+        ``result`` (a lane violating two bounds appears in both counts,
+        so kills can sum past the number of infeasible lanes).  Note the
+        two-stage walk calls this twice — config bounds over every raw
+        lane, workload bounds over the config-feasible survivors only —
+        so a pruned walk's workload-stage kill counts are smaller than a
+        single-stage walk's whenever the stages' violators overlap.
         """
-        n = int(np.shape(np.asarray(result.latency_s))[0])
+        cons = self.constraints() if constraints is None else constraints
+        n = None
+        for c in cons:  # lane count from the first column a bound reads
+            v = accuracy if c.column == "accuracy" \
+                else getattr(result, c.column, None)
+            if v is not None:
+                n = int(np.shape(np.asarray(v))[0])
+                break
+        if n is None:
+            # no checked bound had a readable column: surface the
+            # accuracy-needs-joint-walk error before poking around for a
+            # lane count (a stage-1 PPA view has no latency column, and
+            # an AttributeError here would bury the real problem)
+            for c in cons:
+                if c.column == "accuracy" and accuracy is None:
+                    self._raise_needs_joint_walk()
+            n = int(np.shape(np.asarray(result.latency_s))[0])
         mask = np.ones(n, bool)
         kills: dict[str, int] = {}
-        for c in self.constraints():
+        for c in cons:
             if c.column == "accuracy":
                 if accuracy is None:
-                    raise ValueError(
-                        "Budget.min_accuracy needs the joint co-exploration "
-                        "walk (coexplore_front) — a plain DSE result has no "
-                        "accuracy column")
+                    self._raise_needs_joint_walk()
                 vals = np.asarray(accuracy, np.float64)
             else:
                 vals = np.asarray(getattr(result, c.column), np.float64)
@@ -183,15 +249,41 @@ class BudgetStats:
     actually visited, not the full space), ``feasible`` the lanes that
     survived every bound, ``kills`` the per-constraint rejection counts
     (independent counts; see ``Budget.feasibility``).
+
+    ``pruned`` counts the lanes a TWO-STAGE walk killed at the
+    config-only PPA stage — lanes whose per-layer dataflow fold was never
+    paid for.  Single-stage walks leave it 0.  Note two-stage kill
+    accounting: config-stage kills are counted over every evaluated lane
+    (identical to post-hoc filtering), while workload-stage kills are
+    counted over the config-feasible survivors only — a lane pruned at
+    stage 1 never gets workload columns to count against.
     """
     evaluated: int = 0
     feasible: int = 0
+    pruned: int = 0
     kills: dict[str, int] = field(default_factory=dict)
 
     def record(self, mask: np.ndarray, kills: dict[str, int]) -> None:
-        """Fold one chunk's feasibility outcome into the totals."""
-        self.evaluated += int(len(mask))
-        self.feasible += int(np.count_nonzero(mask))
+        """Fold one chunk's (single-stage) feasibility outcome."""
+        self.record_evaluated(int(len(mask)), kills)
+        self.record_feasible(int(np.count_nonzero(mask)))
+
+    def record_evaluated(self, n: int, kills: dict[str, int]) -> None:
+        """Count ``n`` visited lanes plus one stage's kill counts (the
+        stage-1 half of two-stage accounting)."""
+        self.evaluated += int(n)
+        self.merge_kills(kills)
+
+    def record_feasible(self, n: int) -> None:
+        """Count ``n`` lanes that survived every checked bound."""
+        self.feasible += int(n)
+
+    def record_pruned(self, n: int) -> None:
+        """Count ``n`` lanes killed before the dataflow stage."""
+        self.pruned += int(n)
+
+    def merge_kills(self, kills: dict[str, int]) -> None:
+        """Accumulate per-constraint kill counts (no lane accounting)."""
         for name, n in kills.items():
             self.kills[name] = self.kills.get(name, 0) + int(n)
 
@@ -204,7 +296,7 @@ class BudgetStats:
         """JSON-friendly summary (what coexplore_report embeds)."""
         return dict(evaluated=self.evaluated, feasible=self.feasible,
                     feasible_fraction=self.feasible_fraction,
-                    kills=dict(self.kills))
+                    pruned=self.pruned, kills=dict(self.kills))
 
 
 def mask_result(result, mask: np.ndarray):

@@ -1,0 +1,187 @@
+"""Pluggable batched cost-model backends for the DSE evaluator.
+
+The evaluator pipeline in ``dse.py`` is two jitted stages: a **PPA
+stage** mapping a config chunk to per-lane (power, clock, area), and a
+**dataflow stage** folding the per-layer row-stationary walk at the
+clock the PPA stage produced.  This module is the contract for the first
+stage: a ``CostModel`` names a pure, jit-safe, array-first function
+
+    ppa_fn(params, config_chunk) -> (power_mw, clock_ghz, area_mm2)
+
+plus the pytree of fitted state it consumes and a host-side ``validate``
+hook that runs before any chunk is evaluated.  Keeping the function
+static and the parameters a pytree *argument* means one XLA compilation
+per chunk shape — shared across backend instances with the same fitted
+structure — instead of the historical per-config / per-subset-shape
+dispatch of the host-numpy surrogate path.
+
+Two backends are registered:
+
+* ``"oracle"`` — the analytical synthesis oracle (``synth.synthesize``),
+  parameter-free; the stand-in for the paper's Synopsys DC flow.
+* ``"surrogate"`` — the fitted polynomial PPA models (``ppa.PPAModels``),
+  the paper's Sec. III-C regression surrogate; needs ``models=``.
+
+``as_cost_model`` is the resolution shim every evaluator entry point
+uses: ``None`` means the oracle, a ``PPAModels`` wraps itself (cached on
+the instance), a string hits the registry, and a ``CostModel`` passes
+through — so the historical ``surrogate=`` keyword keeps working
+unchanged while new code can register and pass custom backends.
+
+Registering a new backend::
+
+    @register_cost_model("my-backend")
+    def _make(**kwargs):
+        return MyCostModel(**kwargs)        # any CostModel subclass
+
+    evaluate_space(cfg, wl, surrogate=cost_model("my-backend"))
+
+Leakage is NOT part of the protocol: every backend's leakage is derived
+inside the evaluator jit as ``synth.LEAKAGE_MW_PER_MM2 * area_mm2`` —
+the shared-constant contract from PR 4 that keeps backends comparable.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+from repro.core.arch import AcceleratorConfig
+from repro.core.ppa import PPAModels, surrogate_ppa
+from repro.core.synth import oracle_ppa
+
+
+class CostModel:
+    """One batched PPA backend: a static pure function + its parameters.
+
+    Subclasses set ``name`` and ``ppa_fn`` (a MODULE-LEVEL function —
+    its identity is the jit cache key) and provide ``ppa_params`` (the
+    pytree ``ppa_fn`` consumes; must be stable across chunks so device
+    uploads happen once).  ``validate`` runs on host before every chunk
+    and is the place to reject configs the backend cannot price.
+    """
+
+    name: str = "?"
+    #: pure jit-safe (params, config_chunk) -> (power_mw, clock_ghz,
+    #: area_mm2); static per backend class.
+    ppa_fn: Callable = None
+
+    @property
+    def ppa_params(self):
+        """Pytree of fitted state passed to ``ppa_fn`` (default: none)."""
+        return ()
+
+    def validate(self, cfg: AcceleratorConfig) -> None:
+        """Host-side pre-check of a chunk (raise to refuse it)."""
+
+    def __repr__(self) -> str:
+        return f"{type(self).__name__}(name={self.name!r})"
+
+
+class OracleCostModel(CostModel):
+    """The analytical synthesis oracle (``synth.synthesize``) as a
+    backend: parameter-free, always valid, one fused elementwise
+    computation per chunk."""
+
+    name = "oracle"
+    ppa_fn = staticmethod(oracle_ppa)
+
+
+class SurrogateCostModel(CostModel):
+    """The fitted polynomial PPA models (``ppa.PPAModels``) as a backend.
+
+    The design-matrix evaluation vmaps over chunk lanes inside the
+    evaluator jit (``ppa.surrogate_ppa``); ``validate`` rejects chunks
+    containing PE types the fit does not cover — surfacing the PR 4
+    unfitted-type ``ValueError`` through ``evaluate_chunk`` instead of
+    silently pricing those lanes at zero.
+    """
+
+    name = "surrogate"
+    ppa_fn = staticmethod(surrogate_ppa)
+
+    def __init__(self, models: PPAModels):
+        if not isinstance(models, PPAModels):
+            raise TypeError(f"SurrogateCostModel needs a fitted PPAModels, "
+                            f"got {type(models).__name__}")
+        self.models = models
+        self._params = models.ppa_params()  # also rejects an unfitted model
+
+    @property
+    def ppa_params(self):
+        return self._params
+
+    def validate(self, cfg: AcceleratorConfig) -> None:
+        self.models.validate(cfg)
+
+
+# ---------------------------------------------------------------------------
+# Registry + resolution
+# ---------------------------------------------------------------------------
+
+COST_MODELS: Dict[str, Callable[..., CostModel]] = {}
+
+
+def register_cost_model(name: str, factory: Callable[..., CostModel] | None
+                        = None):
+    """Register a backend factory under ``name`` (usable as decorator).
+
+    The factory is called by ``cost_model(name, **kwargs)`` and must
+    return a ``CostModel``.  Re-registering a taken name is an error —
+    shadowing a backend silently would change every sweep that names it.
+    """
+    def _register(fn):
+        if name in COST_MODELS:
+            raise ValueError(f"cost model {name!r} is already registered")
+        COST_MODELS[name] = fn
+        return fn
+    return _register(factory) if factory is not None else _register
+
+
+def cost_model(name: str, **kwargs) -> CostModel:
+    """Instantiate a registered backend by name."""
+    if name not in COST_MODELS:
+        raise ValueError(f"unknown cost model {name!r}; registered: "
+                         f"{sorted(COST_MODELS)}")
+    return COST_MODELS[name](**kwargs)
+
+
+register_cost_model("oracle", OracleCostModel)
+
+
+@register_cost_model("surrogate")
+def _make_surrogate(models: PPAModels | None = None) -> SurrogateCostModel:
+    if models is None:
+        raise ValueError(
+            "cost_model('surrogate') needs the fitted polynomial models: "
+            "pass models=fit_ppa_models(...) (the backend has no default "
+            "fit — the paper fits against a synthesized design sample)")
+    return SurrogateCostModel(models)
+
+
+_ORACLE = OracleCostModel()
+
+
+def as_cost_model(spec) -> CostModel:
+    """Resolve an evaluator ``surrogate=`` spec to a ``CostModel``.
+
+    ``None`` -> the shared oracle; ``CostModel`` -> itself; ``PPAModels``
+    -> a ``SurrogateCostModel`` cached ON the models instance (so
+    per-chunk resolution never rebuilds the coefficient pytree); ``str``
+    -> the registry (only works for backends needing no arguments).
+    """
+    if spec is None:
+        return _ORACLE
+    if isinstance(spec, CostModel):
+        return spec
+    if isinstance(spec, PPAModels):
+        cached = getattr(spec, "_cost_model", None)
+        if cached is None or cached.models is not spec:
+            cached = SurrogateCostModel(spec)
+            spec._cost_model = cached
+        return cached
+    if isinstance(spec, str):
+        return cost_model(spec)
+    raise TypeError(
+        f"cannot resolve a cost model from {type(spec).__name__}: pass "
+        f"None (oracle), a fitted PPAModels, a CostModel, or a registered "
+        f"backend name")

@@ -26,6 +26,7 @@ paper's validation story.
 
 from __future__ import annotations
 
+from functools import partial
 from typing import Iterator, NamedTuple, Sequence
 
 import jax
@@ -33,11 +34,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.arch import (AcceleratorConfig, PE_INT16, PE_TYPE_NAMES,
-                             iter_space_chunks, space_points)
-from repro.core.constraints import Budget, BudgetStats, apply_budget
+                             concat_configs, iter_space_chunks, space_points,
+                             take_config)
+from repro.core.constraints import (Budget, BudgetStats, apply_budget,
+                                    mask_result)
+from repro.core.costmodel import CostModel, as_cost_model
 from repro.core.dataflow import layer_cost, reduce_layer_costs
 from repro.core.ppa import PPAModels
-from repro.core.synth import synthesize
+from repro.core.synth import LEAKAGE_MW_PER_MM2
 from repro.core.workloads import StackedWorkload, Workload
 
 # Default number of design points evaluated per jit call in the streaming
@@ -80,23 +84,41 @@ class DseResult(NamedTuple):
 # Number of times the jitted evaluators have been TRACED (== compiled for a
 # new shape).  Benchmarks read deltas of this to report n_compiles — the
 # compile-amortization story of bucketed one-compile sweeps.
+# ``trace_count`` covers the dataflow-stage evaluators (one per layer
+# bucket x chunk shape — the expensive compilations); ``ppa_trace_count``
+# covers the batched PPA stage (one per backend structure x chunk shape,
+# shared by every walk — the counter that proves the surrogate path no
+# longer re-dispatches per config subset).
 _TRACE_COUNT = 0
+_PPA_TRACE_COUNT = 0
 
 
 def trace_count() -> int:
-    """Cumulative evaluator trace/compile count for this process."""
+    """Cumulative dataflow-evaluator trace/compile count for this process."""
     return _TRACE_COUNT
 
 
+def ppa_trace_count() -> int:
+    """Cumulative PPA-stage (cost-model backend) trace/compile count."""
+    return _PPA_TRACE_COUNT
+
+
 def reset_trace_count() -> None:
-    global _TRACE_COUNT
+    """Zero BOTH compile counters (benchmarks bracket sweeps with this)."""
+    global _TRACE_COUNT, _PPA_TRACE_COUNT
     _TRACE_COUNT = 0
+    _PPA_TRACE_COUNT = 0
 
 
 def _count_trace() -> None:
     # Python side effect inside a jitted function: runs once per trace.
     global _TRACE_COUNT
     _TRACE_COUNT += 1
+
+
+def _count_ppa_trace() -> None:
+    global _PPA_TRACE_COUNT
+    _PPA_TRACE_COUNT += 1
 
 
 @jax.jit
@@ -160,24 +182,39 @@ def _finish(cost, clock_ghz, area_mm2, leak_mw) -> DseResult:
         utilization=util, macs=macs)
 
 
-# One shape-keyed executable for the synthesis oracle, shared by every
-# evaluation path: avoids ~100 eager op dispatches per chunk AND pins the
-# clock/area/leakage bits to a single compiled graph, so mixed-model and
-# per-model walks can never diverge through the synthesis side.
-_synthesize_jit = jax.jit(synthesize)
+# The PPA stage: ONE shape-keyed executable per (backend function,
+# parameter structure, chunk shape), shared by every evaluation path —
+# single-stage chunks, two-stage pruning, and both walk modes all read
+# clock/area/leakage from the same compiled graph, so no pair of walks
+# can diverge through the cost-model side.  The backend function is a
+# static module-level callable (``CostModel.ppa_fn``) and the fitted
+# state is a pytree ARGUMENT, so e.g. two surrogate fits with the same
+# selected degrees reuse one executable.  Leakage is derived here, inside
+# the jit, from the shared 45 nm density constant — the one-leakage-model
+# contract of PR 4.
+@partial(jax.jit, static_argnums=0)
+def _ppa_stage(ppa_fn, params, cfg: AcceleratorConfig):
+    _count_ppa_trace()
+    power_mw, clock_ghz, area_mm2 = ppa_fn(params, cfg)
+    return power_mw, clock_ghz, area_mm2, LEAKAGE_MW_PER_MM2 * area_mm2
+
+
+def _network_stage(cfg: AcceleratorConfig, clock_ghz,
+                   workload: Workload | StackedWorkload, model_ids=None):
+    """Dispatch the dataflow fold (the compiled per-bucket evaluator)."""
+    if model_ids is not None:
+        return _network_sums_mixed(cfg, clock_ghz, workload.layers, model_ids)
+    return _network_sums(cfg, clock_ghz, workload.layers)
 
 
 def _evaluate_batch(cfg: AcceleratorConfig, workload: Workload,
-                    surrogate: PPAModels | None,
+                    model: CostModel,
                     model_ids: jnp.ndarray | None = None) -> DseResult:
-    synth = (_synthesize_jit(cfg) if surrogate is None
-             else surrogate.predict(cfg))
-    if model_ids is not None:
-        cost = _network_sums_mixed(cfg, synth.clock_ghz, workload.layers,
-                                   model_ids)
-    else:
-        cost = _network_sums(cfg, synth.clock_ghz, workload.layers)
-    return _finish(cost, synth.clock_ghz, synth.area_mm2, synth.leakage_mw)
+    power, clock, area, leak = _ppa_stage(model.ppa_fn, model.ppa_params, cfg)
+    del power  # nominal-activity power; the result's power column is
+    #            derived from chip energy over runtime in _finish
+    cost = _network_stage(cfg, clock, workload, model_ids)
+    return _finish(cost, clock, area, leak)
 
 
 def _pad_config(cfg: AcceleratorConfig, pad: int) -> AcceleratorConfig:
@@ -202,7 +239,7 @@ def _next_pow2(n: int) -> int:
 
 def evaluate_chunk(cfg: AcceleratorConfig,
                    workload: Workload | StackedWorkload,
-                   surrogate: PPAModels | None = None,
+                   surrogate: PPAModels | CostModel | str | None = None,
                    pad_to: int | None = None,
                    model_ids=None) -> DseResult:
     """Evaluate one pre-chunked batch at a fixed jit shape (host result).
@@ -212,6 +249,13 @@ def evaluate_chunk(cfg: AcceleratorConfig,
     trimmed from the result — so every chunk of a streaming walk hits the
     same compiled executable.  This is the shared building block of
     ``evaluate_space_streaming`` and the joint co-exploration evaluator.
+
+    ``surrogate`` selects the cost-model backend (``costmodel``):
+    ``None`` is the analytical synthesis oracle, a fitted ``PPAModels``
+    (or ``CostModel``/registered name) switches the batched PPA stage —
+    the backend's host-side ``validate`` runs on the UNPADDED chunk first,
+    so e.g. the surrogate's unfitted-PE-type ``ValueError`` surfaces here
+    before any compilation happens.
 
     Passing a ``StackedWorkload`` plus a per-lane ``model_ids`` vector
     (positions into the stack) evaluates a MIXED-model chunk: each lane
@@ -224,6 +268,8 @@ def evaluate_chunk(cfg: AcceleratorConfig,
     if stacked != (model_ids is not None):
         raise ValueError("model_ids must be given with a StackedWorkload "
                          "and only with one")
+    model = as_cost_model(surrogate)
+    model.validate(cfg)
     if np.ndim(cfg.pe_rows) == 0:  # single unbatched point: lift to (1,)
         cfg = AcceleratorConfig(*[jnp.reshape(f, (1,)) for f in cfg])
     n = int(np.shape(cfg.pe_rows)[0])
@@ -246,7 +292,7 @@ def evaluate_chunk(cfg: AcceleratorConfig,
         if mids is not None:  # padded lanes repeat the last (model, config)
             mids = np.concatenate([mids, np.broadcast_to(mids[-1:],
                                                          (pad_to - n,))])
-    res = _evaluate_batch(cfg, workload, surrogate,
+    res = _evaluate_batch(cfg, workload, model,
                           None if mids is None else jnp.asarray(mids))
     return DseResult(*[np.asarray(col[:n], RESULT_DTYPES[f])
                        for f, col in zip(DseResult._fields, res)])
@@ -258,8 +304,212 @@ def _empty_result() -> DseResult:
                        for f in DseResult._fields])
 
 
+class _PPAView(NamedTuple):
+    """The stage-1 columns a config-stage constraint can read (duck-typed
+    into ``Budget.feasibility``; accuracy is passed separately)."""
+    area_mm2: np.ndarray
+
+
+class TwoStagePruner:
+    """Config-only constraint pre-pruning for the streaming walks.
+
+    Stage 1 runs the batched PPA stage on every raw chunk (at the fixed
+    chunk shape — the same executable the single-stage walk uses),
+    applies the budget's CONFIG-stage bounds (chip area; per-lane
+    accuracy on joint walks) to the PPA columns, and buffers the
+    survivors on host: config fields, clock/area/leakage, global indices,
+    the stacked-model ids, and any caller-supplied per-lane ``aux``
+    arrays.  Whenever the buffer holds a full chunk of survivors, stage 2
+    folds the per-layer dataflow walk over exactly those lanes — again at
+    the SAME compiled chunk shape (the trailing partial flush pads by
+    repeating its last lane, like every streaming trailing chunk), with
+    the buffered stage-1 clock/area/leakage passed through instead of
+    recomputed.  Workload-stage bounds are then applied to each flush, so
+    yielded chunks contain only fully-feasible lanes.
+
+    Bit-identity contract: both stages reuse the single-stage walk's
+    executables and per-lane results are position-independent (the same
+    property that makes mixed-model chunks match the per-model walk), so
+    a surviving lane's columns are bit-identical to its single-stage
+    values — pruning only removes rows, exactly like post-hoc filtering,
+    and the downstream ``ParetoArchive`` reduction is order-invariant.
+    Under a tight config-only budget the dataflow stage — the expensive
+    one — runs only on the feasible fraction of the space.
+
+    Accounting (``BudgetStats``): every raw lane counts as evaluated and
+    config-stage kills are counted over all of them (identical to
+    post-hoc numbers); stage-1 casualties land in ``stats.pruned``;
+    workload-stage kills are counted over the surviving lanes only.
+    """
+
+    def __init__(self, budget: Budget, chunk_size: int,
+                 model: CostModel | PPAModels | str | None = None,
+                 stats: BudgetStats | None = None):
+        config_cons = budget.config_constraints()
+        if not config_cons:
+            raise ValueError("TwoStagePruner needs a budget with at least "
+                             "one config-stage bound (area_mm2 / "
+                             "min_accuracy) — a purely workload-bounded "
+                             "walk has nothing to prune early")
+        self.budget = budget
+        self.chunk_size = int(chunk_size)
+        self.model = as_cost_model(model)
+        self.stats = stats
+        self._config_cons = config_cons
+        self._workload_cons = budget.workload_constraints()
+        if stats is not None:
+            # stable kill keys even for a stage that never rejects a lane
+            stats.merge_kills({c.name: 0 for c in budget.constraints()})
+        self._workload = None           # current stage-2 fold target
+        self._model_ids_mode = None     # mixed vs plain, pinned per buffer
+        self._frags: list[dict] = []    # buffered survivor fragments
+        self._n = 0                     # buffered survivor count
+
+    def __len__(self) -> int:
+        """Currently buffered (config-feasible, not yet folded) lanes."""
+        return self._n
+
+    def feed(self, cfg: AcceleratorConfig, indices, workload,
+             model_ids=None, aux: dict | None = None):
+        """Stage-1 one raw chunk; yield any completed stage-2 flushes.
+
+        ``workload`` is the stage-2 fold target for these lanes; feeding
+        a DIFFERENT workload object first drains the buffer (survivors of
+        different folds can't share a flush).  ``model_ids`` are stacked
+        positions for mixed chunks (same contract as ``evaluate_chunk``).
+        ``aux`` maps names to per-lane host arrays that ride along with
+        the survivors and come back with each flush; ``aux["accuracy"]``
+        additionally binds a ``min_accuracy`` config-stage bound.
+        """
+        if isinstance(workload, StackedWorkload) != (model_ids is not None):
+            raise ValueError("model_ids must be given with a StackedWorkload "
+                             "and only with one")
+        if self._n and workload is not self._workload:
+            yield from self._drain()
+        self._workload = workload
+        self._model_ids_mode = model_ids is not None
+        idx = np.asarray(indices, np.int64)
+        n = len(idx)
+        if n == 0:
+            return
+        if n > self.chunk_size:
+            raise ValueError(f"chunk of {n} lanes exceeds the pruner's "
+                             f"compiled chunk shape ({self.chunk_size}) — "
+                             f"feed chunks at most chunk_size long")
+        self.model.validate(cfg)
+        cfg_p = _pad_config(cfg, self.chunk_size - n) \
+            if n < self.chunk_size else cfg
+        _, clock, area, leak = _ppa_stage(self.model.ppa_fn,
+                                          self.model.ppa_params, cfg_p)
+        clock = np.asarray(clock)[:n]
+        area = np.asarray(area)[:n]
+        leak = np.asarray(leak)[:n]
+        accuracy = None if aux is None else aux.get("accuracy")
+        mask, kills = self.budget.feasibility(
+            _PPAView(area_mm2=area), accuracy=accuracy,
+            constraints=self._config_cons)
+        kept = int(np.count_nonzero(mask))
+        if self.stats is not None:
+            self.stats.record_evaluated(n, kills)
+            self.stats.record_pruned(n - kept)
+            if not self._workload_cons:
+                self.stats.record_feasible(kept)
+        if kept == 0:
+            return
+        rows = slice(None) if kept == n else np.flatnonzero(mask)
+        frag = dict(cfg=take_config(cfg, rows), clock=clock[rows],
+                    area=area[rows], leak=leak[rows], idx=idx[rows])
+        if model_ids is not None:
+            frag["model_ids"] = np.asarray(model_ids, np.int32)[rows]
+        frag["aux"] = {} if aux is None else \
+            {k: np.asarray(v)[rows] for k, v in aux.items()}
+        self._frags.append(frag)
+        self._n += kept
+        while self._n >= self.chunk_size:
+            out = self._flush(self.chunk_size)
+            if out is not None:
+                yield out
+
+    def finish(self):
+        """Drain the final partial buffer (padded to the chunk shape)."""
+        yield from self._drain()
+
+    def _drain(self):
+        while self._n:
+            out = self._flush(min(self._n, self.chunk_size))
+            if out is not None:
+                yield out
+
+    def _merged(self) -> dict:
+        if len(self._frags) > 1:
+            cat = lambda key: np.concatenate(  # noqa: E731
+                [f[key] for f in self._frags])
+            merged = dict(cfg=concat_configs([f["cfg"] for f in self._frags]),
+                          clock=cat("clock"), area=cat("area"),
+                          leak=cat("leak"), idx=cat("idx"))
+            if self._model_ids_mode:
+                merged["model_ids"] = cat("model_ids")
+            merged["aux"] = {k: np.concatenate([f["aux"][k]
+                                                for f in self._frags])
+                             for k in self._frags[0]["aux"]}
+            self._frags = [merged]
+        return self._frags[0]
+
+    def _flush(self, count: int):
+        """Fold ``count`` buffered survivors through stage 2; returns the
+        feasible ``(result, indices, aux)`` or None if the workload-stage
+        bounds killed the whole flush."""
+        merged = self._merged()
+        head, tail = {}, {}
+        for k, v in merged.items():
+            if k == "cfg":
+                head[k] = take_config(v, slice(0, count))
+                tail[k] = take_config(v, slice(count, None))
+            elif k == "aux":
+                head[k] = {a: w[:count] for a, w in v.items()}
+                tail[k] = {a: w[count:] for a, w in v.items()}
+            else:
+                head[k], tail[k] = v[:count], v[count:]
+        self._frags = [tail] if self._n > count else []
+        self._n -= count
+        return self._stage2(head, count)
+
+    def _stage2(self, lanes: dict, n: int):
+        pad = self.chunk_size - n
+        cfg, clock = lanes["cfg"], lanes["clock"]
+        area, leak = lanes["area"], lanes["leak"]
+        mids = lanes.get("model_ids")
+        if pad:
+            rep = lambda v: np.concatenate(  # noqa: E731
+                [v, np.broadcast_to(v[-1:], (pad,) + v.shape[1:])])
+            cfg = _pad_config(cfg, pad)
+            clock, area, leak = rep(clock), rep(area), rep(leak)
+            mids = None if mids is None else rep(mids)
+        cost = _network_stage(cfg, jnp.asarray(clock), self._workload,
+                              None if mids is None else jnp.asarray(mids))
+        full = _finish(cost, clock, area, leak)
+        res = DseResult(*[np.asarray(col[:n], RESULT_DTYPES[f])
+                          for f, col in zip(DseResult._fields, full)])
+        idx, aux = lanes["idx"], lanes["aux"]
+        if self._workload_cons:
+            # workload-stage bounds never read "accuracy" (config-stage)
+            mask, kills = self.budget.feasibility(
+                res, constraints=self._workload_cons)
+            kept = int(np.count_nonzero(mask))
+            if self.stats is not None:
+                self.stats.merge_kills(kills)
+                self.stats.record_feasible(kept)
+            if kept == 0:
+                return None
+            if kept < n:
+                res = mask_result(res, mask)
+                idx = idx[mask]
+                aux = {k: v[mask] for k, v in aux.items()}
+        return res, idx, aux
+
+
 def evaluate_space(cfg: AcceleratorConfig, workload: Workload,
-                   surrogate: PPAModels | None = None,
+                   surrogate: PPAModels | CostModel | str | None = None,
                    chunk_size: int | None = None) -> DseResult:
     """Evaluate a batched design space on one workload.
 
@@ -298,12 +548,13 @@ def evaluate_space(cfg: AcceleratorConfig, workload: Workload,
 def evaluate_space_streaming(
         workload: Workload,
         space: dict | None = None,
-        surrogate: PPAModels | None = None,
+        surrogate: PPAModels | CostModel | str | None = None,
         chunk_size: int = DEFAULT_CHUNK_SIZE,
         max_points: int | None = None,
         seed: int = 0,
         budget: Budget | None = None,
         budget_stats: BudgetStats | None = None,
+        prune: bool = True,
 ) -> Iterator[tuple[DseResult, np.ndarray]]:
     """Lazily evaluate the cartesian design space chunk-by-chunk.
 
@@ -314,15 +565,35 @@ def evaluate_space_streaming(
 
     With a ``budget`` (``constraints.Budget``) set, each chunk's
     infeasible lanes are dropped on host BEFORE the chunk is yielded —
-    the compiled evaluator is untouched and a downstream archive only
+    the compiled evaluators are untouched and a downstream archive only
     ever sees feasible points (bit-identical to filtering the
     unconstrained walk post hoc).  Fully-infeasible chunks are skipped;
     pass a ``budget_stats`` (``constraints.BudgetStats``) to collect
     evaluated/feasible counts and per-constraint kills.
+
+    When the budget carries CONFIG-stage bounds (chip area) and ``prune``
+    is left on, the walk runs TWO-STAGE (``TwoStagePruner``): the batched
+    PPA stage prices every raw chunk, config-infeasible lanes die before
+    the per-layer dataflow fold, and the survivors are re-packed into
+    full chunks for the expensive stage — same feasible lanes, bit-
+    identical columns, but the dataflow fold only runs on the feasible
+    fraction.  Survivor re-packing means yielded chunk boundaries differ
+    from the single-stage walk's (the lane set and order do not).
+    ``prune=False`` forces the PR 4 single-stage post-evaluation masking.
     """
+    model = as_cost_model(surrogate)
+    if budget is not None and prune and budget.config_constraints():
+        pruner = TwoStagePruner(budget, chunk_size, model, budget_stats)
+        for cfg, idx in iter_space_chunks(space, chunk_size=chunk_size,
+                                          max_points=max_points, seed=seed):
+            for res, fidx, _aux in pruner.feed(cfg, idx, workload):
+                yield res, fidx
+        for res, fidx, _aux in pruner.finish():
+            yield res, fidx
+        return
     for cfg, idx in iter_space_chunks(space, chunk_size=chunk_size,
                                       max_points=max_points, seed=seed):
-        res = evaluate_chunk(cfg, workload, surrogate, pad_to=chunk_size)
+        res = evaluate_chunk(cfg, workload, model, pad_to=chunk_size)
         if budget is not None:
             res, idx = apply_budget(res, idx, budget, stats=budget_stats)
             if len(idx) == 0:
@@ -596,12 +867,13 @@ def pareto_front_streaming(
         workload: Workload,
         space: dict | None = None,
         metrics: tuple = ("perf_per_area", "neg_energy_j"),
-        surrogate: PPAModels | None = None,
+        surrogate: PPAModels | CostModel | str | None = None,
         chunk_size: int = DEFAULT_CHUNK_SIZE,
         max_points: int | None = None,
         seed: int = 0,
         budget: Budget | None = None,
         budget_stats: BudgetStats | None = None,
+        prune: bool = True,
 ) -> tuple[ParetoArchive, AcceleratorConfig]:
     """Pareto front of an arbitrarily large design space in O(chunk) memory.
 
@@ -613,13 +885,16 @@ def pareto_front_streaming(
     masked out per chunk before the archive sees them, so the result is
     the Pareto front OF THE FEASIBLE SUBSET (bit-identical, indices and
     objectives, to filtering an unconstrained walk post hoc and reducing
-    the survivors).  ``budget_stats`` collects kill telemetry.
+    the survivors).  ``budget_stats`` collects kill telemetry.  Budgets
+    with config-stage bounds run two-stage by default (see
+    ``evaluate_space_streaming``); ``prune=False`` keeps the single-stage
+    post-evaluation masking path.
     """
     archive = ParetoArchive(len(metrics))
     for res, idx in evaluate_space_streaming(
             workload, space, surrogate=surrogate, chunk_size=chunk_size,
             max_points=max_points, seed=seed, budget=budget,
-            budget_stats=budget_stats):
+            budget_stats=budget_stats, prune=prune):
         archive.update(_objective_columns(res, metrics), idx)
     return archive, space_points(archive.indices, space)
 

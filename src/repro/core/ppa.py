@@ -15,6 +15,16 @@ methodology against the ``synth.py`` oracle:
 Implemented with jnp end-to-end; fitting a few hundred design points is
 instant and differentiable (not that the paper needs gradients — but it
 makes the surrogate usable inside jitted DSE loops).
+
+Prediction is array-first and jit-native: ``surrogate_ppa`` is the pure
+``(params, config_chunk) -> (power, clock, area)`` stage consumed by the
+cost-model backend layer (``repro.core.costmodel``).  The fitted
+per-(PE type, target) polynomials are packed into one pytree
+(``PPAModels.ppa_params``) of coefficient/basis arrays, the design
+matrix is evaluated for EVERY lane of the chunk inside the jit, and each
+lane gathers its own PE type's prediction — so a mixed-type 4096-lane
+chunk is one compiled computation instead of the historical host-numpy
+path that re-dispatched eager kernels per (chunk, PE-type-subset) shape.
 """
 
 from __future__ import annotations
@@ -136,28 +146,82 @@ def select_and_fit(x: jnp.ndarray, y: jnp.ndarray,
     return fit_poly(x, y, best_d, log_target)
 
 
+def surrogate_ppa(params, cfg: AcceleratorConfig):
+    """Batched PPA stage of the polynomial-surrogate backend.
+
+    The ``CostModel.ppa_fn`` contract (see ``repro.core.costmodel``): a
+    pure jit-safe ``(params, config_chunk) -> (power_mw, clock_ghz,
+    area_mm2)`` function.  ``params`` is the ``PPAModels.ppa_params()``
+    pytree — the design matrix is evaluated over ALL lanes for every
+    fitted PE type's polynomial, and each lane then gathers its own
+    type's row, so mixed-type chunks run as one compiled computation.
+    Because the polynomial coefficients are pytree *arguments* (not
+    closed-over constants), every fit with the same selected degrees
+    reuses the same compiled executable.
+
+    Lanes of an unfitted PE type are NOT handled here (a jitted function
+    cannot raise on data): callers must pre-check with
+    ``PPAModels.validate`` — the backend layer does this on every chunk.
+    """
+    x = config_features(cfg)
+    pt = jnp.atleast_1d(cfg.pe_type)
+    pos = params["pos"][pt]                         # (N,) stack row per lane
+    out = []
+    for t in TARGETS:
+        preds = []
+        for entry in params["types"]:
+            exps, mu, sigma, coef, log = entry[t]
+            v = design_matrix(x, exps, mu, sigma) @ coef
+            preds.append(jnp.where(log, jnp.exp(v), v))
+        stacked = jnp.stack(preds)                  # (fitted types, N)
+        out.append(jnp.take_along_axis(stacked, pos[None, :], axis=0)[0])
+    power, clock, area = out                        # TARGETS order
+    return power, clock, area
+
+
+# Lane cap per jitted predict call: the design-matrix evaluation holds
+# (N, monomials, features) intermediates — ~14 MB per (type, target) at
+# degree 3 and N=4096 — so a 27k-point grid in ONE call would peak well
+# over a GB of XLA temp buffers.  Bigger batches stream through in slices
+# (the DSE paths never hit this: they already evaluate at chunk shape).
+_PREDICT_CHUNK = 4096
+
+
+def _ppa_stage_jit():
+    """The evaluator's shared jitted PPA stage (``dse._ppa_stage``).
+
+    Imported lazily: ``dse`` imports this module, and sharing ITS jit —
+    rather than keeping a second ``jax.jit(surrogate_ppa)`` here — means
+    a ``predict`` call and a DSE sweep over the same chunk shape compile
+    the design-matrix graph once, and ``dse.ppa_trace_count`` covers
+    ``predict`` traffic too.
+    """
+    from repro.core.dse import _ppa_stage
+    return _ppa_stage
+
+
 @dataclass
 class PPAModels:
     """Per-PE-type surrogates for power / clock / area."""
     models: Dict[str, Dict[str, PolyModel]] = field(default_factory=dict)
+    _params: dict | None = field(default=None, init=False, repr=False,
+                                 compare=False)
 
-    def predict(self, cfg: AcceleratorConfig) -> SynthResult:
-        """Surrogate SynthResult for a batched config (mixed PE types OK).
+    def validate(self, cfg: AcceleratorConfig) -> None:
+        """Raise unless every PE type present in ``cfg`` has a fitted model.
 
-        Every PE type present in ``cfg`` must have a fitted model —
-        lanes of an unfitted type would otherwise silently predict zero
+        Lanes of an unfitted type would otherwise silently predict zero
         power/clock/area, i.e. a 1e6 ns critical path, zero area and a
         +inf perf/area objective that corrupts any Pareto front built on
         them.  Raises ``ValueError`` naming the missing types instead.
         """
-        x = config_features(cfg)
         pt = np.atleast_1d(np.asarray(cfg.pe_type)).astype(int)
         codes = np.unique(pt)
         invalid = codes[(codes < 0) | (codes >= len(PE_TYPE_NAMES))]
         if invalid.size:
-            # a negative code would alias a real type via Python indexing
-            # below (its lanes silently keeping the zero prediction this
-            # guard exists to prevent); an oversized one would IndexError
+            # a negative code would alias a real type through the pos
+            # gather (its lanes silently borrowing another type's
+            # prediction); an oversized one would index out of range
             raise ValueError(
                 f"pe_type codes {invalid.tolist()} are outside "
                 f"[0, {len(PE_TYPE_NAMES)}) — not a known PE type")
@@ -170,20 +234,63 @@ class PPAModels:
                 f"{sorted(self.models)}); predicting them would silently "
                 f"yield zero power/clock/area — fit on a design sample "
                 f"covering every PE type the DSE sweeps")
-        out = {t: np.zeros(x.shape[0], np.float64) for t in TARGETS}
-        for code, name in enumerate(PE_TYPE_NAMES):
-            sel = pt == code
-            if not sel.any():
-                continue
-            for t in TARGETS:
-                out[t][sel] = np.asarray(
-                    self.models[name][t].predict(x[sel]))
-        clock = jnp.asarray(out["clock_ghz"], jnp.float32)
-        area = jnp.asarray(out["area_mm2"], jnp.float32)
-        power = jnp.asarray(out["power_mw"], jnp.float32)
-        return SynthResult(area_mm2=area, crit_path_ns=1.0 / jnp.maximum(clock, 1e-6),
+
+    def ppa_params(self) -> dict:
+        """The fitted polynomials as one jit-consumable pytree (cached).
+
+        ``pos`` maps a PE-type code to its row in the stacked per-type
+        predictions (unfitted codes point at row 0 — ``validate`` keeps
+        them out of any evaluated chunk); ``types`` holds, per fitted
+        type in code order, the ``(exps, mu, sigma, coef, log_target)``
+        tuple of each target's selected polynomial.  The arrays are
+        device-resident and reused across chunks, so feeding the same
+        ``PPAModels`` to a streaming walk never re-uploads coefficients.
+        """
+        if self._params is None:
+            fitted = [(code, name) for code, name in enumerate(PE_TYPE_NAMES)
+                      if name in self.models]
+            if not fitted:
+                raise ValueError("PPAModels has no fitted models")
+            pos = np.zeros(len(PE_TYPE_NAMES), np.int32)
+            types = []
+            for row, (code, name) in enumerate(fitted):
+                pos[code] = row
+                types.append({t: (jnp.asarray(m.exps, jnp.int32),
+                                  jnp.asarray(m.mu, jnp.float32),
+                                  jnp.asarray(m.sigma, jnp.float32),
+                                  jnp.asarray(m.coef, jnp.float32),
+                                  jnp.asarray(m.log_target))
+                              for t, m in self.models[name].items()})
+            self._params = {"pos": jnp.asarray(pos), "types": tuple(types)}
+        return self._params
+
+    def predict(self, cfg: AcceleratorConfig) -> SynthResult:
+        """Surrogate SynthResult for a batched config (mixed PE types OK).
+
+        Validation (``validate``) runs on host; the prediction itself is
+        the jitted ``surrogate_ppa`` stage, run through the SAME compiled
+        entry point as the DSE evaluator's backend path (one executable
+        per chunk shape for both, counted by ``dse.ppa_trace_count``).
+        Batches above ``_PREDICT_CHUNK`` lanes stream through in slices
+        so the design-matrix temporaries stay bounded.
+        """
+        self.validate(cfg)
+        ppa_stage = _ppa_stage_jit()
+        params = self.ppa_params()
+        n = np.shape(np.asarray(cfg.pe_type))[0] \
+            if np.ndim(cfg.pe_type) else 1
+        if n <= _PREDICT_CHUNK:
+            power, clock, area, leak = ppa_stage(surrogate_ppa, params, cfg)
+        else:
+            parts = [ppa_stage(surrogate_ppa, params, AcceleratorConfig(
+                *[f[lo:lo + _PREDICT_CHUNK] for f in cfg]))
+                for lo in range(0, n, _PREDICT_CHUNK)]
+            power, clock, area, leak = (jnp.concatenate(cols)
+                                        for cols in zip(*parts))
+        return SynthResult(area_mm2=area,
+                           crit_path_ns=1.0 / jnp.maximum(clock, 1e-6),
                            clock_ghz=clock, power_mw=power,
-                           leakage_mw=LEAKAGE_MW_PER_MM2 * area)
+                           leakage_mw=leak)
 
 
 def fit_ppa_models(cfg: AcceleratorConfig,

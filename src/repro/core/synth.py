@@ -12,7 +12,12 @@ leakage proportional to area) and a small deterministic pseudo-noise term
 DC output — the fit-quality experiment (Fig. 3) is the reproduction
 target, not the absolute pJ numbers (DESIGN.md §3).
 
-Everything is pure jnp so oracle evaluation vmaps over design batches.
+Everything is pure jnp and array-first: every formula below is
+elementwise over the config leaves, so a batched ``AcceleratorConfig``
+with (N,)-shaped fields evaluates all N design points in one fused
+computation — no vmap needed, no per-config dispatch.  ``oracle_ppa`` is
+the cost-model-backend entry point (``repro.core.costmodel``): the pure
+``(params, cfg) -> (power, clock, area)`` stage the DSE evaluator jits.
 """
 
 from __future__ import annotations
@@ -98,3 +103,18 @@ def synthesize(cfg: AcceleratorConfig) -> SynthResult:
     return SynthResult(area_mm2=area_mm2, crit_path_ns=crit,
                        clock_ghz=clock_ghz, power_mw=power_mw,
                        leakage_mw=leak_mw)
+
+
+def oracle_ppa(params, cfg: AcceleratorConfig):
+    """Batched PPA stage of the analytical oracle backend.
+
+    The ``CostModel.ppa_fn`` contract (see ``repro.core.costmodel``): a
+    pure jit-safe ``(params, config_chunk) -> (power_mw, clock_ghz,
+    area_mm2)`` function.  The oracle is parameter-free (``params`` is an
+    empty pytree, present only so every backend shares one signature) and
+    simply exposes the synthesis model's nominal-activity triple — one
+    fused elementwise computation for the whole (N,)-lane chunk.
+    """
+    del params  # the analytical oracle has no fitted state
+    s = synthesize(cfg)
+    return s.power_mw, s.clock_ghz, s.area_mm2
