@@ -1,4 +1,5 @@
-"""Streaming DSE scaling: points/sec + peak memory at N in {3k, 27k, 216k}.
+"""Streaming DSE scaling: points/sec + peak memory at N in {3k, 27k, 216k}
+plus the GIGA-SCALE sharded sweep (WIDE_SPACE, >= 10M points).
 
 The engine claim under test: evaluation + Pareto reduction of an
 arbitrarily large design space in O(chunk) memory — no O(N^2) mask, no
@@ -14,19 +15,30 @@ the reported throughput look 8x worse than the engine's steady state.
 
 Peak memory is the process high-water mark (ru_maxrss); sizes run in
 increasing order, so a bounded-memory engine shows a near-flat column.
+
+The SHARDED rows drive the ``repro.core.shard`` multi-device pipeline:
+``dse_scale_sharded_{cold,warm}`` run the warm-up grid with 8 shards
+round-robined over the available JAX devices (run under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` for real
+multi-device; the warm row is guarded by benchmarks/run.py), and the
+full (non---fast) run finishes with ``dse_scale_giga_n*`` — the
+11,059,200-point ``WIDE_SPACE`` walk at 1 and 8 shards, whose near-flat
+``peak_rss_mb`` against the 216k row is the O(chunk + front) memory
+claim at giga scale.
 """
 
 from __future__ import annotations
 
 import time
 
+import jax
 import numpy as np
 
 from benchmarks.common import emit, maxrss_mb
 from repro.core import (DEFAULT_CHUNK_SIZE, DEFAULT_SPACE, PAPER_WORKLOADS,
-                        ParetoArchive, enumerate_space, evaluate_space,
-                        pareto_front_streaming, pareto_mask, space_size,
-                        trace_count)
+                        ParetoArchive, WIDE_SPACE, enumerate_space,
+                        evaluate_space, pareto_front_streaming, pareto_mask,
+                        space_size, trace_count)
 
 # DEFAULT_SPACE is 5*5*4*2*3*3*5*3 = 27,000; refining the PE-array and
 # gbuf axes gives 10*10*8*2*3*3*5*3 = 216,000.
@@ -57,7 +69,7 @@ def _oracle_check(wl, max_points: int) -> bool:
                 and front_ok)
 
 
-def run(sizes: tuple = (3000, 27000, 216000)):
+def run(sizes: tuple = (3000, 27000, 216000), giga: bool = True):
     rows = []
     wl = PAPER_WORKLOADS["resnet20-cifar10"]()
     n_oracle = min(3000, min(sizes))
@@ -82,6 +94,40 @@ def run(sizes: tuple = (3000, 27000, 216000)):
                 f"dse_scale_n{total}_{phase}", dt * 1e6,
                 f"points_per_sec={total / dt:.0f};front={len(archive)};"
                 f"n_compiles={trace_count() - c0};"
+                f"peak_rss_mb={maxrss_mb():.0f};chunk={DEFAULT_CHUNK_SIZE}"))
+
+    # Sharded multi-device walk at the warm-up size (the guarded row):
+    # 8 shards round-robined over however many devices JAX exposes — the
+    # warm number is the async double-buffered pipeline's steady state,
+    # bit-identical front by construction (tests/test_shard.py).
+    n_sharded = min(3000, min(sizes))
+    devices = jax.device_count()
+    for phase in ("cold", "warm"):
+        t0 = time.perf_counter()
+        archive, _ = pareto_front_streaming(
+            wl, chunk_size=DEFAULT_CHUNK_SIZE, max_points=n_sharded,
+            shards=8)
+        dt = time.perf_counter() - t0
+        rows.append(emit(
+            f"dse_scale_sharded_{phase}", dt * 1e6,
+            f"points={n_sharded};points_per_sec={n_sharded / dt:.0f};"
+            f"front={len(archive)};shards=8;devices={devices};"
+            f"peak_rss_mb={maxrss_mb():.0f};chunk={DEFAULT_CHUNK_SIZE}"))
+
+    if giga:
+        # The >= 10M-point WIDE_SPACE sweep: O(chunk + front) memory means
+        # peak_rss_mb stays near the 216k row's despite 51x the points.
+        total = space_size(WIDE_SPACE)
+        for shards in (1, 8):
+            t0 = time.perf_counter()
+            archive, _ = pareto_front_streaming(
+                wl, space=WIDE_SPACE, chunk_size=DEFAULT_CHUNK_SIZE,
+                shards=shards)
+            dt = time.perf_counter() - t0
+            rows.append(emit(
+                f"dse_scale_giga_n{total}_shard{shards}", dt * 1e6,
+                f"points={total};points_per_sec={total / dt:.0f};"
+                f"front={len(archive)};shards={shards};devices={devices};"
                 f"peak_rss_mb={maxrss_mb():.0f};chunk={DEFAULT_CHUNK_SIZE}"))
     return rows
 

@@ -35,15 +35,17 @@ DSE_BENCHES = ("fig2", "fig4", "fig56", "dse_transformers", "dse_scale",
 
 # --fast regression guard: fail if a guarded warm throughput drops more
 # than this fraction below the value committed in BENCH_dse.json.  The
-# unconstrained joint sweep, the constrained (budgeted) sweep AND the
-# tight-budget two-stage pruned sweep are guarded, so neither a slow
-# feasibility-mask path nor a regressed pruner can hide behind the
+# unconstrained joint sweep, the constrained (budgeted) sweep, the
+# tight-budget two-stage pruned sweep AND the sharded multi-device sweep
+# are guarded, so neither a slow feasibility-mask path, a regressed
+# pruner, nor a serialized shard pipeline can hide behind the
 # unconstrained number.  BENCH_SKIP_REGRESSION=1 skips the check
 # (noisy/underpowered runners).
 REGRESSION_TOLERANCE = 0.30
-GUARDED_ROWS = ("coexplore_joint_sweep_warm",
-                "coexplore_constrained_sweep_warm",
-                "coexplore_pruned_sweep_warm")
+GUARDED_ROWS = (("coexplore", "coexplore_joint_sweep_warm"),
+                ("coexplore", "coexplore_constrained_sweep_warm"),
+                ("coexplore", "coexplore_pruned_sweep_warm"),
+                ("dse_scale", "dse_scale_sharded_warm"))
 
 
 def _warm_row_fields(rows, guarded_row: str) -> dict | None:
@@ -56,19 +58,20 @@ def _warm_row_fields(rows, guarded_row: str) -> dict | None:
     return None
 
 
-def _check_regression(committed: dict, fresh_rows) -> list[str]:
+def _check_regression(committed: dict, fresh: dict) -> list[str]:
     """Error strings for each guarded warm throughput that regressed.
 
-    Only rows with the same evaluated point count are compared: a full
+    ``fresh`` maps bench name -> its CSV rows (the dse_rows dict).  Only
+    rows with the same evaluated point count are compared: a full
     (non---fast) run writes full-sweep numbers into BENCH_dse.json, and
     its warm pts/s is structurally higher than a --fast subsample's
     (less chunk padding) — comparing across modes would trip the guard
     on an unchanged engine.
     """
     errs = []
-    for guarded in GUARDED_ROWS:
-        ref = _warm_row_fields(committed.get("coexplore"), guarded)
-        got = _warm_row_fields(fresh_rows, guarded)
+    for bench, guarded in GUARDED_ROWS:
+        ref = _warm_row_fields(committed.get(bench), guarded)
+        got = _warm_row_fields(fresh.get(bench), guarded)
         if not ref or not got or "points_per_sec" not in ref \
                 or "points_per_sec" not in got:
             continue  # no committed baseline / bench failed (reported anyway)
@@ -112,7 +115,8 @@ def main() -> None:
         if args.fast else fig56_pareto.run,
         "kernels": kernels_bench.run,
         "dse_transformers": lambda: dse_transformers.run(max_points=mp),
-        "dse_scale": (lambda: dse_scale.run(sizes=FAST_SCALE_SIZES))
+        "dse_scale": (lambda: dse_scale.run(sizes=FAST_SCALE_SIZES,
+                                            giga=False))
         if args.fast else dse_scale.run,
         "coexplore": lambda: coexplore.run(
             max_points=FAST_COEXPLORE_POINTS if args.fast else None),
@@ -141,13 +145,13 @@ def main() -> None:
 
     # throughput regression guard (--fast only: committed numbers are the
     # --fast CI artifact, so the comparison is like-for-like)
-    if (args.fast and "coexplore" in dse_rows
+    if (args.fast and dse_rows
             and not os.environ.get("BENCH_SKIP_REGRESSION")):
-        errs = _check_regression(committed, dse_rows["coexplore"])
+        errs = _check_regression(committed, dse_rows)
         for err in errs:
             print(f"REGRESSION: {err}", file=sys.stderr)
         if errs:
-            failed.append("coexplore_regression_guard")
+            failed.append("regression_guard")
     if dse_rows:
         if args.only or failed:  # partial run: merge, don't clobber
             try:

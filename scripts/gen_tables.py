@@ -82,23 +82,35 @@ def _kills_rows(derived):
     return pairs, budget
 
 
-# Sweep-row columns rendered by the structured coexplore table, in order.
+# Sweep-row columns rendered by the structured sweep tables, in order
+# (coexplore and dse_scale sections share the layout; shards/devices/
+# peak_rss_mb are populated by the sharded + giga dse_scale rows).
 _SWEEP_COLS = ("points", "points_per_sec", "n_compiles", "feasible",
                "feasible_frac", "pruned", "speedup_vs_singlestage", "front",
-               "budget")
+               "shards", "devices", "peak_rss_mb", "budget")
+
+
+def _is_sweep_row(name):
+    """Rows rendered in the structured sweep-throughput table: coexplore
+    sweep/singlestage rows plus dse_scale's sized, sharded and giga
+    walks (the oracle cross-check row stays in the raw table)."""
+    return ("_sweep_" in name or "singlestage" in name
+            or name.startswith("dse_scale_n") or "_sharded_" in name
+            or "_giga_" in name)
 
 
 def _coexplore_tables(entries):
-    """Structured rendering of a coexplore section: one sweep-throughput
-    table (constrained + pruned rows included, remaining keys kept in an
-    `other` column instead of dropped), one per-constraint kill-count
-    table per `_kills` row, and the generic raw table for the rest."""
+    """Structured rendering of a coexplore/dse_scale section: one
+    sweep-throughput table (constrained + pruned rows included, remaining
+    keys kept in an `other` column instead of dropped), one
+    per-constraint kill-count table per `_kills` row, and the generic raw
+    table for the rest."""
     sweeps, kills, others = [], [], []
     for e in entries:
         name, us, derived = e.split(",", 2)
         if name.endswith("_kills"):
             kills.append((name, derived))
-        elif "_sweep_" in name or "singlestage" in name:
+        elif _is_sweep_row(name):
             sweeps.append((name, float(us), _kv_fields(derived)))
         else:
             others.append(e)
@@ -138,14 +150,17 @@ def _generic_bench_table(entries):
 def bench_dse_table(section=None, path="BENCH_dse.json"):
     """Render BENCH_dse.json sections (fig2/fig4/fig56/dse_scale/coexplore)
     as markdown tables; ``section`` selects one (e.g. 'coexplore').  The
-    coexplore section gets the structured sweep + kill-count rendering."""
+    coexplore and dse_scale sections get the structured sweep +
+    kill-count rendering (dse_scale's sharded/giga rows carry
+    shards/devices/peak_rss_mb columns)."""
     data = json.load(open(path))
     out = []
     for sec, entries in data.items():
         if section and sec != section:
             continue
         out += [f"### {sec}", ""]
-        out += (_coexplore_tables(entries) if sec == "coexplore"
+        out += (_coexplore_tables(entries)
+                if sec in ("coexplore", "dse_scale")
                 else _generic_bench_table(entries))
     return out
 

@@ -113,6 +113,106 @@ def _restore_tree(path: str, template, shardings=None):
         leaves_paths[1], [restored[k] for k in keys])
 
 
+# ---------------------------------------------------------------------------
+# Template-free state checkpoints (sweep/archive durability).
+#
+# ``save``/``restore`` above need a pytree TEMPLATE at restore time — the
+# right contract for training state whose structure the trainer already
+# holds.  Long-running DSE sweeps have no such template: archive fronts,
+# walk cursors and pruner buffers are ragged, dtype-mixed, and absent
+# until the walk produces them.  ``save_state``/``load_state`` therefore
+# self-describe: arrays are stored one ``.npy`` per leaf (dtype + shape
+# travel in the file, never through pickle) and the JSON manifest records
+# the nesting structure plus every scalar/string leaf.  Same atomicity,
+# keep-k GC and ``step_<n>`` naming as ``save`` — ``all_steps`` /
+# ``latest_step`` see both kinds.
+# ---------------------------------------------------------------------------
+
+_ARRAY_REF = "__npy__"
+
+
+def _encode_state(node, arrays: dict, path: str):
+    if isinstance(node, (np.ndarray, jnp.ndarray)):
+        key = f"a{len(arrays)}"
+        arrays[key] = np.asarray(jax.device_get(node))
+        return {_ARRAY_REF: key}
+    if isinstance(node, dict):
+        for k in node:
+            if not isinstance(k, str):
+                raise TypeError(f"state dict keys must be str at {path!r}, "
+                                f"got {type(k).__name__}")
+            if k == _ARRAY_REF:
+                raise ValueError(f"state dict key {_ARRAY_REF!r} is "
+                                 f"reserved (at {path!r})")
+        return {k: _encode_state(v, arrays, f"{path}/{k}")
+                for k, v in node.items()}
+    if isinstance(node, (list, tuple)):
+        return [_encode_state(v, arrays, f"{path}/{i}")
+                for i, v in enumerate(node)]
+    if isinstance(node, (np.integer,)):
+        return int(node)
+    if isinstance(node, (np.floating,)):
+        return float(node)
+    if isinstance(node, (np.bool_,)):
+        return bool(node)
+    if node is None or isinstance(node, (bool, int, float, str)):
+        return node
+    raise TypeError(f"state leaf at {path!r} is not checkpointable: "
+                    f"{type(node).__name__}")
+
+
+def _decode_state(node, path: str):
+    if isinstance(node, dict):
+        if set(node) == {_ARRAY_REF}:
+            return np.load(os.path.join(path, node[_ARRAY_REF] + ".npy"))
+        return {k: _decode_state(v, path) for k, v in node.items()}
+    if isinstance(node, list):
+        return [_decode_state(v, path) for v in node]
+    return node
+
+
+def save_state(ckpt_dir: str, step: int, state, keep: int = 3) -> str:
+    """Atomically write a self-describing state checkpoint.
+
+    ``state`` is any nesting of dicts (str keys), lists/tuples, numpy/jax
+    arrays, and JSON scalars.  Tuples come back as lists.  Returns the
+    published ``step_<n>`` path.
+    """
+    os.makedirs(ckpt_dir, exist_ok=True)
+    tmp = os.path.join(ckpt_dir, f"tmp.{step}")
+    final = os.path.join(ckpt_dir, f"step_{step}")
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    arrays: dict[str, np.ndarray] = {}
+    tree = _encode_state(state, arrays, "")
+    for key, arr in arrays.items():
+        np.save(os.path.join(tmp, key + ".npy"), arr)
+    with open(os.path.join(tmp, "state.json"), "w") as f:
+        json.dump({"step": step, "state": tree}, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)          # atomic publish
+    _gc(ckpt_dir, keep)
+    return final
+
+
+def load_state(ckpt_dir: str, step: Optional[int] = None):
+    """Load a ``save_state`` checkpoint (default: the latest step).
+
+    Returns ``(step, state)``; ``(None, None)`` if the directory holds no
+    checkpoint.
+    """
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            return None, None
+    path = os.path.join(ckpt_dir, f"step_{step}")
+    with open(os.path.join(path, "state.json")) as f:
+        payload = json.load(f)
+    return payload["step"], _decode_state(payload["state"], path)
+
+
 def restore(ckpt_dir: str, step: int, params_template,
             opt_template=None, shardings=None, opt_shardings=None):
     """Load checkpoint `step` shaped/placed like the templates.

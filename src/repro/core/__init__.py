@@ -15,6 +15,9 @@ Submodules:
               config-stage vs workload-stage classification
   dse       — vectorized design-space exploration + Pareto analysis
               (two-stage config-only constraint pre-pruning)
+  shard     — giga-scale sweeps: sharded multi-device walks, async
+              double-buffered archive reduction, checkpoint/resume,
+              streamed CSV fronts
   workloads — layer-wise workload extraction (paper CNNs + assigned archs
               + parameterized model families)
   accuracy  — per-(model, PE-type) accuracy surrogate with QAT calibration
@@ -28,7 +31,8 @@ from repro.core.arch import (AcceleratorConfig, make_config, stack_configs,
                              enumerate_space, iter_space_chunks, space_points,
                              space_size, subsample_indices, joint_space_size,
                              joint_space_points, iter_joint_space_chunks,
-                             DEFAULT_SPACE, PE_TYPE_NAMES, PE_TYPE_CODES)
+                             DEFAULT_SPACE, WIDE_SPACE, PE_TYPE_NAMES,
+                             PE_TYPE_CODES)
 from repro.core.constraints import (Budget, BudgetStats, Constraint,
                                     CONFIG_STAGE_COLUMNS,
                                     apply_budget, mask_result)
@@ -40,14 +44,19 @@ from repro.core.coexplore import (COEXPLORE_METRICS, CoexploreFront,
                                   coexplore_front,
                                   coexplore_report, default_model_set,
                                   lightpe_claim, model_entry)
-from repro.core.dse import (TwoStagePruner, evaluate_chunk, evaluate_space,
-                            evaluate_space_streaming,
+from repro.core.dse import (TwoStagePruner, PendingChunk, dispatch_chunk,
+                            evaluate_chunk, evaluate_space,
+                            evaluate_space_streaming, finish_chunk,
                             pareto_front, pareto_front_streaming,
                             pareto_mask, pareto_mask_dense, pareto_mask_tiled,
                             pareto_mask_2d, ParetoArchive,
                             normalized_report, report_pe_types, spread,
                             trace_count, ppa_trace_count, reset_trace_count,
                             DseResult, RESULT_DTYPES, DEFAULT_CHUNK_SIZE)
+from repro.core.shard import (DEFAULT_PIPELINE_DEPTH, SweepCheckpointer,
+                              export_front_csv, merge_archives,
+                              merge_budget_stats, resolve_shards,
+                              sharded_pareto_front, sharded_space_stream)
 from repro.core.ppa import (fit_ppa_models, surrogate_ppa, PPAModels, r2,
                             mape)
 from repro.core.synth import synthesize, oracle_ppa, SynthResult
@@ -63,7 +72,7 @@ __all__ = [
     "take_config", "enumerate_space",
     "iter_space_chunks", "space_points", "space_size", "subsample_indices",
     "joint_space_size", "joint_space_points", "iter_joint_space_chunks",
-    "DEFAULT_SPACE", "PE_TYPE_NAMES", "PE_TYPE_CODES",
+    "DEFAULT_SPACE", "WIDE_SPACE", "PE_TYPE_NAMES", "PE_TYPE_CODES",
     "Budget", "BudgetStats", "Constraint", "CONFIG_STAGE_COLUMNS",
     "apply_budget", "mask_result",
     "COST_MODELS", "CostModel", "OracleCostModel", "SurrogateCostModel",
@@ -72,9 +81,12 @@ __all__ = [
     "COEXPLORE_METRICS", "CoexploreFront", "JointDesignPoint", "ModelEntry",
     "coexplore_front",
     "coexplore_report", "default_model_set", "lightpe_claim", "model_entry",
-    "TwoStagePruner", "evaluate_chunk", "evaluate_space",
-    "evaluate_space_streaming",
+    "TwoStagePruner", "PendingChunk", "dispatch_chunk", "evaluate_chunk",
+    "evaluate_space", "evaluate_space_streaming", "finish_chunk",
     "pareto_front", "pareto_front_streaming",
+    "DEFAULT_PIPELINE_DEPTH", "SweepCheckpointer", "export_front_csv",
+    "merge_archives", "merge_budget_stats", "resolve_shards",
+    "sharded_pareto_front", "sharded_space_stream",
     "pareto_mask", "pareto_mask_dense", "pareto_mask_tiled", "pareto_mask_2d",
     "ParetoArchive", "normalized_report", "report_pe_types", "spread",
     "trace_count", "ppa_trace_count", "reset_trace_count",

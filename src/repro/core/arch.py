@@ -117,6 +117,23 @@ DEFAULT_SPACE = dict(
     bandwidth_gbps=(12.8, 25.6, 51.2),
 )
 
+# The giga-scale grid (ROADMAP item 2): QUIDAM-style order-of-magnitude
+# densification of the PE-array / gbuf / scratchpad axes the paper's 27k
+# grid barely samples.  16*16*12*4*6*6*5*5 = 11,059,200 accelerator
+# configs (>= 10M) — only ever walked lazily through the mixed-radix
+# chunk iterators; nothing here is materialized.
+WIDE_SPACE = dict(
+    pe_rows=(4, 6, 8, 10, 12, 14, 16, 20, 24, 28, 32, 36, 40, 48, 56, 64),
+    pe_cols=(4, 6, 8, 10, 12, 14, 16, 20, 24, 28, 32, 36, 40, 48, 56, 64),
+    gbuf_kb=(27.0, 54.0, 81.0, 108.0, 162.0, 216.0, 324.0, 432.0, 648.0,
+             864.0, 1296.0, 1728.0),
+    spad_ifmap=(6, 12, 24, 48),
+    spad_filter=(56, 112, 168, 224, 336, 448),
+    spad_psum=(8, 16, 24, 32, 48, 64),
+    pe_type=tuple(range(len(PE_TYPE_NAMES))),
+    bandwidth_gbps=(6.4, 12.8, 25.6, 51.2, 102.4),
+)
+
 
 def _space_axes(space: dict | None) -> list[np.ndarray]:
     """Per-field value axes in AcceleratorConfig field order."""
@@ -186,8 +203,9 @@ def space_points(indices: np.ndarray,
 def iter_space_chunks(space: dict | None = None,
                       chunk_size: int = 4096,
                       max_points: int | None = None,
-                      seed: int = 0) -> Iterator[tuple[AcceleratorConfig,
-                                                       np.ndarray]]:
+                      seed: int = 0,
+                      start_chunk: int = 0) -> Iterator[
+                          tuple[AcceleratorConfig, np.ndarray]]:
     """Lazily yield ``(config_chunk, flat_indices)`` pairs over the space.
 
     Every chunk except possibly the last has exactly ``chunk_size`` points;
@@ -195,15 +213,20 @@ def iter_space_chunks(space: dict | None = None,
     (what ``space_points`` decodes).  Memory is O(chunk_size) regardless of
     the total space size.  ``max_points`` subsamples the space uniformly
     (same RNG stream as ``enumerate_space``).
+
+    ``start_chunk`` skips the first N chunks WITHOUT decoding them — the
+    resume primitive of checkpointed walks: chunk boundaries are a pure
+    function of ``(space, chunk_size, max_points, seed)``, so skipping is
+    index arithmetic, not re-evaluation.
     """
     n = space_size(space)
     keep = subsample_indices(n, max_points, seed)
     if keep is not None:
-        for lo in range(0, len(keep), chunk_size):
+        for lo in range(start_chunk * chunk_size, len(keep), chunk_size):
             idx = keep[lo:lo + chunk_size]
             yield space_points(idx, space), idx
         return
-    for lo in range(0, n, chunk_size):
+    for lo in range(start_chunk * chunk_size, n, chunk_size):
         idx = np.arange(lo, min(lo + chunk_size, n), dtype=np.int64)
         yield space_points(idx, space), idx
 
@@ -279,6 +302,7 @@ def iter_joint_space_chunks(
         seed: int = 0,
         group_by_model: bool = False,
         model_groups: Sequence[Sequence[int]] | None = None,
+        start_chunk: int = 0,
 ) -> Iterator[tuple[int | np.ndarray, AcceleratorConfig, np.ndarray]]:
     """Lazily yield ``(model_ids, config_chunk, flat_joint_indices)``.
 
@@ -299,19 +323,30 @@ def iter_joint_space_chunks(
     ``max_points`` subsamples the JOINT space uniformly with the same RNG
     stream in both modes, so mixed and grouped walks visit the exact same
     point set.  Memory stays O(chunk_size + max_points).
+
+    ``start_chunk`` skips the first N chunks of the walk (counted in
+    yield order) without decoding them — whole model/group segments are
+    skipped by chunk-count arithmetic, so resume cost is O(max_points)
+    index bookkeeping, never re-evaluation.
     """
     a = space_size(space)
     n = joint_space_size(space, num_models)
     keep = subsample_indices(n, max_points, seed)
+    skip = int(start_chunk)
     if group_by_model:
         for m in range(num_models):
             if keep is None:
                 midx = np.arange(m * a, (m + 1) * a, dtype=np.int64)
             else:
                 midx = keep[(keep >= m * a) & (keep < (m + 1) * a)]
-            for lo in range(0, len(midx), chunk_size):
+            n_chunks = -(-len(midx) // chunk_size)
+            if skip >= n_chunks:
+                skip -= n_chunks
+                continue
+            for lo in range(skip * chunk_size, len(midx), chunk_size):
                 idx = midx[lo:lo + chunk_size]
                 yield m, space_points(idx - m * a, space), idx
+            skip = 0
         return
     if model_groups is None:
         groups = (tuple(range(num_models)),)
@@ -323,15 +358,25 @@ def iter_joint_space_chunks(
             # lazy per-chunk decode of the group's local enumeration:
             # local index l -> (model g[l // a], accel l % a)
             g_n = len(g) * a
-            for lo in range(0, g_n, chunk_size):
+            n_chunks = -(-g_n // chunk_size)
+            if skip >= n_chunks:
+                skip -= n_chunks
+                continue
+            for lo in range(skip * chunk_size, g_n, chunk_size):
                 loc = np.arange(lo, min(lo + chunk_size, g_n), dtype=np.int64)
                 mids = g[loc // a]
                 yield mids, space_points(loc % a, space), mids * a + loc % a
+            skip = 0
         else:
             gidx = keep[np.isin(keep // a, g)]
-            for lo in range(0, len(gidx), chunk_size):
+            n_chunks = -(-len(gidx) // chunk_size)
+            if skip >= n_chunks:
+                skip -= n_chunks
+                continue
+            for lo in range(skip * chunk_size, len(gidx), chunk_size):
                 idx = gidx[lo:lo + chunk_size]
                 yield idx // a, space_points(idx % a, space), idx
+            skip = 0
 
 
 def config_rows(cfg: AcceleratorConfig) -> Iterable[dict]:

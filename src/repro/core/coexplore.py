@@ -47,8 +47,10 @@ under subsampling).
 
 from __future__ import annotations
 
+from collections import deque
 from typing import NamedTuple, Sequence
 
+import jax
 import numpy as np
 
 from repro.core.accuracy import AccuracySurrogate, seeded_base_accuracy
@@ -58,7 +60,7 @@ from repro.core.arch import (AcceleratorConfig, PE_TYPE_NAMES, config_rows,
 from repro.core.constraints import Budget, BudgetStats
 from repro.core.costmodel import CostModel, as_cost_model
 from repro.core.dse import (DEFAULT_CHUNK_SIZE, ParetoArchive, TwoStagePruner,
-                            evaluate_chunk)
+                            dispatch_chunk, evaluate_chunk, finish_chunk)
 from repro.core.ppa import PPAModels
 from repro.core.workloads import (Workload, layer_bucket, resnet_cifar,
                                   stack_workloads, transformer_gemm, vgg16,
@@ -191,6 +193,29 @@ def _update_per_model_best(best: dict, models: tuple, acc_matrix: np.ndarray,
                                          float(-obj[sel, 2].max()))
 
 
+def _bucket_models(models: tuple, layer_buckets):
+    """Group the model axis into layer-count buckets for the one-compile
+    mixed walk.  Returns ``(bucket_of, group_ids, stacked, local,
+    buckets_meta)`` — the stacked (M_b, L_b) workload per bucket, the
+    walk's group order, and each model's position in its group's stack.
+    """
+    bucket_of = [layer_bucket(workload_layers(m.workload), layer_buckets)
+                 for m in models]
+    groups: dict[int, list[int]] = {}
+    for i, b in enumerate(bucket_of):
+        groups.setdefault(b, []).append(i)
+    group_ids = tuple(tuple(groups[b]) for b in sorted(groups))
+    stacked = {b: stack_workloads([models[i].workload for i in groups[b]],
+                                  pad_to=b) for b in groups}
+    # global model id -> position in its group's stack
+    local = np.full(len(models), -1, np.int64)
+    for b in groups:
+        local[groups[b]] = np.arange(len(groups[b]))
+    buckets_meta = tuple((b, tuple(models[i].name for i in groups[b]))
+                         for b in sorted(groups))
+    return bucket_of, group_ids, stacked, local, buckets_meta
+
+
 def coexplore_front(
         models: Sequence[ModelEntry],
         space: dict | None = None,
@@ -202,7 +227,14 @@ def coexplore_front(
         mix_models: bool = True,
         layer_buckets: Sequence[int] | None = None,
         budget: Budget | None = None,
-        prune: bool = True) -> CoexploreFront:
+        prune: bool = True,
+        shards: int | None = None,
+        devices=None,
+        pipeline_depth: int | None = None,
+        checkpoint_dir: str | None = None,
+        checkpoint_every: int = 64,
+        csv_path: str | None = None,
+        max_chunks: int | None = None) -> CoexploreFront:
     """Stream the joint (model x accelerator) space into a 3-objective
     non-dominated archive.
 
@@ -245,10 +277,29 @@ def coexplore_front(
     bit-identical to the single-stage path (``prune=False``) in both walk
     modes; ``budget_stats.pruned`` reports the lanes that never paid for
     a dataflow fold.
+
+    GIGA-SCALE knobs (all default-off; any of them engages the sharded,
+    async double-buffered, checkpointable walk — same point set, same
+    front, bit-identically): ``shards``/``devices``/``pipeline_depth``
+    split the chunk sequence round-robin over per-device archives;
+    ``checkpoint_dir``/``checkpoint_every`` snapshot and auto-resume the
+    walk state; ``csv_path`` streams the decoded front; ``max_chunks``
+    truncates the walk (preemption for kill/resume tests).
     """
     models = tuple(models)
     if not models:
         raise ValueError("need at least one ModelEntry on the model axis")
+    if (shards is not None or devices is not None
+            or checkpoint_dir is not None or csv_path is not None
+            or max_chunks is not None):
+        return _sharded_coexplore_front(
+            models, space=space, surrogate=surrogate, accuracy=accuracy,
+            chunk_size=chunk_size, max_points=max_points, seed=seed,
+            mix_models=mix_models, layer_buckets=layer_buckets,
+            budget=budget, prune=prune, shards=shards, devices=devices,
+            pipeline_depth=pipeline_depth, checkpoint_dir=checkpoint_dir,
+            checkpoint_every=checkpoint_every, csv_path=csv_path,
+            max_chunks=max_chunks)
     accuracy = AccuracySurrogate() if accuracy is None else accuracy
     cost_model = as_cost_model(surrogate)
     # (M, n_pe_types) accuracy constants: the per-lane accuracy objective
@@ -318,20 +369,8 @@ def coexplore_front(
     if mix_models:
         # group the model axis into layer-count buckets: each group gets
         # one stacked (M_b, L_b) workload == one compiled evaluator
-        bucket_of = [layer_bucket(workload_layers(m.workload), layer_buckets)
-                     for m in models]
-        groups: dict[int, list[int]] = {}
-        for i, b in enumerate(bucket_of):
-            groups.setdefault(b, []).append(i)
-        group_ids = tuple(tuple(groups[b]) for b in sorted(groups))
-        stacked = {b: stack_workloads([models[i].workload for i in groups[b]],
-                                      pad_to=b) for b in groups}
-        # global model id -> position in its group's stack
-        local = np.full(len(models), -1, np.int64)
-        for b in groups:
-            local[groups[b]] = np.arange(len(groups[b]))
-        buckets_meta = tuple((b, tuple(models[i].name for i in groups[b]))
-                             for b in sorted(groups))
+        bucket_of, group_ids, stacked, local, buckets_meta = \
+            _bucket_models(models, layer_buckets)
         for mids, cfg, idx in iter_joint_space_chunks(
                 space, num_models=len(models), chunk_size=chunk_size,
                 max_points=max_points, seed=seed, model_groups=group_ids):
@@ -356,6 +395,237 @@ def coexplore_front(
                           per_model_best=per_model_best,
                           points_evaluated=total,
                           budget=budget, budget_stats=stats)
+
+
+def _merge_best(dest: dict, src: dict) -> None:
+    """Fold one shard's (model, PE-type) best-seen aggregates into the
+    merged dict.  max/min are associative and exact on floats, so merging
+    per-shard aggregates is bit-identical to the single-process fold."""
+    for key, e in src.items():
+        d = dest.get(key)
+        if d is None:
+            dest[key] = dict(e)
+        else:
+            d["macs_per_s_per_mm2"] = max(d["macs_per_s_per_mm2"],
+                                          e["macs_per_s_per_mm2"])
+            d["energy_per_mac_pj"] = min(d["energy_per_mac_pj"],
+                                         e["energy_per_mac_pj"])
+
+
+def _sharded_coexplore_front(
+        models: tuple, space, surrogate, accuracy, chunk_size, max_points,
+        seed, mix_models, layer_buckets, budget, prune, shards, devices,
+        pipeline_depth, checkpoint_dir, checkpoint_every, csv_path,
+        max_chunks) -> CoexploreFront:
+    """The sharded / async / durable joint walk behind ``coexplore_front``.
+
+    Same chunk sequence as the default walk (``iter_joint_space_chunks``
+    with the identical grouping), dealt round-robin across S shards; each
+    shard folds into its own archive, (model, PE) aggregates, counters,
+    and (when the budget engages two-stage pruning) its own
+    ``TwoStagePruner``.  Unpruned chunks run the async double-buffered
+    pipeline of ``repro.core.shard`` — dispatch on the shard's device,
+    finish oldest-first, so the host-side fold of chunk k overlaps the
+    device evaluation of later chunks.  Per-shard state merges exactly
+    (archive reduction, max/min aggregates, additive stats), so the
+    returned front is bit-identical to the single-process walk's.
+
+    Durability: every ``checkpoint_every`` retired chunks the complete
+    per-shard state (archive fronts, aggregates, counters, stats, pruner
+    buffers + their active bucket/model) and the walk cursor are written
+    atomically; an existing checkpoint in ``checkpoint_dir`` resumes the
+    walk from its cursor via ``start_chunk`` index arithmetic and
+    reproduces the uninterrupted front exactly.  ``max_chunks`` truncates
+    the walk after a final checkpoint — the preemption primitive.
+    """
+    from repro.core import shard as _shard
+    accuracy = AccuracySurrogate() if accuracy is None else accuracy
+    cost_model = as_cost_model(surrogate)
+    acc_matrix = np.stack([accuracy.predict_per_type(m.name, m.macs,
+                                                     m.base_acc)
+                           for m in models])
+    n_shards, devs = _shard.resolve_shards(shards, devices)
+    depth = _shard.DEFAULT_PIPELINE_DEPTH if pipeline_depth is None \
+        else pipeline_depth
+    engage = (budget is not None and prune
+              and bool(budget.config_constraints()))
+    archives = [ParetoArchive(len(COEXPLORE_METRICS))
+                for _ in range(n_shards)]
+    bests: list[dict] = [{} for _ in range(n_shards)]
+    totals = [0] * n_shards
+    stats = [BudgetStats() for _ in range(n_shards)] \
+        if budget is not None else None
+
+    bucket_of = group_ids = stacked = local = None
+    buckets_meta = ()
+    if mix_models:
+        bucket_of, group_ids, stacked, local, buckets_meta = \
+            _bucket_models(models, layer_buckets)
+
+    ckpt = None
+    cursor = 0
+    pruner_states = wl_keys = None
+    if checkpoint_dir is not None:
+        ckpt = _shard.SweepCheckpointer(
+            checkpoint_dir, every=checkpoint_every,
+            signature=dict(
+                kind="joint", mix=bool(mix_models), shards=n_shards,
+                chunk_size=int(chunk_size), max_points=max_points,
+                seed=int(seed), metrics=list(COEXPLORE_METRICS),
+                prune=bool(engage),
+                budget=None if budget is None else budget.spec(),
+                space=_shard.space_signature(space),
+                models=[m.name for m in models]))
+        loaded = ckpt.load()
+        if loaded is not None:
+            cursor = int(loaded["cursor"])
+            archives = [ParetoArchive.from_state(a)
+                        for a in loaded["archives"]]
+            bests = [{(m, pe): dict(e) for m, pe, e in shard_best}
+                     for shard_best in loaded["best"]]
+            totals = [int(t) for t in loaded["totals"]]
+            if stats is not None and loaded.get("stats") is not None:
+                stats = [BudgetStats.from_dict(d) for d in loaded["stats"]]
+            pruner_states = loaded.get("pruners")
+            wl_keys = loaded.get("wl_keys")
+    pruners = None
+    if engage:
+        pruners = [TwoStagePruner(budget, chunk_size, cost_model, stats[s])
+                   for s in range(n_shards)]
+        if pruner_states is not None:
+            for s, (p, st) in enumerate(zip(pruners, pruner_states)):
+                k = wl_keys[s] if wl_keys is not None else None
+                wl = None
+                if k is not None:
+                    wl = stacked[int(k)] if mix_models \
+                        else models[int(k)].workload
+                p.restore_state(st, wl)
+    active_keys: list = list(wl_keys) if wl_keys is not None \
+        else [None] * n_shards
+
+    def _fold(s, res, idx, mids, codes):
+        lane_acc = acc_matrix[mids, codes]
+        obj = _joint_objectives(res, lane_acc)
+        totals[s] += len(idx)
+        if budget is not None:
+            mask, kills = budget.feasibility(res, accuracy=lane_acc)
+            stats[s].record(mask, kills)
+            if not mask.all():
+                obj, idx = obj[mask], idx[mask]
+                mids, codes = mids[mask], codes[mask]
+        archives[s].update(obj, idx)
+        _update_per_model_best(bests[s], models, acc_matrix, mids, codes,
+                               obj)
+
+    def _fold_flush(s, res, idx, aux):
+        obj = _joint_objectives(res, aux["accuracy"])
+        archives[s].update(obj, idx)
+        _update_per_model_best(bests[s], models, acc_matrix,
+                               aux["mids"], aux["codes"], obj)
+
+    def _state() -> dict:
+        st = dict(cursor=cursor,
+                  archives=[a.state_dict() for a in archives],
+                  best=[[[m, pe, dict(e)] for (m, pe), e in b.items()]
+                        for b in bests],
+                  totals=list(totals))
+        if stats is not None:
+            st["stats"] = [s_.as_dict() for s_ in stats]
+        if pruners is not None:
+            st["pruners"] = [p.state_dict() for p in pruners]
+            st["wl_keys"] = list(active_keys)
+        return st
+
+    def _merged_archive() -> ParetoArchive:
+        return _shard.merge_archives(archives, len(COEXPLORE_METRICS))
+
+    def _snapshot() -> None:
+        if ckpt is not None:
+            ckpt.save(cursor, _state())
+        if csv_path is not None:
+            _shard.export_front_csv(csv_path, _merged_archive(),
+                                    COEXPLORE_METRICS, space=space,
+                                    models=models)
+
+    def _chunks():
+        """Normalize both walk modes to (wl_key, workload, model_ids,
+        mids, cfg, idx) — identical chunk sequences to the default walk,
+        resumed at ``cursor`` by index arithmetic."""
+        if mix_models:
+            for mids, cfg, idx in iter_joint_space_chunks(
+                    space, num_models=len(models), chunk_size=chunk_size,
+                    max_points=max_points, seed=seed,
+                    model_groups=group_ids, start_chunk=start):
+                b = bucket_of[int(mids[0])]
+                yield b, stacked[b], local[mids], mids, cfg, idx
+        else:
+            for m, cfg, idx in iter_joint_space_chunks(
+                    space, num_models=len(models), chunk_size=chunk_size,
+                    max_points=max_points, seed=seed, group_by_model=True,
+                    start_chunk=start):
+                mids = np.full(len(idx), int(m), np.int64)
+                yield int(m), models[m].workload, None, mids, cfg, idx
+
+    start = cursor            # cursor advances as chunks retire
+    inflight: deque = deque()
+    cap = max(1, n_shards * max(1, depth))
+    completed = True
+
+    def _finish_one() -> int:
+        c, s, pending, idx, mids, codes = inflight.popleft()
+        _fold(s, finish_chunk(pending), idx, mids, codes)
+        return c
+
+    def _retire(c: int) -> None:
+        nonlocal cursor
+        cursor = c + 1
+        if ckpt is not None and ckpt.due(cursor):
+            _snapshot()
+
+    for c, (wl_key, wl, model_ids, mids, cfg, idx) in enumerate(
+            _chunks(), start=start):
+        if max_chunks is not None and c - start >= max_chunks:
+            completed = False
+            break
+        s = c % n_shards
+        codes = np.asarray(cfg.pe_type).astype(np.int64)
+        if engage:
+            active_keys[s] = wl_key
+            totals[s] += len(idx)
+            aux = dict(accuracy=acc_matrix[mids, codes], mids=mids,
+                       codes=codes)
+            with jax.default_device(_shard.shard_device(devs, s)):
+                for out in pruners[s].feed(cfg, idx, wl,
+                                           model_ids=model_ids, aux=aux):
+                    _fold_flush(s, *out)
+            _retire(c)
+            continue
+        with jax.default_device(_shard.shard_device(devs, s)):
+            pending = dispatch_chunk(cfg, wl, cost_model,
+                                     pad_to=chunk_size,
+                                     model_ids=model_ids)
+        inflight.append((c, s, pending, idx, mids, codes))
+        while len(inflight) >= cap:
+            _retire(_finish_one())
+    while inflight:
+        _retire(_finish_one())
+    if engage and completed:
+        for s in range(n_shards):
+            for out in pruners[s].finish():
+                _fold_flush(s, *out)
+    _snapshot()
+
+    merged_best: dict = {}
+    for b in bests:
+        _merge_best(merged_best, b)
+    merged_stats = _shard.merge_budget_stats(stats) \
+        if stats is not None else None
+    return CoexploreFront(archive=_merged_archive(), models=models,
+                          space=space, metrics=COEXPLORE_METRICS,
+                          per_model_best=merged_best,
+                          points_evaluated=sum(totals),
+                          buckets=buckets_meta, budget=budget,
+                          budget_stats=merged_stats)
 
 
 def lightpe_claim(front: CoexploreFront) -> dict:

@@ -287,6 +287,25 @@ class BudgetStats:
         for name, n in kills.items():
             self.kills[name] = self.kills.get(name, 0) + int(n)
 
+    def merge(self, other: "BudgetStats") -> None:
+        """Fold another accumulator into this one (sharded walks sum
+        their per-shard stats; every field is an additive count, so the
+        merge is associative and order-free)."""
+        self.evaluated += other.evaluated
+        self.feasible += other.feasible
+        self.pruned += other.pruned
+        self.merge_kills(other.kills)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "BudgetStats":
+        """Rebuild from ``as_dict()`` output (checkpoint restore).  Extra
+        keys — e.g. the derived ``feasible_fraction`` — are ignored."""
+        return cls(evaluated=int(d.get("evaluated", 0)),
+                   feasible=int(d.get("feasible", 0)),
+                   pruned=int(d.get("pruned", 0)),
+                   kills={k: int(v)
+                          for k, v in dict(d.get("kills", {})).items()})
+
     @property
     def feasible_fraction(self) -> float:
         """Feasible share of evaluated points (0.0 before any chunk)."""

@@ -207,14 +207,18 @@ def _network_stage(cfg: AcceleratorConfig, clock_ghz,
     return _network_sums(cfg, clock_ghz, workload.layers)
 
 
-def _evaluate_batch(cfg: AcceleratorConfig, workload: Workload,
-                    model: CostModel,
-                    model_ids: jnp.ndarray | None = None) -> DseResult:
-    power, clock, area, leak = _ppa_stage(model.ppa_fn, model.ppa_params, cfg)
-    del power  # nominal-activity power; the result's power column is
-    #            derived from chip energy over runtime in _finish
-    cost = _network_stage(cfg, clock, workload, model_ids)
-    return _finish(cost, clock, area, leak)
+class PendingChunk(NamedTuple):
+    """An in-flight chunk evaluation: device arrays already DISPATCHED
+    (JAX async dispatch — the host returns before the computation runs)
+    but not yet transferred.  ``finish_chunk`` blocks on the transfer and
+    produces the host ``DseResult``.  The double-buffering handle of the
+    sharded pipeline: dispatch chunk k+1, then finish chunk k while k+1
+    computes."""
+    cost: object                 # dataflow LayerCost sums (device arrays)
+    clock: object                # device arrays from the PPA stage
+    area: object
+    leak: object
+    n: int                       # real (unpadded) lane count
 
 
 def _pad_config(cfg: AcceleratorConfig, pad: int) -> AcceleratorConfig:
@@ -264,6 +268,25 @@ def evaluate_chunk(cfg: AcceleratorConfig,
     shape, stacked depth).  Lane results are bit-identical to evaluating
     each lane under its own unpadded workload.
     """
+    return finish_chunk(dispatch_chunk(cfg, workload, surrogate,
+                                       pad_to=pad_to, model_ids=model_ids))
+
+
+def dispatch_chunk(cfg: AcceleratorConfig,
+                   workload: Workload | StackedWorkload,
+                   surrogate: PPAModels | CostModel | str | None = None,
+                   pad_to: int | None = None,
+                   model_ids=None) -> PendingChunk:
+    """The non-blocking half of ``evaluate_chunk``: validate, pad and
+    DISPATCH the jitted stages, returning device futures immediately.
+
+    JAX dispatches asynchronously, so control returns while the chunk
+    still computes — the caller can dispatch the next chunk (on another
+    device) or do host-side archive work before blocking in
+    ``finish_chunk``.  ``finish_chunk(dispatch_chunk(...))`` is exactly
+    ``evaluate_chunk(...)``; the split exists so the sharded walk can
+    double-buffer.
+    """
     stacked = isinstance(workload, StackedWorkload)
     if stacked != (model_ids is not None):
         raise ValueError("model_ids must be given with a StackedWorkload "
@@ -284,17 +307,30 @@ def evaluate_chunk(cfg: AcceleratorConfig,
                              f"stacked models")
     if n == 0:
         # nothing to evaluate; _pad_config cannot broadcast f[-1:] of an
-        # empty array, so return the canonical empty columns directly
-        # (same contract as evaluate_space's N == 0 path)
-        return _empty_result()
+        # empty array, so finish_chunk returns the canonical empty columns
+        return PendingChunk(None, None, None, None, 0)
     if pad_to is not None and n < pad_to:
         cfg = _pad_config(cfg, pad_to - n)
         if mids is not None:  # padded lanes repeat the last (model, config)
             mids = np.concatenate([mids, np.broadcast_to(mids[-1:],
                                                          (pad_to - n,))])
-    res = _evaluate_batch(cfg, workload, model,
+    power, clock, area, leak = _ppa_stage(model.ppa_fn, model.ppa_params, cfg)
+    del power  # nominal-activity power; the result's power column is
+    #            derived from chip energy over runtime in _finish
+    cost = _network_stage(cfg, clock, workload,
                           None if mids is None else jnp.asarray(mids))
-    return DseResult(*[np.asarray(col[:n], RESULT_DTYPES[f])
+    return PendingChunk(cost, clock, area, leak, n)
+
+
+def finish_chunk(pending: PendingChunk) -> DseResult:
+    """The blocking half of ``evaluate_chunk``: transfer the dispatched
+    device arrays and derive the host float64 columns (``_finish`` — the
+    same single implementation every path shares, so a pipelined chunk is
+    bit-identical to a synchronous one)."""
+    if pending.n == 0:
+        return _empty_result()
+    res = _finish(pending.cost, pending.clock, pending.area, pending.leak)
+    return DseResult(*[np.asarray(col[:pending.n], RESULT_DTYPES[f])
                        for f, col in zip(DseResult._fields, res)])
 
 
@@ -434,6 +470,47 @@ class TwoStagePruner:
         """Drain the final partial buffer (padded to the chunk shape)."""
         yield from self._drain()
 
+    def state_dict(self) -> dict:
+        """The pruner's buffered-survivor state as checkpointable plain
+        data.  The stage-2 fold target (``workload``) is NOT serialized —
+        it is code-side context the caller re-binds on restore."""
+        state = dict(n=int(self._n), mixed=self._model_ids_mode)
+        if self._n:
+            m = self._merged()
+            frag = dict(cfg={f: np.asarray(getattr(m["cfg"], f))
+                             for f in AcceleratorConfig._fields},
+                        clock=m["clock"], area=m["area"], leak=m["leak"],
+                        idx=m["idx"],
+                        aux={k: np.asarray(v) for k, v in m["aux"].items()})
+            if self._model_ids_mode:
+                frag["model_ids"] = m["model_ids"]
+            state["frag"] = frag
+        return state
+
+    def restore_state(self, state: dict, workload) -> None:
+        """Rebuild the survivor buffer from ``state_dict()`` output and
+        re-bind the stage-2 fold target.  ``workload`` must be the same
+        (bit-identical) workload the checkpointed walk was feeding when
+        it saved — the walk drivers record which bucket/model was active
+        and pass its workload here."""
+        self._n = int(state["n"])
+        self._model_ids_mode = state["mixed"]
+        self._workload = workload if self._n else None
+        self._frags = []
+        if self._n:
+            f = state["frag"]
+            frag = dict(cfg=AcceleratorConfig(
+                            **{k: np.asarray(v)
+                               for k, v in f["cfg"].items()}),
+                        clock=np.asarray(f["clock"]),
+                        area=np.asarray(f["area"]),
+                        leak=np.asarray(f["leak"]),
+                        idx=np.asarray(f["idx"], np.int64),
+                        aux={k: np.asarray(v) for k, v in f["aux"].items()})
+            if self._model_ids_mode:
+                frag["model_ids"] = np.asarray(f["model_ids"], np.int32)
+            self._frags = [frag]
+
     def _drain(self):
         while self._n:
             out = self._flush(min(self._n, self.chunk_size))
@@ -555,6 +632,9 @@ def evaluate_space_streaming(
         budget: Budget | None = None,
         budget_stats: BudgetStats | None = None,
         prune: bool = True,
+        shards: int | None = None,
+        devices=None,
+        pipeline_depth: int | None = None,
 ) -> Iterator[tuple[DseResult, np.ndarray]]:
     """Lazily evaluate the cartesian design space chunk-by-chunk.
 
@@ -580,7 +660,22 @@ def evaluate_space_streaming(
     fraction.  Survivor re-packing means yielded chunk boundaries differ
     from the single-stage walk's (the lane set and order do not).
     ``prune=False`` forces the PR 4 single-stage post-evaluation masking.
+
+    ``shards=`` / ``devices=`` / ``pipeline_depth=`` route the walk
+    through the multi-device async pipeline of ``repro.core.shard``
+    (same point set, every lane bit-identical); the defaults keep this
+    single-process generator.
     """
+    if shards is not None or devices is not None:
+        from repro.core import shard as _shard
+        yield from _shard.sharded_space_stream(
+            workload, space, surrogate, chunk_size=chunk_size,
+            max_points=max_points, seed=seed, budget=budget,
+            budget_stats=budget_stats, prune=prune, shards=shards,
+            devices=devices,
+            pipeline_depth=(_shard.DEFAULT_PIPELINE_DEPTH
+                            if pipeline_depth is None else pipeline_depth))
+        return
     model = as_cost_model(surrogate)
     if budget is not None and prune and budget.config_constraints():
         pruner = TwoStagePruner(budget, chunk_size, model, budget_stats)
@@ -782,6 +877,24 @@ class ParetoArchive:
         """Global flat indices of the current front's design points."""
         return self._idx
 
+    def state_dict(self) -> dict:
+        """The archive's complete state as checkpointable plain data
+        (``checkpoint.manager.save_state`` consumes this directly)."""
+        return dict(objectives=self._obj.copy(), indices=self._idx.copy(),
+                    seen=int(self._seen))
+
+    @classmethod
+    def from_state(cls, state: dict) -> "ParetoArchive":
+        """Rebuild an archive from ``state_dict()`` output.  The restored
+        archive continues bit-identically: front row order is part of the
+        state, and ``update`` only ever appends/evicts rows."""
+        obj = np.asarray(state["objectives"], np.float64)
+        archive = cls(obj.shape[1])
+        archive._obj = obj
+        archive._idx = np.asarray(state["indices"], np.int64)
+        archive._seen = int(state["seen"])
+        return archive
+
     @staticmethod
     def _chunk_front_mask(obj: np.ndarray, block: int = 512) -> np.ndarray:
         """Exact non-dominated mask of one chunk, bounded memory/compute.
@@ -874,6 +987,13 @@ def pareto_front_streaming(
         budget: Budget | None = None,
         budget_stats: BudgetStats | None = None,
         prune: bool = True,
+        shards: int | None = None,
+        devices=None,
+        pipeline_depth: int | None = None,
+        checkpoint_dir: str | None = None,
+        checkpoint_every: int = 64,
+        csv_path: str | None = None,
+        max_chunks: int | None = None,
 ) -> tuple[ParetoArchive, AcceleratorConfig]:
     """Pareto front of an arbitrarily large design space in O(chunk) memory.
 
@@ -889,7 +1009,36 @@ def pareto_front_streaming(
     with config-stage bounds run two-stage by default (see
     ``evaluate_space_streaming``); ``prune=False`` keeps the single-stage
     post-evaluation masking path.
+
+    GIGA-SCALE knobs (all default-off; any of them routes the walk
+    through ``repro.core.shard.sharded_pareto_front``, whose front is
+    bit-identical — indices AND objectives — to this single-process
+    fold):
+
+    * ``shards`` / ``devices`` / ``pipeline_depth`` — round-robin the
+      chunk sequence over per-device archives with async double
+      buffering.
+    * ``checkpoint_dir`` / ``checkpoint_every`` — atomic walk-state
+      snapshots every N chunks; an existing checkpoint in the directory
+      RESUMES the walk automatically.
+    * ``csv_path`` — stream the decoded front to CSV as it evolves.
+    * ``max_chunks`` — truncate after that many chunks (preemption for
+      kill/resume tests; returns the partial front after a checkpoint).
     """
+    if (shards is not None or devices is not None
+            or checkpoint_dir is not None or csv_path is not None
+            or max_chunks is not None):
+        from repro.core import shard as _shard
+        return _shard.sharded_pareto_front(
+            workload, space, metrics=metrics, surrogate=surrogate,
+            chunk_size=chunk_size, max_points=max_points, seed=seed,
+            budget=budget, budget_stats=budget_stats, prune=prune,
+            shards=shards, devices=devices,
+            pipeline_depth=(_shard.DEFAULT_PIPELINE_DEPTH
+                            if pipeline_depth is None else pipeline_depth),
+            checkpoint_dir=checkpoint_dir,
+            checkpoint_every=checkpoint_every, csv_path=csv_path,
+            max_chunks=max_chunks)
     archive = ParetoArchive(len(metrics))
     for res, idx in evaluate_space_streaming(
             workload, space, surrogate=surrogate, chunk_size=chunk_size,

@@ -162,16 +162,37 @@ def surrogate_ppa(params, cfg: AcceleratorConfig):
     Lanes of an unfitted PE type are NOT handled here (a jitted function
     cannot raise on data): callers must pre-check with
     ``PPAModels.validate`` — the backend layer does this on every chunk.
+
+    SHARED DESIGN MATRIX: ``monomial_exponents`` orders the basis by
+    ``(total degree, lex)``, so a degree-d monomial set is a PREFIX of
+    any higher-degree set over the same features.  When a PE type's
+    three targets standardize identically (they always do — one fit
+    sample per type) its entry carries ONE max-degree basis
+    (``{"exps", "mu", "sigma", "targets"}``; see
+    ``PPAModels.ppa_params``), the design matrix is evaluated once per
+    type, and each target contracts its leading ``len(coef)`` columns —
+    bit-identical to evaluating its own smaller matrix (column values
+    are elementwise in the basis and the contraction covers the same
+    terms in the same order), at a third of the basis-evaluation cost.
+    Legacy per-target entries (``{target: (exps, mu, sigma, coef,
+    log)}``) still evaluate their own matrices.
     """
     x = config_features(cfg)
     pt = jnp.atleast_1d(cfg.pe_type)
     pos = params["pos"][pt]                         # (N,) stack row per lane
+    shared = [design_matrix(x, e["exps"], e["mu"], e["sigma"])
+              if "targets" in e else None
+              for e in params["types"]]             # one basis per PE type
     out = []
     for t in TARGETS:
         preds = []
-        for entry in params["types"]:
-            exps, mu, sigma, coef, log = entry[t]
-            v = design_matrix(x, exps, mu, sigma) @ coef
+        for entry, a in zip(params["types"], shared):
+            if a is not None:
+                coef, log = entry["targets"][t]
+                v = a[:, :coef.shape[0]] @ coef     # prefix-sliced basis
+            else:
+                exps, mu, sigma, coef, log = entry[t]
+                v = design_matrix(x, exps, mu, sigma) @ coef
             preds.append(jnp.where(log, jnp.exp(v), v))
         stacked = jnp.stack(preds)                  # (fitted types, N)
         out.append(jnp.take_along_axis(stacked, pos[None, :], axis=0)[0])
@@ -198,6 +219,39 @@ def _ppa_stage_jit():
     """
     from repro.core.dse import _ppa_stage
     return _ppa_stage
+
+
+def _pack_type_entry(ms: Dict[str, "PolyModel"]) -> dict:
+    """One PE type's targets as a ``surrogate_ppa`` params entry.
+
+    Shared layout (the fast path) when every target standardized on the
+    same features (equal mu/sigma) AND every target's exponent set is a
+    prefix of the widest one — guaranteed by ``monomial_exponents``'s
+    ``(total degree, lex)`` ordering for fits over a common sample, which
+    is how ``fit_ppa_models`` always fits.  Falls back to the legacy
+    per-target layout (own basis per target) for hand-assembled models
+    that break either property, so exotic ``PPAModels`` keep working.
+    """
+    mx = max(ms.values(), key=lambda m: int(np.asarray(m.exps).shape[0]))
+    shareable = all(
+        np.array_equal(np.asarray(m.mu), np.asarray(mx.mu))
+        and np.array_equal(np.asarray(m.sigma), np.asarray(mx.sigma))
+        and np.array_equal(np.asarray(m.exps),
+                           np.asarray(mx.exps)[:np.asarray(m.exps).shape[0]])
+        for m in ms.values())
+    if not shareable:
+        return {t: (jnp.asarray(m.exps, jnp.int32),
+                    jnp.asarray(m.mu, jnp.float32),
+                    jnp.asarray(m.sigma, jnp.float32),
+                    jnp.asarray(m.coef, jnp.float32),
+                    jnp.asarray(m.log_target))
+                for t, m in ms.items()}
+    return {"exps": jnp.asarray(mx.exps, jnp.int32),
+            "mu": jnp.asarray(mx.mu, jnp.float32),
+            "sigma": jnp.asarray(mx.sigma, jnp.float32),
+            "targets": {t: (jnp.asarray(m.coef, jnp.float32),
+                            jnp.asarray(m.log_target))
+                        for t, m in ms.items()}}
 
 
 @dataclass
@@ -240,11 +294,15 @@ class PPAModels:
 
         ``pos`` maps a PE-type code to its row in the stacked per-type
         predictions (unfitted codes point at row 0 — ``validate`` keeps
-        them out of any evaluated chunk); ``types`` holds, per fitted
-        type in code order, the ``(exps, mu, sigma, coef, log_target)``
-        tuple of each target's selected polynomial.  The arrays are
-        device-resident and reused across chunks, so feeding the same
-        ``PPAModels`` to a streaming walk never re-uploads coefficients.
+        them out of any evaluated chunk); ``types`` holds one entry per
+        fitted type in code order, packed by ``_pack_type_entry``: the
+        shared max-degree basis (``exps``/``mu``/``sigma``) plus each
+        target's ``(coef, log_target)`` when the three targets can share
+        a design matrix (always true for ``fit_ppa_models`` output), or
+        the legacy per-target ``(exps, mu, sigma, coef, log_target)``
+        tuples when they cannot.  The arrays are device-resident and
+        reused across chunks, so feeding the same ``PPAModels`` to a
+        streaming walk never re-uploads coefficients.
         """
         if self._params is None:
             fitted = [(code, name) for code, name in enumerate(PE_TYPE_NAMES)
@@ -255,12 +313,7 @@ class PPAModels:
             types = []
             for row, (code, name) in enumerate(fitted):
                 pos[code] = row
-                types.append({t: (jnp.asarray(m.exps, jnp.int32),
-                                  jnp.asarray(m.mu, jnp.float32),
-                                  jnp.asarray(m.sigma, jnp.float32),
-                                  jnp.asarray(m.coef, jnp.float32),
-                                  jnp.asarray(m.log_target))
-                              for t, m in self.models[name].items()})
+                types.append(_pack_type_entry(self.models[name]))
             self._params = {"pos": jnp.asarray(pos), "types": tuple(types)}
         return self._params
 

@@ -1,5 +1,11 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# Append, never clobber: an unconditional assignment here used to wipe any
+# XLA_FLAGS the caller exported (dumping/debug flags, a CI-chosen virtual
+# device count).  Respect an existing device-count choice too.
+_flags = os.environ.get("XLA_FLAGS", "")
+if "--xla_force_host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = (_flags + " " if _flags else "") + \
+        "--xla_force_host_platform_device_count=512"
 
 """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
 

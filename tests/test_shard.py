@@ -1,0 +1,441 @@
+"""Giga-scale sweep machinery: sharded multi-device walks bit-identical
+to the single-process fold (all three walks, with/without budgets and
+two-stage pruning, both backends), async pipeline depth invariance,
+checkpoint kill/resume exactness, template-free state round-trips, the
+shared PPA design matrix, and the XLA_FLAGS preservation fix."""
+
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # CI images without hypothesis: deterministic fallback
+    from _hypothesis_fallback import given, settings, st
+
+from repro.checkpoint import manager
+from repro.core import (Budget, BudgetStats, ParetoArchive, WIDE_SPACE,
+                        coexplore_front, enumerate_space,
+                        evaluate_space_streaming, fit_ppa_models,
+                        merge_archives, model_entry, pareto_front_streaming,
+                        resnet_cifar, resolve_shards, space_size,
+                        transformer_gemm)
+from repro.core.ppa import (config_features, design_matrix,
+                            monomial_exponents, surrogate_ppa)
+
+TINY_SPACE = dict(
+    pe_rows=(8, 12), pe_cols=(8, 14), gbuf_kb=(54.0,), spad_ifmap=(12,),
+    spad_filter=(112, 224), spad_psum=(16,),
+    pe_type=tuple(range(5)), bandwidth_gbps=(25.6,),
+)
+CHUNK = 16
+METRICS = ("perf_per_area", "neg_energy_j")
+SHARD_COUNTS = (1, 2, 8)
+
+
+@pytest.fixture(scope="module")
+def workload():
+    return resnet_cifar(20)
+
+
+@pytest.fixture(scope="module")
+def tiny_models():
+    return (model_entry(resnet_cifar(20)),
+            model_entry(transformer_gemm(seq=128, d_model=128, n_layers=2,
+                                         n_heads=4, d_ff=256, vocab=1024)))
+
+
+@pytest.fixture(scope="module")
+def ppa_models():
+    return fit_ppa_models(enumerate_space(max_points=500, seed=1),
+                          degrees=(1, 2), k=4)
+
+
+def _assert_front_equal(a_idx, a_obj, b_idx, b_obj):
+    np.testing.assert_array_equal(np.sort(a_idx), np.sort(b_idx))
+    order_a, order_b = np.argsort(a_idx), np.argsort(b_idx)
+    np.testing.assert_array_equal(np.asarray(a_obj)[order_a],
+                                  np.asarray(b_obj)[order_b])
+
+
+def _assert_archives_equal(a, b):
+    _assert_front_equal(a.indices, a.objectives, b.indices, b.objectives)
+
+
+BUDGET = Budget(area_mm2=60.0, power_mw=1e5)
+
+
+# ---------------------------------------------------------------------------
+# Sharded == single-process, bit-identically, on all three walks
+# ---------------------------------------------------------------------------
+
+class TestShardedPlainWalk:
+
+    @pytest.mark.parametrize("shards", SHARD_COUNTS)
+    def test_front_bit_identical(self, workload, shards):
+        ref, _ = pareto_front_streaming(workload, TINY_SPACE,
+                                        chunk_size=CHUNK, metrics=METRICS)
+        got, _ = pareto_front_streaming(workload, TINY_SPACE,
+                                        chunk_size=CHUNK, metrics=METRICS,
+                                        shards=shards)
+        _assert_archives_equal(ref, got)
+
+    @pytest.mark.parametrize("prune", [True, False])
+    @pytest.mark.parametrize("shards", SHARD_COUNTS)
+    def test_budget_walks_match_with_stats(self, workload, shards, prune):
+        """Constrained walks (two-stage pruned and single-stage) shard
+        bit-identically, and per-shard telemetry merges to the exact
+        single-process counts."""
+        s_ref, s_got = BudgetStats(), BudgetStats()
+        ref, _ = pareto_front_streaming(
+            workload, TINY_SPACE, chunk_size=CHUNK, metrics=METRICS,
+            budget=BUDGET, budget_stats=s_ref, prune=prune)
+        got, _ = pareto_front_streaming(
+            workload, TINY_SPACE, chunk_size=CHUNK, metrics=METRICS,
+            budget=BUDGET, budget_stats=s_got, prune=prune, shards=shards)
+        _assert_archives_equal(ref, got)
+        assert s_ref.as_dict() == s_got.as_dict()
+
+    def test_surrogate_backend(self, workload, ppa_models):
+        ref, _ = pareto_front_streaming(workload, TINY_SPACE,
+                                        chunk_size=CHUNK, metrics=METRICS,
+                                        surrogate=ppa_models)
+        got, _ = pareto_front_streaming(workload, TINY_SPACE,
+                                        chunk_size=CHUNK, metrics=METRICS,
+                                        surrogate=ppa_models, shards=8)
+        _assert_archives_equal(ref, got)
+
+    def test_subsampled_point_set_shared(self, workload):
+        """max_points subsampling uses THE shared RNG stream: sharded and
+        unsharded walks visit the exact same subsample."""
+        ref, _ = pareto_front_streaming(workload, TINY_SPACE,
+                                        chunk_size=CHUNK, metrics=METRICS,
+                                        max_points=25, seed=7)
+        got, _ = pareto_front_streaming(workload, TINY_SPACE,
+                                        chunk_size=CHUNK, metrics=METRICS,
+                                        max_points=25, seed=7, shards=2)
+        _assert_archives_equal(ref, got)
+
+    @given(depth=st.integers(min_value=1, max_value=4))
+    @settings(max_examples=4, deadline=None)
+    def test_pipeline_depth_invariant(self, workload, depth):
+        """The async double-buffering depth changes scheduling only —
+        never a single bit of the front."""
+        ref, _ = pareto_front_streaming(workload, TINY_SPACE,
+                                        chunk_size=CHUNK, metrics=METRICS)
+        got, _ = pareto_front_streaming(workload, TINY_SPACE,
+                                        chunk_size=CHUNK, metrics=METRICS,
+                                        shards=2, pipeline_depth=depth)
+        _assert_archives_equal(ref, got)
+
+    def test_streaming_generator_matches(self, workload):
+        """evaluate_space_streaming(shards=) yields the same lane set with
+        the same columns as the single-process generator."""
+        def collect(**kw):
+            rows = {}
+            for res, idx in evaluate_space_streaming(
+                    workload, TINY_SPACE, chunk_size=CHUNK, **kw):
+                for j, i in enumerate(np.asarray(idx)):
+                    rows[int(i)] = (float(res.latency_s[j]),
+                                    float(res.energy_j[j]),
+                                    float(res.area_mm2[j]))
+            return rows
+        assert collect() == collect(shards=4)
+        s_ref, s_got = BudgetStats(), BudgetStats()
+        assert (collect(budget=BUDGET, budget_stats=s_ref)
+                == collect(budget=BUDGET, budget_stats=s_got, shards=3))
+        assert s_ref.as_dict() == s_got.as_dict()
+
+
+class TestShardedJointWalks:
+
+    @pytest.mark.parametrize("mix", [True, False])
+    @pytest.mark.parametrize("shards", SHARD_COUNTS)
+    def test_front_and_aggregates_match(self, tiny_models, shards, mix):
+        ref = coexplore_front(tiny_models, TINY_SPACE, chunk_size=CHUNK,
+                              mix_models=mix)
+        got = coexplore_front(tiny_models, TINY_SPACE, chunk_size=CHUNK,
+                              mix_models=mix, shards=shards)
+        _assert_archives_equal(ref.archive, got.archive)
+        assert ref.per_model_best == got.per_model_best
+        assert ref.points_evaluated == got.points_evaluated
+        assert ref.buckets == got.buckets
+
+    @pytest.mark.parametrize("prune", [True, False])
+    @pytest.mark.parametrize("mix", [True, False])
+    def test_constrained_walks_match(self, tiny_models, mix, prune):
+        bud = Budget(area_mm2=60.0, power_mw=1e5, min_accuracy=0.3)
+        ref = coexplore_front(tiny_models, TINY_SPACE, chunk_size=CHUNK,
+                              mix_models=mix, budget=bud, prune=prune)
+        got = coexplore_front(tiny_models, TINY_SPACE, chunk_size=CHUNK,
+                              mix_models=mix, budget=bud, prune=prune,
+                              shards=4)
+        _assert_archives_equal(ref.archive, got.archive)
+        assert ref.per_model_best == got.per_model_best
+        assert (ref.budget_stats.as_dict() == got.budget_stats.as_dict())
+
+    def test_surrogate_joint(self, tiny_models, ppa_models):
+        ref = coexplore_front(tiny_models, TINY_SPACE, chunk_size=CHUNK,
+                              surrogate=ppa_models, max_points=150, seed=3)
+        got = coexplore_front(tiny_models, TINY_SPACE, chunk_size=CHUNK,
+                              surrogate=ppa_models, max_points=150, seed=3,
+                              shards=8)
+        _assert_archives_equal(ref.archive, got.archive)
+        assert ref.per_model_best == got.per_model_best
+
+
+# ---------------------------------------------------------------------------
+# Durability: kill/resume reproduces the uninterrupted front exactly
+# ---------------------------------------------------------------------------
+
+class TestCheckpointResume:
+
+    @given(kill_after=st.integers(min_value=1, max_value=4))
+    @settings(max_examples=4, deadline=None)
+    def test_plain_walk_resume(self, workload, tmp_path_factory, kill_after):
+        ref, _ = pareto_front_streaming(workload, TINY_SPACE,
+                                        chunk_size=CHUNK, metrics=METRICS)
+        ck = str(tmp_path_factory.mktemp("ck") / "walk")
+        pareto_front_streaming(workload, TINY_SPACE, chunk_size=CHUNK,
+                               metrics=METRICS, shards=2, checkpoint_dir=ck,
+                               checkpoint_every=1, max_chunks=kill_after)
+        n_chunks = -(-space_size(TINY_SPACE) // CHUNK)
+        assert manager.latest_step(ck) == min(kill_after, n_chunks)
+        got, _ = pareto_front_streaming(workload, TINY_SPACE,
+                                        chunk_size=CHUNK, metrics=METRICS,
+                                        shards=2, checkpoint_dir=ck,
+                                        checkpoint_every=1)
+        _assert_archives_equal(ref, got)
+
+    def test_double_kill_then_resume(self, workload, tmp_path):
+        """Two successive preemptions, then completion — still exact."""
+        ref, _ = pareto_front_streaming(workload, TINY_SPACE,
+                                        chunk_size=CHUNK, metrics=METRICS,
+                                        budget=BUDGET)
+        ck = str(tmp_path / "ck")
+        for _ in range(2):
+            pareto_front_streaming(workload, TINY_SPACE, chunk_size=CHUNK,
+                                   metrics=METRICS, budget=BUDGET, shards=2,
+                                   checkpoint_dir=ck, checkpoint_every=1,
+                                   max_chunks=1)
+        s_got = BudgetStats()
+        got, _ = pareto_front_streaming(workload, TINY_SPACE,
+                                        chunk_size=CHUNK, metrics=METRICS,
+                                        budget=BUDGET, budget_stats=s_got,
+                                        shards=2, checkpoint_dir=ck,
+                                        checkpoint_every=1)
+        _assert_archives_equal(ref, got)
+        s_ref = BudgetStats()
+        pareto_front_streaming(workload, TINY_SPACE, chunk_size=CHUNK,
+                               metrics=METRICS, budget=BUDGET,
+                               budget_stats=s_ref)
+        assert s_ref.as_dict() == s_got.as_dict()
+
+    @pytest.mark.parametrize("mix", [True, False])
+    def test_joint_pruned_resume(self, tiny_models, tmp_path, mix):
+        """Mid-walk kill of the constrained PRUNED joint walk — survivor
+        buffers, per-(model, PE) aggregates, counters and kill telemetry
+        all come back bit-exactly."""
+        bud = Budget(area_mm2=60.0, power_mw=1e5, min_accuracy=0.3)
+        ref = coexplore_front(tiny_models, TINY_SPACE, chunk_size=CHUNK,
+                              mix_models=mix, budget=bud)
+        ck = str(tmp_path / "ck")
+        coexplore_front(tiny_models, TINY_SPACE, chunk_size=CHUNK,
+                        mix_models=mix, budget=bud, shards=2,
+                        checkpoint_dir=ck, checkpoint_every=1, max_chunks=3)
+        got = coexplore_front(tiny_models, TINY_SPACE, chunk_size=CHUNK,
+                              mix_models=mix, budget=bud, shards=2,
+                              checkpoint_dir=ck, checkpoint_every=1)
+        _assert_archives_equal(ref.archive, got.archive)
+        assert ref.per_model_best == got.per_model_best
+        assert ref.points_evaluated == got.points_evaluated
+        assert ref.budget_stats.as_dict() == got.budget_stats.as_dict()
+
+    def test_signature_mismatch_rejected(self, workload, tmp_path):
+        ck = str(tmp_path / "ck")
+        pareto_front_streaming(workload, TINY_SPACE, chunk_size=CHUNK,
+                               metrics=METRICS, shards=2, checkpoint_dir=ck,
+                               checkpoint_every=1, max_chunks=1)
+        with pytest.raises(ValueError, match="different sweep"):
+            pareto_front_streaming(workload, TINY_SPACE, chunk_size=CHUNK,
+                                   metrics=METRICS, shards=4,
+                                   checkpoint_dir=ck)
+
+    def test_csv_export(self, workload, tmp_path):
+        csv_path = str(tmp_path / "front.csv")
+        archive, _ = pareto_front_streaming(workload, TINY_SPACE,
+                                            chunk_size=CHUNK,
+                                            metrics=METRICS, shards=2,
+                                            csv_path=csv_path)
+        lines = open(csv_path).read().splitlines()
+        assert lines[0].startswith("index,perf_per_area,neg_energy_j,"
+                                   "pe_type_name,")
+        assert len(lines) == 1 + len(archive.indices)
+        # decoded front columns round-trip exactly (repr floats)
+        first = lines[1].split(",")
+        assert int(first[0]) in set(np.asarray(archive.indices))
+
+
+class TestStateRoundTrips:
+
+    def test_save_load_state(self, tmp_path):
+        state = dict(cursor=5,
+                     arr=np.arange(6, dtype=np.int64).reshape(2, 3),
+                     nested=[dict(x=np.float64(1.5), s="str", b=True,
+                                  none=None), [1, 2.5]])
+        manager.save_state(str(tmp_path), 5, state)
+        step, back = manager.load_state(str(tmp_path))
+        assert step == 5
+        assert back["cursor"] == 5
+        np.testing.assert_array_equal(back["arr"], state["arr"])
+        assert back["arr"].dtype == np.int64
+        assert back["nested"][0] == dict(x=1.5, s="str", b=True, none=None)
+        assert back["nested"][1] == [1, 2.5]
+
+    def test_save_state_keep_k(self, tmp_path):
+        for step in range(5):
+            manager.save_state(str(tmp_path), step, dict(step=step), keep=2)
+        assert manager.all_steps(str(tmp_path)) == [3, 4]
+
+    def test_reserved_key_rejected(self, tmp_path):
+        with pytest.raises(ValueError, match="reserved"):
+            manager.save_state(str(tmp_path), 0, {"__npy__": 1})
+
+    def test_archive_state_round_trip(self):
+        a = ParetoArchive(2)
+        a.update(np.array([[1.0, 0.0], [0.0, 1.0], [0.5, 0.5]]),
+                 np.array([3, 7, 9]))
+        b = ParetoArchive.from_state(a.state_dict())
+        _assert_archives_equal(a, b)
+        assert b._seen == a._seen
+        # restored archive keeps reducing correctly
+        b.update(np.array([[2.0, 2.0]]), np.array([11]))
+        assert list(np.sort(b.indices)) == [11]
+
+    def test_merge_archives_pure_and_exact(self):
+        rng = np.random.default_rng(0)
+        obj = rng.random((40, 2))
+        full = ParetoArchive(2)
+        full.update(obj, np.arange(40))
+        parts = []
+        for s in range(4):
+            p = ParetoArchive(2)
+            p.update(obj[s::4], np.arange(40)[s::4])
+            parts.append(p)
+        sizes = [len(p.indices) for p in parts]
+        merged = merge_archives(parts, 2)
+        _assert_archives_equal(full, merged)
+        assert [len(p.indices) for p in parts] == sizes  # inputs untouched
+
+    def test_resolve_shards(self):
+        n, devs = resolve_shards(None, None)
+        assert n == 1 and len(devs) >= 1
+        n, devs = resolve_shards(8, None)
+        assert n == 8
+        with pytest.raises(ValueError):
+            resolve_shards(0, None)
+
+
+# ---------------------------------------------------------------------------
+# Satellites: shared PPA design matrix, WIDE_SPACE, XLA_FLAGS fix
+# ---------------------------------------------------------------------------
+
+class TestSharedDesignMatrix:
+
+    def test_prefix_property(self):
+        """The (total degree, lex) monomial ordering makes every degree-d
+        set a prefix of any higher-degree set — the invariant the shared
+        design matrix slicing rests on."""
+        for f in (2, 7):
+            e3 = monomial_exponents(f, 3)
+            for d in (0, 1, 2):
+                ed = monomial_exponents(f, d)
+                np.testing.assert_array_equal(ed, e3[:len(ed)])
+
+    def test_params_share_one_basis_per_type(self, ppa_models):
+        params = ppa_models.ppa_params()
+        for entry in params["types"]:
+            assert "targets" in entry  # fit_ppa_models output always shares
+            assert set(entry["targets"]) == {"power_mw", "clock_ghz",
+                                             "area_mm2"}
+
+    @given(seed=st.integers(min_value=0, max_value=5))
+    @settings(max_examples=6, deadline=None)
+    def test_predictions_bit_identical(self, ppa_models, seed):
+        """Sliced shared-basis predictions == each target's own design
+        matrix, bitwise, on random config batches."""
+        cfg = enumerate_space(max_points=64, seed=seed)
+        x = config_features(cfg)
+        preds = {}
+        for name, ms in ppa_models.models.items():
+            for t, m in ms.items():
+                preds[(name, t)] = np.asarray(m.predict(x))
+        import jax.numpy as jnp
+        params = ppa_models.ppa_params()
+        power, clock, area = surrogate_ppa(params, cfg)
+        got = {"power_mw": np.asarray(power), "clock_ghz": np.asarray(clock),
+               "area_mm2": np.asarray(area)}
+        pt = np.atleast_1d(np.asarray(cfg.pe_type)).astype(int)
+        from repro.core import PE_TYPE_NAMES
+        for t, col in got.items():
+            for lane, code in enumerate(pt):
+                name = PE_TYPE_NAMES[code]
+                assert col[lane] == preds[(name, t)][lane], (t, name, lane)
+
+    def test_legacy_fallback_for_unshareable(self):
+        """Hand-assembled models with mismatched standardization fall back
+        to per-target bases and still predict."""
+        from repro.core.ppa import PPAModels, fit_poly
+        x = config_features(enumerate_space(max_points=80, seed=2))
+        y = np.asarray(x).sum(axis=1) + 1.0
+        m1 = fit_poly(x, y, 1)
+        m2 = fit_poly(x[:40], y[:40], 2)  # different mu/sigma
+        models = PPAModels(models={"fp32": dict(power_mw=m1, clock_ghz=m1,
+                                                area_mm2=m2)})
+        params = models.ppa_params()
+        (entry,) = params["types"]
+        assert "targets" not in entry
+        cfg = enumerate_space(dict(pe_rows=(8,), pe_cols=(8,),
+                                   gbuf_kb=(54.0,), spad_ifmap=(12,),
+                                   spad_filter=(112,), spad_psum=(16,),
+                                   pe_type=(0,), bandwidth_gbps=(25.6,)))
+        power, clock, area = surrogate_ppa(params, cfg)
+        assert np.isfinite(np.asarray(power)).all()
+
+
+def test_wide_space_is_giga_scale():
+    assert space_size(WIDE_SPACE) >= 10_000_000
+
+
+def test_xla_flags_preserved():
+    """Importing the launch runners must append the virtual-device flag,
+    never clobber caller-set XLA_FLAGS, and must respect an existing
+    device-count choice."""
+    code = (
+        "import os\n"
+        "os.environ['XLA_FLAGS'] = '--xla_dump_to=/tmp/x'\n"
+        "import ast, importlib.util\n"
+        "for mod in ('repro/launch/perf.py', 'repro/launch/dryrun.py'):\n"
+        "    src = open('src/' + mod).read()\n"
+        "    env = dict(os.environ)\n"
+        "    exec(compile(ast.Module(body=ast.parse(src).body[:3],\n"
+        "         type_ignores=[]), mod, 'exec'), {'os': os})\n"
+        "    flags = os.environ['XLA_FLAGS']\n"
+        "    assert '--xla_dump_to=/tmp/x' in flags, (mod, flags)\n"
+        "    assert '--xla_force_host_platform_device_count=512' in flags\n"
+        "    os.environ['XLA_FLAGS'] = \\\n"
+        "        '--xla_force_host_platform_device_count=8'\n"
+        "    exec(compile(ast.Module(body=ast.parse(src).body[:3],\n"
+        "         type_ignores=[]), mod, 'exec'), {'os': os})\n"
+        "    assert os.environ['XLA_FLAGS'] == \\\n"
+        "        '--xla_force_host_platform_device_count=8', (mod,)\n"
+        "    os.environ['XLA_FLAGS'] = '--xla_dump_to=/tmp/x'\n"
+        "print('ok')\n")
+    out = subprocess.run([sys.executable, "-c", code],
+                         cwd=os.path.join(os.path.dirname(__file__), ".."),
+                         capture_output=True, text=True)
+    assert out.returncode == 0, out.stderr
+    assert "ok" in out.stdout
