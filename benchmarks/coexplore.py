@@ -46,9 +46,8 @@ regression baselines are never compared against surrogate numbers.
 
 from __future__ import annotations
 
-import time
-
-from benchmarks.common import emit, maxrss_mb
+from benchmarks.common import (REGISTRY, emit, maxrss_mb, sweep_telemetry,
+                               sweep_timer)
 from repro.core import (Budget, PE_TYPE_NAMES, coexplore_front,
                         coexplore_report, default_model_set, enumerate_space,
                         fit_ppa_models, trace_count)
@@ -79,16 +78,17 @@ def _make_backend(backend: str):
 
 def run(max_points: int | None = None, backend: str = "oracle"):
     rows = []
+    tel = sweep_telemetry()
     models = default_model_set()
     surrogate = _make_backend(backend)
     tag = "" if backend == "oracle" else f"_{backend}"
     front = None
     for phase in ("cold", "warm"):
         c0 = trace_count()
-        t0 = time.perf_counter()
-        front = coexplore_front(models, max_points=max_points,
-                                surrogate=surrogate)
-        dt = time.perf_counter() - t0
+        with sweep_timer(f"coexplore{tag}_joint_sweep_{phase}") as t:
+            front = coexplore_front(models, max_points=max_points,
+                                    surrogate=surrogate, telemetry=tel)
+        dt = t.seconds
         rows.append(emit(
             f"coexplore{tag}_joint_sweep_{phase}", dt * 1e6,
             f"models={len(models)};points={front.points_evaluated};"
@@ -99,11 +99,12 @@ def run(max_points: int | None = None, backend: str = "oracle"):
     cfront = None
     for phase in ("first", "warm"):
         c0 = trace_count()
-        t0 = time.perf_counter()
-        cfront = coexplore_front(models, max_points=max_points,
-                                 surrogate=surrogate,
-                                 budget=CONSTRAINED_BUDGET)
-        dt = time.perf_counter() - t0
+        with sweep_timer(f"coexplore{tag}_constrained_sweep_{phase}") as t:
+            cfront = coexplore_front(models, max_points=max_points,
+                                     surrogate=surrogate,
+                                     budget=CONSTRAINED_BUDGET,
+                                     telemetry=tel)
+        dt = t.seconds
         stats = cfront.budget_stats
         rows.append(emit(
             f"coexplore{tag}_constrained_sweep_{phase}", dt * 1e6,
@@ -129,12 +130,13 @@ def run(max_points: int | None = None, backend: str = "oracle"):
     tight_spec = "/".join(f"{k}={v:g}" for k, v in TIGHT_BUDGET.spec().items())
     single_pps = None
 
-    def _tight_run(prune):
+    def _tight_run(prune, timer_name):
         c0 = trace_count()
-        t0 = time.perf_counter()
-        tfront = coexplore_front(models, surrogate=surrogate,
-                                 budget=TIGHT_BUDGET, prune=prune)
-        return tfront, time.perf_counter() - t0, trace_count() - c0
+        with sweep_timer(timer_name) as t:
+            tfront = coexplore_front(models, surrogate=surrogate,
+                                     budget=TIGHT_BUDGET, prune=prune,
+                                     telemetry=tel)
+        return tfront, t.seconds, trace_count() - c0
 
     def _tight_row(name, tfront, dt, compiles):
         nonlocal single_pps
@@ -155,15 +157,22 @@ def run(max_points: int | None = None, backend: str = "oracle"):
             f"n_compiles={compiles};"
             f"front={len(tfront.archive)};budget={tight_spec}"))
 
-    _tight_row("tight_singlestage_warm", *_tight_run(prune=False))
-    _tight_row("pruned_sweep_first", *_tight_run(prune=True))
+    _tight_row("tight_singlestage_warm",
+               *_tight_run(prune=False,
+                           timer_name=f"coexplore{tag}_tight_singlestage"))
+    _tight_row("pruned_sweep_first",
+               *_tight_run(prune=True,
+                           timer_name=f"coexplore{tag}_pruned_first"))
     # the guarded warm number is the BEST of two repeats: the 2-CPU CI
     # container shows multi-second allocator/GC stalls right after the
     # memory-heavy benches, and a single sample there flaps the >30%
-    # regression guard on an unchanged engine
-    _tight_row("pruned_sweep_warm",
-               *min((_tight_run(prune=True) for _ in range(2)),
-                    key=lambda r: r[1]))
+    # regression guard on an unchanged engine.  Both repeats observe into
+    # one registry histogram; the row reads its exact .min.
+    warm_name = f"coexplore{tag}_pruned_warm"
+    for _ in range(2):
+        wfront, _, wcompiles = _tight_run(prune=True, timer_name=warm_name)
+    _tight_row("pruned_sweep_warm", wfront,
+               REGISTRY.histogram(f"bench.{warm_name}").min, wcompiles)
     rep = coexplore_report(front)
     rows.append(emit(
         f"coexplore{tag}_joint_space", 0.0,

@@ -1,11 +1,53 @@
-"""Shared benchmark utilities: timing, CSV emission, peak-RSS readout."""
+"""Shared benchmark utilities: timing, CSV emission, RSS readouts — all
+derived from one always-on ``repro.obs`` registry.
+
+Every bench process owns a single module-level ``MetricsRegistry``
+(``REGISTRY``) and a tracer over it (``sweep_telemetry()``).  ``time_call``
+and ``sweep_timer`` feed their raw samples into registry histograms and
+``emit`` snapshots each printed row into a gauge, so the CSV rows and the
+telemetry artifacts are the same numbers by construction — there is no
+separate "bench timing" and "telemetry timing" that can drift.
+
+By default the tracer is registry-only (aggregates + the periodic
+current-RSS gauge; no event buffer, no JSONL) — cheap enough to leave on
+for every run.  ``benchmarks/run.py --telemetry-dir DIR`` upgrades it via
+``configure_telemetry`` to the full tracer: buffered events for the
+Chrome trace plus a streaming ``events.jsonl``.
+"""
 
 from __future__ import annotations
 
+import contextlib
 import resource
 import time
 
 import jax
+
+from repro.obs import Histogram, MetricsRegistry, Tracer
+
+# The process-wide metrics store every bench row derives from.
+REGISTRY = MetricsRegistry()
+
+# Registry-only tracer (no event buffer / JSONL) until configure_telemetry
+# upgrades it.  Passed as ``telemetry=`` into the instrumented walks, so
+# phase attribution and the RSS gauge populate on every bench run.
+_TRACER = Tracer(registry=REGISTRY, record_events=False)
+
+
+def sweep_telemetry() -> Tracer:
+    """The tracer benches pass as ``telemetry=`` into instrumented walks."""
+    return _TRACER
+
+
+def configure_telemetry(out_dir: str) -> Tracer:
+    """Upgrade to the full tracer: buffered events (Chrome trace) plus a
+    streaming ``<out_dir>/events.jsonl``.  Keeps ``REGISTRY`` (aggregates
+    recorded before the upgrade survive).  Returns the new tracer."""
+    global _TRACER
+    import os
+    _TRACER = Tracer(registry=REGISTRY,
+                     jsonl_path=os.path.join(out_dir, "events.jsonl"))
+    return _TRACER
 
 
 def maxrss_mb() -> float:
@@ -13,20 +55,92 @@ def maxrss_mb() -> float:
     return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
 
 
-def time_call(fn, *args, iters: int = 3, warmup: int = 1):
-    """Median wall time (us) of fn(*args) with block_until_ready."""
+def rss_growth_mark() -> int:
+    """Mark the current-RSS gauge position at a phase boundary; pass the
+    mark to ``rss_growth_mb`` to read that phase's RSS growth."""
+    _TRACER.sample_rss(force=True)
+    return len(REGISTRY.gauge("rss_mb").series)
+
+
+def rss_growth_mb(mark: int) -> float:
+    """max-min of the current-RSS gauge since ``mark`` (MB).  Unlike the
+    ``ru_maxrss`` high-water mark this attributes growth to the phase
+    that caused it — the flat-RSS giga-scale assert reads this."""
+    _TRACER.sample_rss(force=True)
+    return REGISTRY.gauge("rss_mb").growth(since_sample=max(0, mark - 1))
+
+
+class Timing(float):
+    """Median wall-µs that still compares/formats as a plain float but
+    carries the full per-iteration distribution (min/median/max, iters).
+    ``emit`` appends ``spread`` to the derived field when handed one."""
+
+    __slots__ = ("min_us", "max_us", "iters")
+
+    def __new__(cls, median_us: float, min_us: float | None = None,
+                max_us: float | None = None, iters: int = 1):
+        self = super().__new__(cls, median_us)
+        self.min_us = float(median_us if min_us is None else min_us)
+        self.max_us = float(median_us if max_us is None else max_us)
+        self.iters = int(iters)
+        return self
+
+    @property
+    def spread(self) -> str:
+        return (f"min_us={self.min_us:.1f};max_us={self.max_us:.1f};"
+                f"iters={self.iters}")
+
+
+def time_call(fn, *args, iters: int = 3, warmup: int = 1,
+              name: str | None = None) -> Timing:
+    """Time fn(*args) with block_until_ready; returns a ``Timing`` whose
+    float value is the median wall-µs (drop-in for the old float return)
+    with min/max/iters riding along.  With ``name`` the raw per-iteration
+    seconds also land in registry histogram ``bench.<name>``."""
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
-    times = []
+    h = Histogram()
+    reg_h = REGISTRY.histogram(f"bench.{name}") if name else None
     for _ in range(iters):
         t0 = time.perf_counter()
         jax.block_until_ready(fn(*args))
-        times.append((time.perf_counter() - t0) * 1e6)
-    times.sort()
-    return times[len(times) // 2]
+        dt = time.perf_counter() - t0
+        h.observe(dt)
+        if reg_h is not None:
+            reg_h.observe(dt)
+    return Timing(h.quantile(0.5) * 1e6, h.min * 1e6, h.max * 1e6, h.count)
+
+
+class _SweepTiming:
+    """Filled in when the ``sweep_timer`` block exits."""
+
+    __slots__ = ("seconds",)
+
+    def __init__(self):
+        self.seconds = 0.0
+
+
+@contextlib.contextmanager
+def sweep_timer(name: str):
+    """Time one sweep phase: ``with sweep_timer("dse_n27k_warm") as t:``
+    then read ``t.seconds``.  The duration lands in registry histogram
+    ``bench.<name>`` and (when events are on) as a ``bench`` lane span in
+    the Chrome trace, so the printed row and the trace agree exactly."""
+    tm = _SweepTiming()
+    t0 = time.perf_counter_ns()
+    try:
+        yield tm
+    finally:
+        end = time.perf_counter_ns()
+        tm.seconds = (end - t0) / 1e9
+        _TRACER.complete(name, t0, end, cat="bench")
 
 
 def emit(name: str, us_per_call: float, derived: str) -> str:
+    if isinstance(us_per_call, Timing) and us_per_call.iters > 1:
+        derived = f"{derived};{us_per_call.spread}" if derived \
+            else us_per_call.spread
+    REGISTRY.gauge(f"row.{name}").set(float(us_per_call))
     row = f"{name},{us_per_call:.1f},{derived}"
     print(row, flush=True)
     return row

@@ -13,8 +13,15 @@ counted by ``n_compiles``) and a warm pass reusing the compiled
 evaluator — because compile time dominates small runs and used to make
 the reported throughput look 8x worse than the engine's steady state.
 
-Peak memory is the process high-water mark (ru_maxrss); sizes run in
-increasing order, so a bounded-memory engine shows a near-flat column.
+Peak memory is reported two ways: ``peak_rss_mb`` is the process
+high-water mark (ru_maxrss) — monotone by construction, so sizes run in
+increasing order and a bounded-memory engine shows a near-flat column —
+and ``rss_growth_mb`` is the CURRENT-RSS growth across just that sweep,
+read from the telemetry ``rss_mb`` gauge (``benchmarks/common``).  The
+gauge attributes growth to the phase that caused it, which the high-water
+mark cannot; the giga-scale rows ASSERT near-flat growth
+(``GIGA_RSS_GROWTH_LIMIT_MB``, override via BENCH_GIGA_RSS_LIMIT_MB) —
+the O(chunk + front) memory claim, now machine-checked.
 
 The SHARDED rows drive the ``repro.core.shard`` multi-device pipeline:
 ``dse_scale_sharded_{cold,warm}`` run the warm-up grid with 8 shards
@@ -29,16 +36,24 @@ claim at giga scale.
 
 from __future__ import annotations
 
-import time
+import os
 
 import jax
 import numpy as np
 
-from benchmarks.common import emit, maxrss_mb
+from benchmarks.common import (emit, maxrss_mb, rss_growth_mark,
+                               rss_growth_mb, sweep_telemetry, sweep_timer)
 from repro.core import (DEFAULT_CHUNK_SIZE, DEFAULT_SPACE, PAPER_WORKLOADS,
                         ParetoArchive, WIDE_SPACE, enumerate_space,
                         evaluate_space, pareto_front_streaming, pareto_mask,
                         space_size, trace_count)
+
+# Flat-RSS budget for the >= 10M-point WIDE_SPACE rows: current-RSS growth
+# across the whole giga walk must stay under this (the 216k row already
+# paid the compile/allocator warm-up, so the giga walk itself should only
+# grow by transient chunk buffers).
+GIGA_RSS_GROWTH_LIMIT_MB = float(os.environ.get(
+    "BENCH_GIGA_RSS_LIMIT_MB", 300.0))
 
 # DEFAULT_SPACE is 5*5*4*2*3*3*5*3 = 27,000; refining the PE-array and
 # gbuf axes gives 10*10*8*2*3*3*5*3 = 216,000.
@@ -71,6 +86,7 @@ def _oracle_check(wl, max_points: int) -> bool:
 
 def run(sizes: tuple = (3000, 27000, 216000), giga: bool = True):
     rows = []
+    tel = sweep_telemetry()
     wl = PAPER_WORKLOADS["resnet20-cifar10"]()
     n_oracle = min(3000, min(sizes))
     rows.append(emit(
@@ -86,15 +102,19 @@ def run(sizes: tuple = (3000, 27000, 216000), giga: bool = True):
         total = space_size(space) if mp is None else mp
         for phase in ("cold", "warm"):
             c0 = trace_count()
-            t0 = time.perf_counter()
-            archive, _front_cfg = pareto_front_streaming(
-                wl, space=space, chunk_size=DEFAULT_CHUNK_SIZE, max_points=mp)
-            dt = time.perf_counter() - t0
+            mark = rss_growth_mark()
+            with sweep_timer(f"dse_scale_n{total}_{phase}") as t:
+                archive, _front_cfg = pareto_front_streaming(
+                    wl, space=space, chunk_size=DEFAULT_CHUNK_SIZE,
+                    max_points=mp, telemetry=tel)
+            dt = t.seconds
             rows.append(emit(
                 f"dse_scale_n{total}_{phase}", dt * 1e6,
                 f"points_per_sec={total / dt:.0f};front={len(archive)};"
                 f"n_compiles={trace_count() - c0};"
-                f"peak_rss_mb={maxrss_mb():.0f};chunk={DEFAULT_CHUNK_SIZE}"))
+                f"peak_rss_mb={maxrss_mb():.0f};"
+                f"rss_growth_mb={rss_growth_mb(mark):.0f};"
+                f"chunk={DEFAULT_CHUNK_SIZE}"))
 
     # Sharded multi-device walk at the warm-up size (the guarded row):
     # 8 shards round-robined over however many devices JAX exposes — the
@@ -103,11 +123,11 @@ def run(sizes: tuple = (3000, 27000, 216000), giga: bool = True):
     n_sharded = min(3000, min(sizes))
     devices = jax.device_count()
     for phase in ("cold", "warm"):
-        t0 = time.perf_counter()
-        archive, _ = pareto_front_streaming(
-            wl, chunk_size=DEFAULT_CHUNK_SIZE, max_points=n_sharded,
-            shards=8)
-        dt = time.perf_counter() - t0
+        with sweep_timer(f"dse_scale_sharded_{phase}") as t:
+            archive, _ = pareto_front_streaming(
+                wl, chunk_size=DEFAULT_CHUNK_SIZE, max_points=n_sharded,
+                shards=8, telemetry=tel)
+        dt = t.seconds
         rows.append(emit(
             f"dse_scale_sharded_{phase}", dt * 1e6,
             f"points={n_sharded};points_per_sec={n_sharded / dt:.0f};"
@@ -116,19 +136,29 @@ def run(sizes: tuple = (3000, 27000, 216000), giga: bool = True):
 
     if giga:
         # The >= 10M-point WIDE_SPACE sweep: O(chunk + front) memory means
-        # peak_rss_mb stays near the 216k row's despite 51x the points.
+        # peak_rss_mb stays near the 216k row's despite 51x the points,
+        # and the current-RSS gauge growth across the walk stays under
+        # GIGA_RSS_GROWTH_LIMIT_MB (asserted).
         total = space_size(WIDE_SPACE)
         for shards in (1, 8):
-            t0 = time.perf_counter()
-            archive, _ = pareto_front_streaming(
-                wl, space=WIDE_SPACE, chunk_size=DEFAULT_CHUNK_SIZE,
-                shards=shards)
-            dt = time.perf_counter() - t0
+            mark = rss_growth_mark()
+            with sweep_timer(f"dse_scale_giga_shard{shards}") as t:
+                archive, _ = pareto_front_streaming(
+                    wl, space=WIDE_SPACE, chunk_size=DEFAULT_CHUNK_SIZE,
+                    shards=shards, telemetry=tel)
+            dt = t.seconds
+            growth = rss_growth_mb(mark)
             rows.append(emit(
                 f"dse_scale_giga_n{total}_shard{shards}", dt * 1e6,
                 f"points={total};points_per_sec={total / dt:.0f};"
                 f"front={len(archive)};shards={shards};devices={devices};"
-                f"peak_rss_mb={maxrss_mb():.0f};chunk={DEFAULT_CHUNK_SIZE}"))
+                f"peak_rss_mb={maxrss_mb():.0f};"
+                f"rss_growth_mb={growth:.0f};chunk={DEFAULT_CHUNK_SIZE}"))
+            assert growth < GIGA_RSS_GROWTH_LIMIT_MB, (
+                f"giga-scale sweep (shards={shards}) grew RSS by "
+                f"{growth:.0f} MB > {GIGA_RSS_GROWTH_LIMIT_MB:.0f} MB — "
+                f"the O(chunk + front) memory claim is broken "
+                f"(BENCH_GIGA_RSS_LIMIT_MB overrides)")
     return rows
 
 

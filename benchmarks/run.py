@@ -12,6 +12,13 @@ throughputs of the unconstrained joint sweep, the constrained
 (area/power-budgeted) sweep and the tight-budget two-stage PRUNED sweep
 are guarded against the values committed in BENCH_dse.json (fails on a
 >30% drop; BENCH_SKIP_REGRESSION=1 skips).
+
+--telemetry-dir DIR turns on full sweep telemetry (benchmarks/common
+``configure_telemetry``) and writes the observability artifacts after the
+benches: ``events.jsonl`` (streamed as the run goes), ``trace.json``
+(chrome://tracing / Perfetto, one lane per shard), ``sweep_report.json``
+(phase attribution) and ``metrics.json`` (every registry aggregate —
+the same registry the CSV rows printed from).
 """
 
 from __future__ import annotations
@@ -100,7 +107,15 @@ def main() -> None:
                          "point counts (CI mode)")
     ap.add_argument("--dse-json", default="BENCH_dse.json",
                     help="where to write the DSE bench rows")
+    ap.add_argument("--telemetry-dir", default=None,
+                    help="write events.jsonl / trace.json / "
+                         "sweep_report.json / metrics.json here")
     args = ap.parse_args()
+
+    from benchmarks import common
+    if args.telemetry_dir:
+        os.makedirs(args.telemetry_dir, exist_ok=True)
+        common.configure_telemetry(args.telemetry_dir)
 
     from benchmarks import (coexplore, dse_scale, dse_transformers,
                             fig2_pe_spread, fig3_ppa_fit, fig4_dse,
@@ -162,6 +177,20 @@ def main() -> None:
         with open(args.dse_json, "w") as f:
             json.dump(dse_rows, f, indent=2)
         print(f"wrote {args.dse_json}", file=sys.stderr)
+
+    if args.telemetry_dir:
+        from repro.obs import (build_sweep_report, write_chrome_trace,
+                               write_sweep_report)
+        tr = common.sweep_telemetry()
+        tr.close()
+        write_chrome_trace(os.path.join(args.telemetry_dir, "trace.json"), tr)
+        write_sweep_report(
+            os.path.join(args.telemetry_dir, "sweep_report.json"),
+            build_sweep_report(tr))
+        with open(os.path.join(args.telemetry_dir, "metrics.json"), "w") as f:
+            json.dump(common.REGISTRY.as_dict(), f, indent=2)
+        print(f"telemetry artifacts in {args.telemetry_dir}",
+              file=sys.stderr)
     if failed:
         print(f"FAILED: {failed}", file=sys.stderr)
         sys.exit(1)

@@ -1,5 +1,8 @@
 """Generate EXPERIMENTS.md markdown tables from results/*.json and
-BENCH_dse.json (``bench_dse`` mode, e.g. the ``coexplore`` section)."""
+BENCH_dse.json (``bench_dse`` mode, e.g. the ``coexplore`` section), plus
+the telemetry attribution table (``sweep_report`` mode) from a
+sweep_report.json written by ``benchmarks.run --telemetry-dir`` or
+``repro.obs.write_sweep_report``."""
 import glob, json, os, sys
 sys.path.insert(0, "src")
 
@@ -164,6 +167,15 @@ def bench_dse_table(section=None, path="BENCH_dse.json"):
                 else _generic_bench_table(entries))
     return out
 
+def sweep_report_table(path="telemetry/sweep_report.json"):
+    """Markdown attribution table of one telemetry run: which host-side
+    phase (decode/dispatch/device-wait/archive/checkpoint/...) the wall
+    clock went to, p50/p99 per phase, compile buckets and RSS — the
+    ``repro.obs.SweepReport`` renderer over a saved report."""
+    from repro.obs import load_sweep_report
+    return load_sweep_report(path).render().splitlines()
+
+
 if __name__ == "__main__":
     which = sys.argv[1]
     if which == "dryrun":
@@ -175,3 +187,5 @@ if __name__ == "__main__":
     elif which == "bench_dse":
         print("\n".join(bench_dse_table(
             sys.argv[2] if len(sys.argv) > 2 else None)))
+    elif which == "sweep_report":
+        print("\n".join(sweep_report_table(*sys.argv[2:3])))

@@ -29,7 +29,21 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import as_tracer
+
 _STEP_RE = re.compile(r"^step_(\d+)$")
+
+
+def _dir_bytes(path: str) -> int:
+    """Total on-disk size of a checkpoint directory (telemetry arg)."""
+    total = 0
+    for root, _dirs, files in os.walk(path):
+        for fn in files:
+            try:
+                total += os.path.getsize(os.path.join(root, fn))
+            except OSError:
+                pass
+    return total
 
 
 def _flatten(tree) -> dict:
@@ -42,8 +56,10 @@ def _flatten(tree) -> dict:
 
 
 def save(ckpt_dir: str, step: int, params, opt_state=None,
-         extra: Optional[dict] = None, keep: int = 3) -> str:
+         extra: Optional[dict] = None, keep: int = 3,
+         telemetry=None) -> str:
     """Write one checkpoint atomically; returns the final path."""
+    tr = as_tracer(telemetry)
     os.makedirs(ckpt_dir, exist_ok=True)
     tmp = os.path.join(ckpt_dir, f"tmp.{step}")
     final = os.path.join(ckpt_dir, f"step_{step}")
@@ -51,30 +67,36 @@ def save(ckpt_dir: str, step: int, params, opt_state=None,
         shutil.rmtree(tmp)
     os.makedirs(tmp)
 
-    manifest = {"step": step, "extra": extra or {}, "arrays": {}}
-    for group, tree in (("params", params), ("opt", opt_state)):
-        if tree is None:
-            continue
-        os.makedirs(os.path.join(tmp, group), exist_ok=True)
-        for key, leaf in _flatten(tree).items():
-            arr = np.asarray(jax.device_get(leaf))
-            fn = key.replace("/", "__") + ".npy"
-            np.save(os.path.join(tmp, group, fn), arr)
-            manifest["arrays"].setdefault(group, []).append(key)
-    with open(os.path.join(tmp, "manifest.json"), "w") as f:
-        json.dump(manifest, f)
+    with tr.span("save", cat="checkpoint", step=step):
+        manifest = {"step": step, "extra": extra or {}, "arrays": {}}
+        for group, tree in (("params", params), ("opt", opt_state)):
+            if tree is None:
+                continue
+            os.makedirs(os.path.join(tmp, group), exist_ok=True)
+            for key, leaf in _flatten(tree).items():
+                arr = np.asarray(jax.device_get(leaf))
+                fn = key.replace("/", "__") + ".npy"
+                np.save(os.path.join(tmp, group, fn), arr)
+                manifest["arrays"].setdefault(group, []).append(key)
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
 
-    if os.path.exists(final):
-        shutil.rmtree(final)
-    os.rename(tmp, final)          # atomic publish
-    _gc(ckpt_dir, keep)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)          # atomic publish
+    if tr.enabled:
+        tr.observe("checkpoint.bytes", _dir_bytes(final))
+    _gc(ckpt_dir, keep, telemetry=telemetry)
     return final
 
 
-def _gc(ckpt_dir: str, keep: int) -> None:
+def _gc(ckpt_dir: str, keep: int, telemetry=None) -> None:
+    tr = as_tracer(telemetry)
     steps = sorted(all_steps(ckpt_dir))
     for s in steps[:-keep] if keep > 0 else []:
         shutil.rmtree(os.path.join(ckpt_dir, f"step_{s}"), ignore_errors=True)
+        tr.instant("gc_removed", cat="checkpoint", level="warning",
+                   step=s, keep=keep, dir=ckpt_dir)
 
 
 def all_steps(ckpt_dir: str):
@@ -171,13 +193,19 @@ def _decode_state(node, path: str):
     return node
 
 
-def save_state(ckpt_dir: str, step: int, state, keep: int = 3) -> str:
+def save_state(ckpt_dir: str, step: int, state, keep: int = 3,
+               telemetry=None) -> str:
     """Atomically write a self-describing state checkpoint.
 
     ``state`` is any nesting of dicts (str keys), lists/tuples, numpy/jax
     arrays, and JSON scalars.  Tuples come back as lists.  Returns the
     published ``step_<n>`` path.
+
+    ``telemetry=`` (a ``repro.obs.Tracer``) records the save duration
+    (span ``checkpoint.save`` with the published on-disk byte size) and a
+    warning event for every snapshot the keep-k GC removes.
     """
+    tr = as_tracer(telemetry)
     os.makedirs(ckpt_dir, exist_ok=True)
     tmp = os.path.join(ckpt_dir, f"tmp.{step}")
     final = os.path.join(ckpt_dir, f"step_{step}")
@@ -185,32 +213,41 @@ def save_state(ckpt_dir: str, step: int, state, keep: int = 3) -> str:
         shutil.rmtree(tmp)
     os.makedirs(tmp)
     arrays: dict[str, np.ndarray] = {}
-    tree = _encode_state(state, arrays, "")
-    for key, arr in arrays.items():
-        np.save(os.path.join(tmp, key + ".npy"), arr)
-    with open(os.path.join(tmp, "state.json"), "w") as f:
-        json.dump({"step": step, "state": tree}, f)
-    if os.path.exists(final):
-        shutil.rmtree(final)
-    os.rename(tmp, final)          # atomic publish
-    _gc(ckpt_dir, keep)
+    with tr.span("save", cat="checkpoint", step=step):
+        tree = _encode_state(state, arrays, "")
+        for key, arr in arrays.items():
+            np.save(os.path.join(tmp, key + ".npy"), arr)
+        with open(os.path.join(tmp, "state.json"), "w") as f:
+            json.dump({"step": step, "state": tree}, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)          # atomic publish
+    if tr.enabled:
+        tr.observe("checkpoint.bytes", _dir_bytes(final))
+    _gc(ckpt_dir, keep, telemetry=telemetry)
     return final
 
 
-def load_state(ckpt_dir: str, step: Optional[int] = None):
+def load_state(ckpt_dir: str, step: Optional[int] = None, telemetry=None):
     """Load a ``save_state`` checkpoint (default: the latest step).
 
     Returns ``(step, state)``; ``(None, None)`` if the directory holds no
-    checkpoint.
+    checkpoint.  ``telemetry=`` records the load duration + size (span
+    ``checkpoint.load``).
     """
+    tr = as_tracer(telemetry)
     if step is None:
         step = latest_step(ckpt_dir)
         if step is None:
             return None, None
     path = os.path.join(ckpt_dir, f"step_{step}")
-    with open(os.path.join(path, "state.json")) as f:
-        payload = json.load(f)
-    return payload["step"], _decode_state(payload["state"], path)
+    with tr.span("load", cat="checkpoint", step=step):
+        with open(os.path.join(path, "state.json")) as f:
+            payload = json.load(f)
+        state = _decode_state(payload["state"], path)
+    if tr.enabled:
+        tr.observe("checkpoint.bytes", _dir_bytes(path))
+    return payload["step"], state
 
 
 def restore(ckpt_dir: str, step: int, params_template,

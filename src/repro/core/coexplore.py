@@ -60,7 +60,9 @@ from repro.core.arch import (AcceleratorConfig, PE_TYPE_NAMES, config_rows,
 from repro.core.constraints import Budget, BudgetStats
 from repro.core.costmodel import CostModel, as_cost_model
 from repro.core.dse import (DEFAULT_CHUNK_SIZE, ParetoArchive, TwoStagePruner,
-                            dispatch_chunk, evaluate_chunk, finish_chunk)
+                            _traced_dispatch, _traced_finish, dispatch_chunk,
+                            evaluate_chunk, finish_chunk)
+from repro.obs import as_tracer, timed_iter
 from repro.core.ppa import PPAModels
 from repro.core.workloads import (Workload, layer_bucket, resnet_cifar,
                                   stack_workloads, transformer_gemm, vgg16,
@@ -234,7 +236,8 @@ def coexplore_front(
         checkpoint_dir: str | None = None,
         checkpoint_every: int = 64,
         csv_path: str | None = None,
-        max_chunks: int | None = None) -> CoexploreFront:
+        max_chunks: int | None = None,
+        telemetry=None) -> CoexploreFront:
     """Stream the joint (model x accelerator) space into a 3-objective
     non-dominated archive.
 
@@ -285,6 +288,11 @@ def coexplore_front(
     ``checkpoint_dir``/``checkpoint_every`` snapshot and auto-resume the
     walk state; ``csv_path`` streams the decoded front; ``max_chunks``
     truncates the walk (preemption for kill/resume tests).
+
+    ``telemetry=`` (a ``repro.obs.Tracer``) instruments the walk —
+    decode/dispatch/device-wait/archive spans, budget kill counters,
+    pruner stage split — without touching evaluated values; the front is
+    bit-identical with it on or off.
     """
     models = tuple(models)
     if not models:
@@ -299,7 +307,8 @@ def coexplore_front(
             budget=budget, prune=prune, shards=shards, devices=devices,
             pipeline_depth=pipeline_depth, checkpoint_dir=checkpoint_dir,
             checkpoint_every=checkpoint_every, csv_path=csv_path,
-            max_chunks=max_chunks)
+            max_chunks=max_chunks, telemetry=telemetry)
+    tr = as_tracer(telemetry)
     accuracy = AccuracySurrogate() if accuracy is None else accuracy
     cost_model = as_cost_model(surrogate)
     # (M, n_pe_types) accuracy constants: the per-lane accuracy objective
@@ -313,7 +322,8 @@ def coexplore_front(
     stats = BudgetStats() if budget is not None else None
     engage = (budget is not None and prune
               and bool(budget.config_constraints()))
-    pruner = TwoStagePruner(budget, chunk_size, cost_model, stats) \
+    pruner = TwoStagePruner(budget, chunk_size, cost_model, stats,
+                            telemetry=telemetry) \
         if engage else None
     total = 0
 
@@ -333,26 +343,38 @@ def coexplore_front(
         if budget is not None:
             mask, kills = budget.feasibility(res, accuracy=lane_acc)
             stats.record(mask, kills)
+            if tr.enabled:
+                killed = len(mask) - int(np.count_nonzero(mask))
+                if killed:
+                    tr.counter("budget.killed", killed)
+                for cname, k in kills.items():
+                    if k:
+                        tr.counter(f"budget.kill.{cname}", k)
             if not mask.all():
                 obj, idx = obj[mask], idx[mask]
                 mids, codes = mids[mask], codes[mask]
-        archive.update(obj, idx)
-        _update_per_model_best(per_model_best, models, acc_matrix,
-                               mids, codes, obj)
+        with tr.span("archive"):
+            archive.update(obj, idx)
+            _update_per_model_best(per_model_best, models, acc_matrix,
+                                   mids, codes, obj)
 
     def _fold_flush(res, idx, aux):
         """One fully-feasible two-stage flush -> archive + aggregates."""
         obj = _joint_objectives(res, aux["accuracy"])
-        archive.update(obj, idx)
-        _update_per_model_best(per_model_best, models, acc_matrix,
-                               aux["mids"], aux["codes"], obj)
+        with tr.span("archive"):
+            archive.update(obj, idx)
+            _update_per_model_best(per_model_best, models, acc_matrix,
+                                   aux["mids"], aux["codes"], obj)
 
     def _feed(cfg, idx, workload, mids, codes, model_ids=None):
         """Route one raw chunk through the engaged walk (pruned or not)."""
         nonlocal total
+        if tr.enabled:
+            tr.counter("sweep.points", len(idx))
         if not engage:
-            res = evaluate_chunk(cfg, workload, cost_model,
-                                 pad_to=chunk_size, model_ids=model_ids)
+            pending = _traced_dispatch(tr, cfg, workload, cost_model,
+                                       chunk_size, model_ids=model_ids)
+            res = _traced_finish(tr, pending)
             _fold_chunk(res, idx, mids, codes)
             return
         total += len(idx)
@@ -371,9 +393,10 @@ def coexplore_front(
         # one stacked (M_b, L_b) workload == one compiled evaluator
         bucket_of, group_ids, stacked, local, buckets_meta = \
             _bucket_models(models, layer_buckets)
-        for mids, cfg, idx in iter_joint_space_chunks(
+        for mids, cfg, idx in timed_iter(iter_joint_space_chunks(
                 space, num_models=len(models), chunk_size=chunk_size,
-                max_points=max_points, seed=seed, model_groups=group_ids):
+                max_points=max_points, seed=seed, model_groups=group_ids),
+                tr):
             _feed(cfg, idx, stacked[bucket_of[int(mids[0])]], mids,
                   np.asarray(cfg.pe_type).astype(np.int64),
                   model_ids=local[mids])
@@ -383,9 +406,9 @@ def coexplore_front(
                               per_model_best=per_model_best,
                               points_evaluated=total, buckets=buckets_meta,
                               budget=budget, budget_stats=stats)
-    for m, cfg, idx in iter_joint_space_chunks(
+    for m, cfg, idx in timed_iter(iter_joint_space_chunks(
             space, num_models=len(models), chunk_size=chunk_size,
-            max_points=max_points, seed=seed, group_by_model=True):
+            max_points=max_points, seed=seed, group_by_model=True), tr):
         codes = np.asarray(cfg.pe_type).astype(np.int64)
         _feed(cfg, idx, models[m].workload,
               np.full(len(codes), m, np.int64), codes)
@@ -416,7 +439,7 @@ def _sharded_coexplore_front(
         models: tuple, space, surrogate, accuracy, chunk_size, max_points,
         seed, mix_models, layer_buckets, budget, prune, shards, devices,
         pipeline_depth, checkpoint_dir, checkpoint_every, csv_path,
-        max_chunks) -> CoexploreFront:
+        max_chunks, telemetry=None) -> CoexploreFront:
     """The sharded / async / durable joint walk behind ``coexplore_front``.
 
     Same chunk sequence as the default walk (``iter_joint_space_chunks``
@@ -439,6 +462,7 @@ def _sharded_coexplore_front(
     the walk after a final checkpoint — the preemption primitive.
     """
     from repro.core import shard as _shard
+    tr = as_tracer(telemetry)
     accuracy = AccuracySurrogate() if accuracy is None else accuracy
     cost_model = as_cost_model(surrogate)
     acc_matrix = np.stack([accuracy.predict_per_type(m.name, m.macs,
@@ -476,7 +500,7 @@ def _sharded_coexplore_front(
                 budget=None if budget is None else budget.spec(),
                 space=_shard.space_signature(space),
                 models=[m.name for m in models]))
-        loaded = ckpt.load()
+        loaded = ckpt.load(telemetry=telemetry)
         if loaded is not None:
             cursor = int(loaded["cursor"])
             archives = [ParetoArchive.from_state(a)
@@ -490,7 +514,8 @@ def _sharded_coexplore_front(
             wl_keys = loaded.get("wl_keys")
     pruners = None
     if engage:
-        pruners = [TwoStagePruner(budget, chunk_size, cost_model, stats[s])
+        pruners = [TwoStagePruner(budget, chunk_size, cost_model, stats[s],
+                                  telemetry=telemetry, track=f"shard{s}")
                    for s in range(n_shards)]
         if pruner_states is not None:
             for s, (p, st) in enumerate(zip(pruners, pruner_states)):
@@ -510,18 +535,27 @@ def _sharded_coexplore_front(
         if budget is not None:
             mask, kills = budget.feasibility(res, accuracy=lane_acc)
             stats[s].record(mask, kills)
+            if tr.enabled:
+                killed = len(mask) - int(np.count_nonzero(mask))
+                if killed:
+                    tr.counter("budget.killed", killed)
+                for cname, k in kills.items():
+                    if k:
+                        tr.counter(f"budget.kill.{cname}", k)
             if not mask.all():
                 obj, idx = obj[mask], idx[mask]
                 mids, codes = mids[mask], codes[mask]
-        archives[s].update(obj, idx)
-        _update_per_model_best(bests[s], models, acc_matrix, mids, codes,
-                               obj)
+        with tr.span("archive"):
+            archives[s].update(obj, idx)
+            _update_per_model_best(bests[s], models, acc_matrix, mids,
+                                   codes, obj)
 
     def _fold_flush(s, res, idx, aux):
         obj = _joint_objectives(res, aux["accuracy"])
-        archives[s].update(obj, idx)
-        _update_per_model_best(bests[s], models, acc_matrix,
-                               aux["mids"], aux["codes"], obj)
+        with tr.span("archive"):
+            archives[s].update(obj, idx)
+            _update_per_model_best(bests[s], models, acc_matrix,
+                                   aux["mids"], aux["codes"], obj)
 
     def _state() -> dict:
         st = dict(cursor=cursor,
@@ -541,11 +575,13 @@ def _sharded_coexplore_front(
 
     def _snapshot() -> None:
         if ckpt is not None:
-            ckpt.save(cursor, _state())
+            with tr.span("checkpoint", cursor=cursor):
+                ckpt.save(cursor, _state(), telemetry=telemetry)
         if csv_path is not None:
-            _shard.export_front_csv(csv_path, _merged_archive(),
-                                    COEXPLORE_METRICS, space=space,
-                                    models=models)
+            with tr.span("csv"):
+                _shard.export_front_csv(csv_path, _merged_archive(),
+                                        COEXPLORE_METRICS, space=space,
+                                        models=models)
 
     def _chunks():
         """Normalize both walk modes to (wl_key, workload, model_ids,
@@ -570,10 +606,18 @@ def _sharded_coexplore_front(
     inflight: deque = deque()
     cap = max(1, n_shards * max(1, depth))
     completed = True
+    traced = tr.enabled
 
     def _finish_one() -> int:
         c, s, pending, idx, mids, codes = inflight.popleft()
-        _fold(s, finish_chunk(pending), idx, mids, codes)
+        res = _traced_finish(tr, pending, track=f"shard{s}") \
+            if traced else finish_chunk(pending)
+        if traced:
+            tr.complete("chunk", t_disp[c], tr.now_ns(), cat="pipeline",
+                        track=f"shard{s}", chunk=c)
+            del t_disp[c]
+            tr.gauge("pipeline.in_flight", len(inflight))
+        _fold(s, res, idx, mids, codes)
         return c
 
     def _retire(c: int) -> None:
@@ -582,13 +626,16 @@ def _sharded_coexplore_front(
         if ckpt is not None and ckpt.due(cursor):
             _snapshot()
 
+    t_disp: dict[int, int] = {}
     for c, (wl_key, wl, model_ids, mids, cfg, idx) in enumerate(
-            _chunks(), start=start):
+            timed_iter(_chunks(), tr), start=start):
         if max_chunks is not None and c - start >= max_chunks:
             completed = False
             break
         s = c % n_shards
         codes = np.asarray(cfg.pe_type).astype(np.int64)
+        if traced:
+            tr.counter("sweep.points", len(idx))
         if engage:
             active_keys[s] = wl_key
             totals[s] += len(idx)
@@ -601,10 +648,18 @@ def _sharded_coexplore_front(
             _retire(c)
             continue
         with jax.default_device(_shard.shard_device(devs, s)):
-            pending = dispatch_chunk(cfg, wl, cost_model,
-                                     pad_to=chunk_size,
-                                     model_ids=model_ids)
+            if traced:
+                t_disp[c] = tr.now_ns()
+                pending = _traced_dispatch(tr, cfg, wl, cost_model,
+                                           chunk_size, model_ids=model_ids,
+                                           track=f"shard{s}")
+            else:
+                pending = dispatch_chunk(cfg, wl, cost_model,
+                                         pad_to=chunk_size,
+                                         model_ids=model_ids)
         inflight.append((c, s, pending, idx, mids, codes))
+        if traced:
+            tr.gauge("pipeline.in_flight", len(inflight))
         while len(inflight) >= cap:
             _retire(_finish_one())
     while inflight:
@@ -620,7 +675,9 @@ def _sharded_coexplore_front(
         _merge_best(merged_best, b)
     merged_stats = _shard.merge_budget_stats(stats) \
         if stats is not None else None
-    return CoexploreFront(archive=_merged_archive(), models=models,
+    with tr.span("archive_merge"):
+        merged = _merged_archive()
+    return CoexploreFront(archive=merged, models=models,
                           space=space, metrics=COEXPLORE_METRICS,
                           per_model_best=merged_best,
                           points_evaluated=sum(totals),

@@ -26,6 +26,7 @@ paper's validation story.
 
 from __future__ import annotations
 
+import time
 from functools import partial
 from typing import Iterator, NamedTuple, Sequence
 
@@ -43,6 +44,7 @@ from repro.core.dataflow import layer_cost, reduce_layer_costs
 from repro.core.ppa import PPAModels
 from repro.core.synth import LEAKAGE_MW_PER_MM2
 from repro.core.workloads import StackedWorkload, Workload
+from repro.obs import as_tracer, timed_iter
 
 # Default number of design points evaluated per jit call in the streaming
 # paths. Large enough to amortize dispatch, small enough that a chunk's
@@ -119,6 +121,66 @@ def _count_trace() -> None:
 def _count_ppa_trace() -> None:
     global _PPA_TRACE_COUNT
     _PPA_TRACE_COUNT += 1
+
+
+# -- telemetry glue (repro.obs) ---------------------------------------------
+# Span/phase vocabulary shared by every instrumented walk: ``decode``
+# (mixed-radix chunk decode), ``dispatch`` (jit dispatch of the PPA +
+# dataflow stages), ``device_wait`` (blocking transfer in finish_chunk),
+# ``archive`` (host front reduction), ``checkpoint``, ``prune_stage1`` /
+# ``prune_stage2``.  Compile events piggyback on the trace counters: a
+# dispatch that bumps trace_count/ppa_trace_count charges its duration to
+# histogram ``compile.L<layers>`` — per-layer-bucket compile attribution.
+
+def _compile_mark() -> int:
+    return _TRACE_COUNT + _PPA_TRACE_COUNT
+
+
+def _workload_bucket(workload) -> str:
+    # (M, L) stacked or (L,) plain: the trailing axis is the padded layer
+    # count — exactly the thing the bucketed evaluators compile per.
+    return f"L{int(np.shape(workload.layers.H)[-1])}"
+
+
+def _note_compiles(tr, mark: int, start_ns: int, workload,
+                   track: str | None = None) -> None:
+    """Charge a dispatch that traced new executables to the compile
+    histograms (call right after the dispatch returns)."""
+    if not tr.enabled:
+        return
+    delta = _TRACE_COUNT + _PPA_TRACE_COUNT - mark
+    if not delta:
+        return
+    bucket = _workload_bucket(workload)
+    tr.observe(f"compile.{bucket}",
+               (time.perf_counter_ns() - start_ns) / 1e9)
+    tr.counter("sweep.compiles", delta)
+    tr.instant("compile", bucket=bucket, n_traces=delta, track=track)
+
+
+def _traced_dispatch(tr, cfg, workload, model, pad_to, model_ids=None,
+                     track: str | None = None) -> "PendingChunk":
+    """``dispatch_chunk`` under a ``dispatch`` span + compile detection."""
+    if not tr.enabled:
+        return dispatch_chunk(cfg, workload, model, pad_to=pad_to,
+                              model_ids=model_ids)
+    mark = _compile_mark()
+    t0 = time.perf_counter_ns()
+    with tr.span("dispatch", track=track):
+        pending = dispatch_chunk(cfg, workload, model, pad_to=pad_to,
+                                 model_ids=model_ids)
+    _note_compiles(tr, mark, t0, workload, track=track)
+    return pending
+
+
+def _traced_finish(tr, pending: "PendingChunk",
+                   track: str | None = None) -> "DseResult":
+    """``finish_chunk`` under a ``device_wait`` span (the blocking
+    transfer — in the async pipeline this is where stall time shows)."""
+    if not tr.enabled:
+        return finish_chunk(pending)
+    with tr.span("device_wait", track=track):
+        return finish_chunk(pending)
 
 
 @jax.jit
@@ -380,7 +442,8 @@ class TwoStagePruner:
 
     def __init__(self, budget: Budget, chunk_size: int,
                  model: CostModel | PPAModels | str | None = None,
-                 stats: BudgetStats | None = None):
+                 stats: BudgetStats | None = None,
+                 telemetry=None, track: str | None = None):
         config_cons = budget.config_constraints()
         if not config_cons:
             raise ValueError("TwoStagePruner needs a budget with at least "
@@ -391,6 +454,8 @@ class TwoStagePruner:
         self.chunk_size = int(chunk_size)
         self.model = as_cost_model(model)
         self.stats = stats
+        self._tr = as_tracer(telemetry)
+        self._track = track
         self._config_cons = config_cons
         self._workload_cons = budget.workload_constraints()
         if stats is not None:
@@ -432,19 +497,26 @@ class TwoStagePruner:
             raise ValueError(f"chunk of {n} lanes exceeds the pruner's "
                              f"compiled chunk shape ({self.chunk_size}) — "
                              f"feed chunks at most chunk_size long")
-        self.model.validate(cfg)
-        cfg_p = _pad_config(cfg, self.chunk_size - n) \
-            if n < self.chunk_size else cfg
-        _, clock, area, leak = _ppa_stage(self.model.ppa_fn,
-                                          self.model.ppa_params, cfg_p)
-        clock = np.asarray(clock)[:n]
-        area = np.asarray(area)[:n]
-        leak = np.asarray(leak)[:n]
-        accuracy = None if aux is None else aux.get("accuracy")
-        mask, kills = self.budget.feasibility(
-            _PPAView(area_mm2=area), accuracy=accuracy,
-            constraints=self._config_cons)
+        with self._tr.span("prune_stage1", track=self._track):
+            self.model.validate(cfg)
+            cfg_p = _pad_config(cfg, self.chunk_size - n) \
+                if n < self.chunk_size else cfg
+            _, clock, area, leak = _ppa_stage(self.model.ppa_fn,
+                                              self.model.ppa_params, cfg_p)
+            clock = np.asarray(clock)[:n]
+            area = np.asarray(area)[:n]
+            leak = np.asarray(leak)[:n]
+            accuracy = None if aux is None else aux.get("accuracy")
+            mask, kills = self.budget.feasibility(
+                _PPAView(area_mm2=area), accuracy=accuracy,
+                constraints=self._config_cons)
         kept = int(np.count_nonzero(mask))
+        if self._tr.enabled:
+            if kept < n:
+                self._tr.counter("budget.killed", n - kept)
+            for cname, k in kills.items():
+                if k:
+                    self._tr.counter(f"budget.kill.{cname}", k)
         if self.stats is not None:
             self.stats.record_evaluated(n, kills)
             self.stats.record_pruned(n - kept)
@@ -461,6 +533,8 @@ class TwoStagePruner:
             {k: np.asarray(v)[rows] for k, v in aux.items()}
         self._frags.append(frag)
         self._n += kept
+        if self._tr.enabled:
+            self._tr.gauge("prune.buffered", self._n, track=self._track)
         while self._n >= self.chunk_size:
             out = self._flush(self.chunk_size)
             if out is not None:
@@ -549,6 +623,8 @@ class TwoStagePruner:
                 head[k], tail[k] = v[:count], v[count:]
         self._frags = [tail] if self._n > count else []
         self._n -= count
+        if self._tr.enabled:
+            self._tr.counter("prune.flushes")
         return self._stage2(head, count)
 
     def _stage2(self, lanes: dict, n: int):
@@ -562,9 +638,13 @@ class TwoStagePruner:
             cfg = _pad_config(cfg, pad)
             clock, area, leak = rep(clock), rep(area), rep(leak)
             mids = None if mids is None else rep(mids)
-        cost = _network_stage(cfg, jnp.asarray(clock), self._workload,
-                              None if mids is None else jnp.asarray(mids))
-        full = _finish(cost, clock, area, leak)
+        mark = _compile_mark()
+        t0 = time.perf_counter_ns()
+        with self._tr.span("prune_stage2", track=self._track):
+            cost = _network_stage(cfg, jnp.asarray(clock), self._workload,
+                                  None if mids is None else jnp.asarray(mids))
+            full = _finish(cost, clock, area, leak)
+        _note_compiles(self._tr, mark, t0, self._workload, track=self._track)
         res = DseResult(*[np.asarray(col[:n], RESULT_DTYPES[f])
                           for f, col in zip(DseResult._fields, full)])
         idx, aux = lanes["idx"], lanes["aux"]
@@ -573,6 +653,12 @@ class TwoStagePruner:
             mask, kills = self.budget.feasibility(
                 res, constraints=self._workload_cons)
             kept = int(np.count_nonzero(mask))
+            if self._tr.enabled:
+                if kept < n:
+                    self._tr.counter("budget.killed", n - kept)
+                for cname, k in kills.items():
+                    if k:
+                        self._tr.counter(f"budget.kill.{cname}", k)
             if self.stats is not None:
                 self.stats.merge_kills(kills)
                 self.stats.record_feasible(kept)
@@ -635,6 +721,7 @@ def evaluate_space_streaming(
         shards: int | None = None,
         devices=None,
         pipeline_depth: int | None = None,
+        telemetry=None,
 ) -> Iterator[tuple[DseResult, np.ndarray]]:
     """Lazily evaluate the cartesian design space chunk-by-chunk.
 
@@ -665,7 +752,13 @@ def evaluate_space_streaming(
     through the multi-device async pipeline of ``repro.core.shard``
     (same point set, every lane bit-identical); the defaults keep this
     single-process generator.
+
+    ``telemetry=`` (a ``repro.obs.Tracer``; default off) times decode /
+    dispatch / device-wait / pruner phases and counts walked points,
+    compiles, and budget kills.  Telemetry reads timestamps and host
+    scalars only — yielded chunks are bit-identical with it on or off.
     """
+    tr = as_tracer(telemetry)
     if shards is not None or devices is not None:
         from repro.core import shard as _shard
         yield from _shard.sharded_space_stream(
@@ -674,23 +767,35 @@ def evaluate_space_streaming(
             budget_stats=budget_stats, prune=prune, shards=shards,
             devices=devices,
             pipeline_depth=(_shard.DEFAULT_PIPELINE_DEPTH
-                            if pipeline_depth is None else pipeline_depth))
+                            if pipeline_depth is None else pipeline_depth),
+            telemetry=telemetry)
         return
     model = as_cost_model(surrogate)
     if budget is not None and prune and budget.config_constraints():
-        pruner = TwoStagePruner(budget, chunk_size, model, budget_stats)
-        for cfg, idx in iter_space_chunks(space, chunk_size=chunk_size,
-                                          max_points=max_points, seed=seed):
+        pruner = TwoStagePruner(budget, chunk_size, model, budget_stats,
+                                telemetry=telemetry)
+        for cfg, idx in timed_iter(
+                iter_space_chunks(space, chunk_size=chunk_size,
+                                  max_points=max_points, seed=seed), tr):
+            if tr.enabled:
+                tr.counter("sweep.points", len(idx))
             for res, fidx, _aux in pruner.feed(cfg, idx, workload):
                 yield res, fidx
         for res, fidx, _aux in pruner.finish():
             yield res, fidx
         return
-    for cfg, idx in iter_space_chunks(space, chunk_size=chunk_size,
-                                      max_points=max_points, seed=seed):
-        res = evaluate_chunk(cfg, workload, model, pad_to=chunk_size)
+    for cfg, idx in timed_iter(
+            iter_space_chunks(space, chunk_size=chunk_size,
+                              max_points=max_points, seed=seed), tr):
+        n_raw = len(idx)
+        if tr.enabled:
+            tr.counter("sweep.points", n_raw)
+        pending = _traced_dispatch(tr, cfg, workload, model, chunk_size)
+        res = _traced_finish(tr, pending)
         if budget is not None:
             res, idx = apply_budget(res, idx, budget, stats=budget_stats)
+            if tr.enabled and len(idx) < n_raw:
+                tr.counter("budget.killed", n_raw - len(idx))
             if len(idx) == 0:
                 continue
         yield res, idx
@@ -994,6 +1099,7 @@ def pareto_front_streaming(
         checkpoint_every: int = 64,
         csv_path: str | None = None,
         max_chunks: int | None = None,
+        telemetry=None,
 ) -> tuple[ParetoArchive, AcceleratorConfig]:
     """Pareto front of an arbitrarily large design space in O(chunk) memory.
 
@@ -1024,6 +1130,11 @@ def pareto_front_streaming(
     * ``csv_path`` — stream the decoded front to CSV as it evolves.
     * ``max_chunks`` — truncate after that many chunks (preemption for
       kill/resume tests; returns the partial front after a checkpoint).
+
+    ``telemetry=`` (a ``repro.obs.Tracer``) instruments the walk —
+    decode/dispatch/device-wait/archive/checkpoint spans, pts/s counters,
+    compile and RSS tracking — without touching any evaluated value: the
+    returned front is bit-identical with telemetry on or off.
     """
     if (shards is not None or devices is not None
             or checkpoint_dir is not None or csv_path is not None
@@ -1038,13 +1149,15 @@ def pareto_front_streaming(
                             if pipeline_depth is None else pipeline_depth),
             checkpoint_dir=checkpoint_dir,
             checkpoint_every=checkpoint_every, csv_path=csv_path,
-            max_chunks=max_chunks)
+            max_chunks=max_chunks, telemetry=telemetry)
+    tr = as_tracer(telemetry)
     archive = ParetoArchive(len(metrics))
     for res, idx in evaluate_space_streaming(
             workload, space, surrogate=surrogate, chunk_size=chunk_size,
             max_points=max_points, seed=seed, budget=budget,
-            budget_stats=budget_stats, prune=prune):
-        archive.update(_objective_columns(res, metrics), idx)
+            budget_stats=budget_stats, prune=prune, telemetry=telemetry):
+        with tr.span("archive"):
+            archive.update(_objective_columns(res, metrics), idx)
     return archive, space_points(archive.indices, space)
 
 

@@ -59,7 +59,9 @@ from repro.core.arch import (AcceleratorConfig, PE_TYPE_NAMES, config_rows,
 from repro.core.constraints import Budget, BudgetStats, apply_budget
 from repro.core.costmodel import as_cost_model
 from repro.core.dse import (DEFAULT_CHUNK_SIZE, ParetoArchive, TwoStagePruner,
-                            _objective_columns, dispatch_chunk, finish_chunk)
+                            _objective_columns, _traced_dispatch,
+                            _traced_finish, dispatch_chunk, finish_chunk)
+from repro.obs import NULL_TRACER, as_tracer, timed_iter
 
 # In-flight chunks per shard: 2 = classic double buffering (one chunk
 # computing on device while the previous one's host fold runs).  Deeper
@@ -151,12 +153,12 @@ class SweepCheckpointer:
         self.keep = keep
         self.signature = signature or {}
 
-    def load(self, step: int | None = None) -> dict | None:
+    def load(self, step: int | None = None, telemetry=None) -> dict | None:
         """Latest (or given-step) state, or None for a fresh directory.
         Raises on a signature mismatch — resuming a walk with different
         chunking/space/budget arguments would silently corrupt the front.
         """
-        step, state = _ckpt.load_state(self.dir, step)
+        step, state = _ckpt.load_state(self.dir, step, telemetry=telemetry)
         if state is None:
             return None
         if state.get("signature") != self.signature:
@@ -170,10 +172,10 @@ class SweepCheckpointer:
     def due(self, cursor: int) -> bool:
         return cursor % self.every == 0
 
-    def save(self, cursor: int, state: dict) -> str:
+    def save(self, cursor: int, state: dict, telemetry=None) -> str:
         return _ckpt.save_state(self.dir, cursor,
                                 dict(state, signature=self.signature),
-                                keep=self.keep)
+                                keep=self.keep, telemetry=telemetry)
 
 
 def space_signature(space: dict | None) -> dict:
@@ -232,7 +234,7 @@ def export_front_csv(path: str, archive: ParetoArchive,
 def _sharded_space_events(
         workload, space, model, chunk_size, max_points, seed, budget,
         stats, pruners, shards, devices, pipeline_depth, start_chunk,
-        max_chunks) -> Iterator[tuple]:
+        max_chunks, tracer=NULL_TRACER) -> Iterator[tuple]:
     """The engine: yields ``("chunk", shard, (result, indices))`` for
     every feasible evaluated chunk/flush and ``("retired", shard, c)``
     when raw chunk ``c`` is fully absorbed (its result folded, or its
@@ -244,29 +246,46 @@ def _sharded_space_events(
     pruned shards feed synchronously.  At a ``max_chunks`` truncation the
     in-flight chunks are drained but pruner buffers are NOT (they belong
     in the checkpoint); at natural exhaustion the pruners drain too.
+
+    With an enabled ``tracer`` every chunk's dispatch->retire residency
+    lands as a complete event on its shard's lane (``shard<s>`` — the
+    Chrome-trace view where pipeline overlap is visible), the in-flight
+    depth becomes a gauge, and dispatch/device-wait/decode time is
+    attributed exactly like the single-process walk.
     """
     use_prune = pruners is not None
     cap = max(1, shards * max(1, pipeline_depth))
     inflight: deque = deque()
+    traced = tracer.enabled
 
     def _finish_one():
-        c, s, pending, idx = inflight.popleft()
-        res = finish_chunk(pending)
+        c, s, pending, idx, t_disp = inflight.popleft()
+        res = _traced_finish(tracer, pending, track=f"shard{s}") \
+            if traced else finish_chunk(pending)
+        if traced:
+            tracer.complete("chunk", t_disp, tracer.now_ns(),
+                            cat="pipeline", track=f"shard{s}", chunk=c)
+            tracer.gauge("pipeline.in_flight", len(inflight))
         if budget is not None:
             res, idx = apply_budget(res, idx, budget,
                                     stats=None if stats is None
                                     else stats[s])
+            if traced and len(idx) < pending.n:
+                tracer.counter("budget.killed", pending.n - len(idx))
         return c, s, ((res, idx) if len(idx) else None)
 
     completed = True
-    chunks = iter_space_chunks(space, chunk_size=chunk_size,
-                               max_points=max_points, seed=seed,
-                               start_chunk=start_chunk)
+    chunks = timed_iter(
+        iter_space_chunks(space, chunk_size=chunk_size,
+                          max_points=max_points, seed=seed,
+                          start_chunk=start_chunk), tracer)
     for c, (cfg, idx) in enumerate(chunks, start=start_chunk):
         if max_chunks is not None and c - start_chunk >= max_chunks:
             completed = False
             break
         s = c % shards
+        if traced:
+            tracer.counter("sweep.points", len(idx))
         if use_prune:
             with jax.default_device(shard_device(devices, s)):
                 for res, fidx, _aux in pruners[s].feed(cfg, idx, workload):
@@ -274,9 +293,17 @@ def _sharded_space_events(
             yield "retired", s, c
             continue
         with jax.default_device(shard_device(devices, s)):
-            pending = dispatch_chunk(cfg, workload, model,
-                                     pad_to=chunk_size)
-        inflight.append((c, s, pending, idx))
+            if traced:
+                t_disp = tracer.now_ns()
+                pending = _traced_dispatch(tracer, cfg, workload, model,
+                                           chunk_size, track=f"shard{s}")
+            else:
+                t_disp = 0
+                pending = dispatch_chunk(cfg, workload, model,
+                                         pad_to=chunk_size)
+        inflight.append((c, s, pending, idx, t_disp))
+        if traced:
+            tracer.gauge("pipeline.in_flight", len(inflight))
         while len(inflight) >= cap:
             fc, fs, out = _finish_one()
             if out is not None:
@@ -301,6 +328,7 @@ def sharded_space_stream(
         budget_stats: BudgetStats | None = None, prune: bool = True,
         shards: int | None = None, devices: Sequence | None = None,
         pipeline_depth: int = DEFAULT_PIPELINE_DEPTH,
+        telemetry=None,
 ) -> Iterator[tuple]:
     """Sharded drop-in for ``dse.evaluate_space_streaming``: yields the
     same ``(chunk_result, flat_indices)`` pairs (every lane bit-identical
@@ -308,17 +336,20 @@ def sharded_space_stream(
     pruned flush boundaries follow each shard's survivor re-packing).
     Per-shard budget telemetry is merged into ``budget_stats`` once the
     stream is exhausted."""
+    tr = as_tracer(telemetry)
     n_shards, devs = resolve_shards(shards, devices)
     model = as_cost_model(surrogate)
     use_prune = (budget is not None and prune
                  and bool(budget.config_constraints()))
     stats = [BudgetStats() for _ in range(n_shards)] \
         if budget is not None else None
-    pruners = [TwoStagePruner(budget, chunk_size, model, stats[s])
+    pruners = [TwoStagePruner(budget, chunk_size, model, stats[s],
+                              telemetry=telemetry, track=f"shard{s}")
                for s in range(n_shards)] if use_prune else None
     for kind, _s, payload in _sharded_space_events(
             workload, space, model, chunk_size, max_points, seed, budget,
-            stats, pruners, n_shards, devs, pipeline_depth, 0, None):
+            stats, pruners, n_shards, devs, pipeline_depth, 0, None,
+            tracer=tr):
         if kind == "chunk":
             yield payload
     if budget_stats is not None and stats is not None:
@@ -338,6 +369,7 @@ def sharded_pareto_front(
         checkpoint_dir: str | None = None, checkpoint_every: int = 64,
         checkpoint_keep: int = 3, csv_path: str | None = None,
         max_chunks: int | None = None,
+        telemetry=None,
 ) -> tuple[ParetoArchive, AcceleratorConfig]:
     """Sharded, pipelined, durable ``dse.pareto_front_streaming``.
 
@@ -350,6 +382,7 @@ def sharded_pareto_front(
     kill/resume tests drive.  ``csv_path`` streams the decoded merged
     front at every checkpoint and at completion.
     """
+    tr = as_tracer(telemetry)
     n_shards, devs = resolve_shards(shards, devices)
     model = as_cost_model(surrogate)
     use_prune = (budget is not None and prune
@@ -369,7 +402,7 @@ def sharded_pareto_front(
                 metrics=list(metrics), prune=bool(use_prune),
                 budget=None if budget is None else budget.spec(),
                 space=space_signature(space)))
-        loaded = ckpt.load()
+        loaded = ckpt.load(telemetry=telemetry)
         if loaded is not None:
             cursor = int(loaded["cursor"])
             archives = [ParetoArchive.from_state(a)
@@ -379,7 +412,8 @@ def sharded_pareto_front(
             pruner_states = loaded.get("pruners")
     pruners = None
     if use_prune:
-        pruners = [TwoStagePruner(budget, chunk_size, model, stats[s])
+        pruners = [TwoStagePruner(budget, chunk_size, model, stats[s],
+                                  telemetry=telemetry, track=f"shard{s}")
                    for s in range(n_shards)]
         if pruner_states is not None:
             for p, st in zip(pruners, pruner_states):
@@ -396,19 +430,22 @@ def sharded_pareto_front(
 
     def _snapshot() -> None:
         if ckpt is not None:
-            ckpt.save(cursor, _state())
+            with tr.span("checkpoint", cursor=cursor):
+                ckpt.save(cursor, _state(), telemetry=telemetry)
         if csv_path is not None:
-            export_front_csv(csv_path,
-                             merge_archives(archives, len(metrics)),
-                             metrics, space=space)
+            with tr.span("csv"):
+                export_front_csv(csv_path,
+                                 merge_archives(archives, len(metrics)),
+                                 metrics, space=space)
 
     for kind, s, payload in _sharded_space_events(
             workload, space, model, chunk_size, max_points, seed, budget,
             stats, pruners, n_shards, devs, pipeline_depth, cursor,
-            max_chunks):
+            max_chunks, tracer=tr):
         if kind == "chunk":
             res, idx = payload
-            archives[s].update(_objective_columns(res, metrics), idx)
+            with tr.span("archive"):
+                archives[s].update(_objective_columns(res, metrics), idx)
         else:
             cursor = payload + 1
             if ckpt is not None and ckpt.due(cursor):
@@ -417,7 +454,8 @@ def sharded_pareto_front(
     if budget_stats is not None and stats is not None:
         for st in stats:
             budget_stats.merge(st)
-    merged = merge_archives(archives, len(metrics))
+    with tr.span("archive_merge"):
+        merged = merge_archives(archives, len(metrics))
     return merged, space_points(merged.indices, space)
 
 

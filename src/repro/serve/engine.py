@@ -13,12 +13,14 @@ numerics in tests.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import as_tracer
 from repro.quant import pack as QP
 
 
@@ -116,13 +118,24 @@ class Request:
     max_new: int
     out: list = dataclasses.field(default_factory=list)
     done: bool = False
+    # telemetry stamps (perf_counter seconds; 0.0 = never stamped)
+    t_submit: float = 0.0
+    t_admit: float = 0.0
 
 
 class ServeEngine:
-    """Fixed-slot continuous batching around a model's prefill/decode."""
+    """Fixed-slot continuous batching around a model's prefill/decode.
+
+    ``telemetry=`` (a ``repro.obs.Tracer``; default off) records the
+    ROADMAP item-1 serving metrics: per-request queue latency
+    (``serve.queue_s``) and end-to-end latency (``serve.request_s``, both
+    with p50/p99), prefill/decode step durations, slot occupancy, and a
+    generated-token counter — the p50/p99 source for a query-storm
+    benchmark.
+    """
 
     def __init__(self, cfg, mod, params, batch_slots: int = 8,
-                 max_len: int = 256, enc_out=None):
+                 max_len: int = 256, enc_out=None, telemetry=None):
         self.cfg = cfg
         self.mod = mod
         self.params = params
@@ -131,6 +144,7 @@ class ServeEngine:
         self.cache = mod.init_cache(cfg, batch_slots, max_len, jnp.float32)
         self.slots: List[Optional[Request]] = [None] * batch_slots
         self.queue: List[Request] = []
+        self._tr = as_tracer(telemetry)
         self._decode = jax.jit(
             lambda p, t, c: mod.decode_step(p, t, cfg, c))
         self._prefill = jax.jit(
@@ -138,18 +152,30 @@ class ServeEngine:
 
     def submit(self, prompt: np.ndarray, max_new: int = 16) -> Request:
         req = Request(prompt=np.asarray(prompt), max_new=max_new)
+        if self._tr.enabled:
+            req.t_submit = time.perf_counter()
+            self._tr.counter("serve.requests")
         self.queue.append(req)
         return req
 
     def _admit(self):
         for i in range(self.batch):
             if self.slots[i] is None and self.queue:
-                self.slots[i] = self.queue.pop(0)
+                req = self.queue.pop(0)
+                if self._tr.enabled:
+                    req.t_admit = time.perf_counter()
+                    if req.t_submit:
+                        self._tr.observe("serve.queue_s",
+                                         req.t_admit - req.t_submit)
+                self.slots[i] = req
 
     def step(self):
         """One engine iteration: admit, prefill new, decode one token."""
+        tr = self._tr
         self._admit()
         active = [r for r in self.slots if r is not None]
+        if tr.enabled:
+            tr.gauge("serve.slot_occupancy", len(active) / self.batch)
         if not active:
             return False
         # simple synchronous batch: prompts padded to the same length
@@ -159,23 +185,30 @@ class ServeEngine:
             if r is not None:
                 toks[i, -len(r.prompt):] = r.prompt
         if all(not r.out for r in active):           # first step: prefill
-            logits, self.cache = self._prefill(self.params,
-                                               jnp.asarray(toks), self.cache)
-            nxt = np.asarray(jnp.argmax(logits[:, -1], -1))
+            with tr.span("prefill", cat="serve", tokens=int(plen)):
+                logits, self.cache = self._prefill(
+                    self.params, jnp.asarray(toks), self.cache)
+                nxt = np.asarray(jnp.argmax(logits[:, -1], -1))
         else:
             last = np.zeros((self.batch, 1), np.int32)
             for i, r in enumerate(self.slots):
                 if r is not None and r.out:
                     last[i, 0] = r.out[-1]
-            logits, self.cache = self._decode(self.params,
-                                              jnp.asarray(last), self.cache)
-            nxt = np.asarray(jnp.argmax(logits[:, -1], -1))
+            with tr.span("decode", cat="serve"):
+                logits, self.cache = self._decode(
+                    self.params, jnp.asarray(last), self.cache)
+                nxt = np.asarray(jnp.argmax(logits[:, -1], -1))
         for i, r in enumerate(self.slots):
             if r is None:
                 continue
             r.out.append(int(nxt[i]))
+            if tr.enabled:
+                tr.counter("serve.tokens")
             if len(r.out) >= r.max_new:
                 r.done = True
+                if tr.enabled and r.t_submit:
+                    tr.observe("serve.request_s",
+                               time.perf_counter() - r.t_submit)
                 self.slots[i] = None               # free the slot
         return True
 
