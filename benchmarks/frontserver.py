@@ -1,0 +1,144 @@
+"""Pareto-front-as-a-service: the budget-query-storm benchmark.
+
+A storm of 12 overlapping deployment-budget queries (8 distinct + 4
+repeats of the hottest ones) against one ``FrontServer`` target — the
+default 10-model axis over the accelerator grid — measured three ways:
+
+  frontserver_baseline_warm — the status quo: one standalone
+      ``coexplore_front(budget=...)`` sweep per query, sequentially, on
+      already-compiled executables.
+  frontserver_storm_warm    — the same 12 queries submitted concurrently
+      to the server: they coalesce onto ONE shared chunk walk (per-query
+      cost = host feasibility mask + archive fold), so
+      chunk_evals_per_query ~ n_chunks/12.  Reports queries/sec, p50/p99
+      request latency from the server's ``serve.request_s`` histogram,
+      and speedup_vs_sequential.  This warm queries/sec is the
+      regression-guarded number (benchmarks/run.py GUARDED_ROWS).
+  frontserver_storm_cached  — the storm repeated against the now-warm
+      front cache: every query answers from a cached front (repeat or
+      feasibility-covered superset hit) with ZERO chunk evaluations.
+
+Two storm responses are re-verified bit-identically (indices AND
+objectives, row order included) against standalone constrained sweeps
+(``prune=False`` — the shared walk never config-prunes), so the speedup
+rows can't quietly drift from the exactness contract.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import (emit, maxrss_mb, sweep_telemetry,
+                               sweep_timer)
+from repro.core import (Budget, coexplore_front, default_model_set,
+                        trace_count)
+from repro.obs import MetricsRegistry, Tracer
+from repro.serve import FrontServer
+
+# 8 distinct deployment envelopes, moderately loose (the sequential
+# baseline keeps its two-stage pruning win where it has one) ...
+DISTINCT_BUDGETS = (
+    None,                                       # unconstrained superset
+    Budget(area_mm2=2.0),
+    Budget(power_mw=250.0),
+    Budget(area_mm2=2.0, power_mw=250.0),
+    Budget(area_mm2=1.5),
+    Budget(power_mw=400.0),
+    Budget(area_mm2=3.0, min_accuracy=0.5),
+    Budget(min_utilization=0.1),
+)
+# ... + 4 repeats of the hottest queries = the 12-query storm.
+STORM = DISTINCT_BUDGETS + (DISTINCT_BUDGETS[1], DISTINCT_BUDGETS[2],
+                            DISTINCT_BUDGETS[3], DISTINCT_BUDGETS[0])
+# Storm indices whose responses are re-verified against standalone sweeps.
+SPOT_CHECK = (1, 3)
+
+
+def _p_ms(reg: MetricsRegistry, q: float) -> float:
+    h = reg.histograms.get("serve.request_s")
+    return 0.0 if h is None or not h.count else h.quantile(q) * 1e3
+
+
+def run(max_points: int | None = None):
+    rows = []
+    tel = sweep_telemetry()
+    models = default_model_set()
+
+    # Compile warm-up: one unconstrained sweep builds every per-bucket
+    # executable; the baseline, the server walk and the bit-identity
+    # reference sweeps all reuse them (n_compiles below stays 0).
+    coexplore_front(models, max_points=max_points, telemetry=tel)
+    coexplore_front(models, max_points=max_points, budget=DISTINCT_BUDGETS[1],
+                    prune=False, telemetry=tel)
+
+    # --- one-sweep-per-query sequential baseline -----------------------
+    c0 = trace_count()
+    with sweep_timer("frontserver_baseline") as t:
+        base_points = 0
+        for b in STORM:
+            f = coexplore_front(models, max_points=max_points, budget=b,
+                                telemetry=tel)
+            base_points += f.points_evaluated
+    base_qps = len(STORM) / t.seconds
+    rows.append(emit(
+        "frontserver_baseline_warm", t.seconds * 1e6,
+        f"queries={len(STORM)};queries_per_sec={base_qps:.2f};"
+        f"points={base_points};n_compiles={trace_count() - c0};"
+        f"peak_rss_mb={maxrss_mb():.0f}"))
+
+    # --- coalesced storm: one shared walk for all 12 -------------------
+    reg = MetricsRegistry()
+    srv = FrontServer(models, max_points=max_points,
+                      telemetry=Tracer(registry=reg, record_events=False))
+    c0 = trace_count()
+    with sweep_timer("frontserver_storm") as t:
+        qs = [srv.submit(b) for b in STORM]
+        srv.run()
+    qps = len(qs) / t.seconds
+    points = max(q.response.points_evaluated for q in qs)
+    rows.append(emit(
+        "frontserver_storm_warm", t.seconds * 1e6,
+        f"queries={len(qs)};queries_per_sec={qps:.2f};"
+        f"points={points};points_per_sec={points / t.seconds:.0f};"
+        f"chunk_evals={srv.chunk_evals};"
+        f"chunk_evals_per_query={srv.chunk_evals / len(qs):.2f};"
+        f"p50_ms={_p_ms(reg, 0.5):.1f};p99_ms={_p_ms(reg, 0.99):.1f};"
+        f"speedup_vs_sequential={qps / base_qps:.2f};"
+        f"cache_hits={srv.cache.hits};n_compiles={trace_count() - c0}"))
+
+    # --- exactness spot check ------------------------------------------
+    for i in SPOT_CHECK:
+        ref = coexplore_front(models, max_points=max_points,
+                              budget=STORM[i], prune=False, telemetry=tel)
+        np.testing.assert_array_equal(qs[i].response.archive.indices,
+                                      ref.archive.indices)
+        np.testing.assert_array_equal(qs[i].response.archive.objectives,
+                                      ref.archive.objectives)
+    rows.append(emit(
+        "frontserver_bitident", 0.0,
+        f"checked={len(SPOT_CHECK)};identical=True"))
+
+    # --- the same storm against the warm front cache -------------------
+    evals0 = srv.chunk_evals
+    with sweep_timer("frontserver_cached") as t:
+        cached = [srv.query(b) for b in STORM]
+    e2e = np.array([r.e2e_s for r in cached])
+    assert srv.chunk_evals == evals0, "cached storm re-evaluated chunks"
+    rows.append(emit(
+        "frontserver_storm_cached", t.seconds * 1e6,
+        f"queries={len(cached)};"
+        f"queries_per_sec={len(cached) / t.seconds:.2f};"
+        f"chunk_evals={srv.chunk_evals - evals0};"
+        f"p50_ms={np.percentile(e2e, 50) * 1e3:.2f};"
+        f"p99_ms={np.percentile(e2e, 99) * 1e3:.2f};"
+        f"served_from={'/'.join(sorted({r.served_from for r in cached}))}"))
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--max-points", type=int, default=None,
+                    help="subsample the joint space (CI-speed knob)")
+    args = ap.parse_args()
+    run(max_points=args.max_points)

@@ -8,10 +8,11 @@ writes the DSE-related rows to BENCH_dse.json.
 --fast shrinks the QAT training budget AND caps every DSE sweep's point
 count so the whole harness is CI-runnable in minutes; the default runs
 the full 27k paper grid (and 216k in dse_scale).  Under --fast the WARM
-throughputs of the unconstrained joint sweep, the constrained
-(area/power-budgeted) sweep and the tight-budget two-stage PRUNED sweep
-are guarded against the values committed in BENCH_dse.json (fails on a
->30% drop; BENCH_SKIP_REGRESSION=1 skips).
+rates of the unconstrained joint sweep, the constrained
+(area/power-budgeted) sweep, the tight-budget two-stage PRUNED sweep,
+the sharded multi-device sweep and the coalesced front-server query
+storm (queries/sec) are guarded against the values committed in
+BENCH_dse.json (fails on a >30% drop; BENCH_SKIP_REGRESSION=1 skips).
 
 --telemetry-dir DIR turns on full sweep telemetry (benchmarks/common
 ``configure_telemetry``) and writes the observability artifacts after the
@@ -38,21 +39,28 @@ FAST_COEXPLORE_POINTS = 4500
 
 # Benches whose rows land in BENCH_dse.json.
 DSE_BENCHES = ("fig2", "fig4", "fig56", "dse_transformers", "dse_scale",
-               "coexplore")
+               "coexplore", "frontserver")
 
-# --fast regression guard: fail if a guarded warm throughput drops more
-# than this fraction below the value committed in BENCH_dse.json.  The
-# unconstrained joint sweep, the constrained (budgeted) sweep, the
-# tight-budget two-stage pruned sweep AND the sharded multi-device sweep
-# are guarded, so neither a slow feasibility-mask path, a regressed
-# pruner, nor a serialized shard pipeline can hide behind the
-# unconstrained number.  BENCH_SKIP_REGRESSION=1 skips the check
-# (noisy/underpowered runners).
+# --fast regression guard: fail if a guarded warm rate drops more than
+# this fraction below the value committed in BENCH_dse.json.  Each entry
+# is (bench, row, rate_field): the unconstrained joint sweep, the
+# constrained (budgeted) sweep, the tight-budget two-stage pruned sweep
+# and the sharded multi-device sweep guard their warm pts/s, and the
+# coalesced query storm guards its warm queries/sec — so neither a slow
+# feasibility-mask path, a regressed pruner, a serialized shard pipeline,
+# nor a de-coalesced front server can hide behind the unconstrained
+# number.  BENCH_SKIP_REGRESSION=1 skips the check (noisy/underpowered
+# runners).
 REGRESSION_TOLERANCE = 0.30
-GUARDED_ROWS = (("coexplore", "coexplore_joint_sweep_warm"),
-                ("coexplore", "coexplore_constrained_sweep_warm"),
-                ("coexplore", "coexplore_pruned_sweep_warm"),
-                ("dse_scale", "dse_scale_sharded_warm"))
+GUARDED_ROWS = (("coexplore", "coexplore_joint_sweep_warm",
+                 "points_per_sec"),
+                ("coexplore", "coexplore_constrained_sweep_warm",
+                 "points_per_sec"),
+                ("coexplore", "coexplore_pruned_sweep_warm",
+                 "points_per_sec"),
+                ("dse_scale", "dse_scale_sharded_warm", "points_per_sec"),
+                ("frontserver", "frontserver_storm_warm",
+                 "queries_per_sec"))
 
 
 def _warm_row_fields(rows, guarded_row: str) -> dict | None:
@@ -66,21 +74,21 @@ def _warm_row_fields(rows, guarded_row: str) -> dict | None:
 
 
 def _check_regression(committed: dict, fresh: dict) -> list[str]:
-    """Error strings for each guarded warm throughput that regressed.
+    """Error strings for each guarded warm rate that regressed.
 
     ``fresh`` maps bench name -> its CSV rows (the dse_rows dict).  Only
     rows with the same evaluated point count are compared: a full
     (non---fast) run writes full-sweep numbers into BENCH_dse.json, and
-    its warm pts/s is structurally higher than a --fast subsample's
+    its warm rate is structurally higher than a --fast subsample's
     (less chunk padding) — comparing across modes would trip the guard
     on an unchanged engine.
     """
     errs = []
-    for bench, guarded in GUARDED_ROWS:
+    for bench, guarded, rate_field in GUARDED_ROWS:
         ref = _warm_row_fields(committed.get(bench), guarded)
         got = _warm_row_fields(fresh.get(bench), guarded)
-        if not ref or not got or "points_per_sec" not in ref \
-                or "points_per_sec" not in got:
+        if not ref or not got or rate_field not in ref \
+                or rate_field not in got:
             continue  # no committed baseline / bench failed (reported anyway)
         if ref.get("points") != got.get("points"):
             print(f"regression guard: committed {guarded} baseline has "
@@ -88,13 +96,13 @@ def _check_regression(committed: dict, fresh: dict) -> list[str]:
                   f"{got.get('points')} (different run mode) — skipping "
                   f"comparison", file=sys.stderr)
             continue
-        ref_pps = float(ref["points_per_sec"])
-        got_pps = float(got["points_per_sec"])
-        if got_pps < (1.0 - REGRESSION_TOLERANCE) * ref_pps:
+        ref_rate = float(ref[rate_field])
+        got_rate = float(got[rate_field])
+        if got_rate < (1.0 - REGRESSION_TOLERANCE) * ref_rate:
             errs.append(
-                f"{guarded} throughput regressed: {got_pps:.0f} pts/s < "
-                f"{(1.0 - REGRESSION_TOLERANCE) * ref_pps:.0f} "
-                f"(committed {ref_pps:.0f} - {REGRESSION_TOLERANCE:.0%}); "
+                f"{guarded} {rate_field} regressed: {got_rate:.2f} < "
+                f"{(1.0 - REGRESSION_TOLERANCE) * ref_rate:.2f} "
+                f"(committed {ref_rate:.2f} - {REGRESSION_TOLERANCE:.0%}); "
                 f"set BENCH_SKIP_REGRESSION=1 to skip on noisy runners")
     return errs
 
@@ -119,7 +127,8 @@ def main() -> None:
 
     from benchmarks import (coexplore, dse_scale, dse_transformers,
                             fig2_pe_spread, fig3_ppa_fit, fig4_dse,
-                            fig56_pareto, kernels_bench, roofline)
+                            fig56_pareto, frontserver, kernels_bench,
+                            roofline)
     mp = FAST_DSE_POINTS if args.fast else None
     benches = {
         "fig2": lambda: fig2_pe_spread.run(max_points=mp),
@@ -134,6 +143,8 @@ def main() -> None:
                                             giga=False))
         if args.fast else dse_scale.run,
         "coexplore": lambda: coexplore.run(
+            max_points=FAST_COEXPLORE_POINTS if args.fast else None),
+        "frontserver": lambda: frontserver.run(
             max_points=FAST_COEXPLORE_POINTS if args.fast else None),
         "roofline": roofline.run,
     }

@@ -33,20 +33,23 @@ from repro.core.arch import (AcceleratorConfig, make_config, stack_configs,
                              joint_space_points, iter_joint_space_chunks,
                              DEFAULT_SPACE, WIDE_SPACE, PE_TYPE_NAMES,
                              PE_TYPE_CODES)
-from repro.core.constraints import (Budget, BudgetStats, Constraint,
-                                    CONFIG_STAGE_COLUMNS,
+from repro.core.constraints import (Budget, BudgetColumns, BudgetStats,
+                                    Constraint, CONFIG_STAGE_COLUMNS,
                                     apply_budget, mask_result)
 from repro.core.costmodel import (COST_MODELS, CostModel, OracleCostModel,
                                   SurrogateCostModel, as_cost_model,
                                   cost_model, register_cost_model)
 from repro.core.coexplore import (COEXPLORE_METRICS, CoexploreFront,
-                                  JointDesignPoint, ModelEntry,
-                                  coexplore_front,
+                                  JointDesignPoint, JointWalk, ModelEntry,
+                                  accuracy_matrix, coexplore_front,
                                   coexplore_report, default_model_set,
-                                  lightpe_claim, model_entry)
-from repro.core.dse import (TwoStagePruner, PendingChunk, dispatch_chunk,
+                                  lightpe_claim, model_entry,
+                                  plan_joint_walk)
+from repro.core.dse import (TwoStagePruner, PendingChunk, chunk_dominators,
+                            dispatch_chunk,
                             evaluate_chunk, evaluate_space,
                             evaluate_space_streaming, finish_chunk,
+                            fold_budget_chunk,
                             pareto_front, pareto_front_streaming,
                             pareto_mask, pareto_mask_dense, pareto_mask_tiled,
                             pareto_mask_2d, ParetoArchive,
@@ -73,16 +76,19 @@ __all__ = [
     "iter_space_chunks", "space_points", "space_size", "subsample_indices",
     "joint_space_size", "joint_space_points", "iter_joint_space_chunks",
     "DEFAULT_SPACE", "WIDE_SPACE", "PE_TYPE_NAMES", "PE_TYPE_CODES",
-    "Budget", "BudgetStats", "Constraint", "CONFIG_STAGE_COLUMNS",
-    "apply_budget", "mask_result",
+    "Budget", "BudgetColumns", "BudgetStats", "Constraint",
+    "CONFIG_STAGE_COLUMNS", "apply_budget", "mask_result",
     "COST_MODELS", "CostModel", "OracleCostModel", "SurrogateCostModel",
     "as_cost_model", "cost_model", "register_cost_model",
     "AccuracySurrogate", "capacity_scale", "seeded_base_accuracy",
-    "COEXPLORE_METRICS", "CoexploreFront", "JointDesignPoint", "ModelEntry",
-    "coexplore_front",
+    "COEXPLORE_METRICS", "CoexploreFront", "JointDesignPoint", "JointWalk",
+    "ModelEntry", "accuracy_matrix", "coexplore_front",
     "coexplore_report", "default_model_set", "lightpe_claim", "model_entry",
-    "TwoStagePruner", "PendingChunk", "dispatch_chunk", "evaluate_chunk",
+    "plan_joint_walk",
+    "TwoStagePruner", "PendingChunk", "chunk_dominators", "dispatch_chunk",
+    "evaluate_chunk",
     "evaluate_space", "evaluate_space_streaming", "finish_chunk",
+    "fold_budget_chunk",
     "pareto_front", "pareto_front_streaming",
     "DEFAULT_PIPELINE_DEPTH", "SweepCheckpointer", "export_front_csv",
     "merge_archives", "merge_budget_stats", "resolve_shards",

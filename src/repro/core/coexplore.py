@@ -61,7 +61,7 @@ from repro.core.constraints import Budget, BudgetStats
 from repro.core.costmodel import CostModel, as_cost_model
 from repro.core.dse import (DEFAULT_CHUNK_SIZE, ParetoArchive, TwoStagePruner,
                             _traced_dispatch, _traced_finish, dispatch_chunk,
-                            evaluate_chunk, finish_chunk)
+                            finish_chunk, fold_budget_chunk)
 from repro.obs import as_tracer, timed_iter
 from repro.core.ppa import PPAModels
 from repro.core.workloads import (Workload, layer_bucket, resnet_cifar,
@@ -218,6 +218,100 @@ def _bucket_models(models: tuple, layer_buckets):
     return bucket_of, group_ids, stacked, local, buckets_meta
 
 
+def accuracy_matrix(models: Sequence[ModelEntry],
+                    accuracy: AccuracySurrogate | None = None) -> np.ndarray:
+    """(M, n_pe_types) accuracy constants of a model axis.
+
+    The per-lane accuracy objective of any joint walk is the gather
+    ``acc_matrix[model_id, pe_code]`` (capacity-scaled, calibration-aware).
+    Shared by every joint-walk driver — the default walk, the sharded
+    pipeline and the frontserver — so all of them agree bit-for-bit on
+    the accuracy axis by construction.  ``accuracy`` defaults to a fresh
+    seeded ``AccuracySurrogate``.
+    """
+    accuracy = AccuracySurrogate() if accuracy is None else accuracy
+    return np.stack([accuracy.predict_per_type(m.name, m.macs, m.base_acc)
+                     for m in models])
+
+
+class JointWalk(NamedTuple):
+    """A planned joint (model x accelerator) chunk walk.
+
+    The normalized chunk stream every walk driver consumes: the default
+    walk, the sharded pipeline and the frontserver's coalesced query walk
+    all iterate ``chunks()``, so for the same plan parameters they visit
+    the IDENTICAL chunk sequence — the structural anchor behind the
+    bit-identity contracts across drivers.  Mixed-mode plans carry the
+    layer-bucket grouping (one stacked workload / compiled evaluator per
+    bucket); per-model plans walk one model at a time.
+    """
+    models: tuple
+    space: dict | None
+    chunk_size: int
+    max_points: int | None
+    seed: int
+    mix_models: bool
+    group_ids: tuple | None        # mixed: bucket -> global model id tuple
+    bucket_of: tuple | None        # mixed: model id -> padded bucket depth
+    stacked: dict | None           # mixed: bucket depth -> StackedWorkload
+    local: np.ndarray | None       # mixed: global id -> position in stack
+    buckets_meta: tuple = ()       # (padded depth, model names) per group
+
+    def chunks(self, start_chunk: int = 0):
+        """Yield ``(wl_key, workload, model_ids, mids, cfg, idx)`` from
+        ``start_chunk`` on — resumable by index arithmetic, identical
+        sequences across drivers.  ``wl_key`` names the workload (bucket
+        depth when mixing, model id otherwise) for pruner/checkpoint
+        state."""
+        if self.mix_models:
+            for mids, cfg, idx in iter_joint_space_chunks(
+                    self.space, num_models=len(self.models),
+                    chunk_size=self.chunk_size, max_points=self.max_points,
+                    seed=self.seed, model_groups=self.group_ids,
+                    start_chunk=start_chunk):
+                b = self.bucket_of[int(mids[0])]
+                yield b, self.stacked[b], self.local[mids], mids, cfg, idx
+            return
+        for m, cfg, idx in iter_joint_space_chunks(
+                self.space, num_models=len(self.models),
+                chunk_size=self.chunk_size, max_points=self.max_points,
+                seed=self.seed, group_by_model=True,
+                start_chunk=start_chunk):
+            mids = np.full(len(idx), int(m), np.int64)
+            yield int(m), self.models[m].workload, None, mids, cfg, idx
+
+    def workload_for(self, wl_key):
+        """The (stacked) workload behind a ``chunks()`` key — checkpoint
+        restore of an interrupted pruner buffer."""
+        if wl_key is None:
+            return None
+        return self.stacked[int(wl_key)] if self.mix_models \
+            else self.models[int(wl_key)].workload
+
+
+def plan_joint_walk(models: Sequence[ModelEntry],
+                    space: dict | None = None,
+                    chunk_size: int = DEFAULT_CHUNK_SIZE,
+                    max_points: int | None = None,
+                    seed: int = 0,
+                    mix_models: bool = True,
+                    layer_buckets: Sequence[int] | None = None) -> JointWalk:
+    """Plan the joint walk once: bucket the model axis (mixed mode) and
+    freeze every enumeration parameter, so multiple drivers — or repeated
+    passes of one driver — replay the exact same chunk stream."""
+    models = tuple(models)
+    bucket_of = group_ids = stacked = local = None
+    buckets_meta = ()
+    if mix_models:
+        bucket_of, group_ids, stacked, local, buckets_meta = \
+            _bucket_models(models, layer_buckets)
+    return JointWalk(models=models, space=space, chunk_size=int(chunk_size),
+                     max_points=max_points, seed=int(seed),
+                     mix_models=bool(mix_models), group_ids=group_ids,
+                     bucket_of=None if bucket_of is None else tuple(bucket_of),
+                     stacked=stacked, local=local, buckets_meta=buckets_meta)
+
+
 def coexplore_front(
         models: Sequence[ModelEntry],
         space: dict | None = None,
@@ -309,14 +403,12 @@ def coexplore_front(
             checkpoint_every=checkpoint_every, csv_path=csv_path,
             max_chunks=max_chunks, telemetry=telemetry)
     tr = as_tracer(telemetry)
-    accuracy = AccuracySurrogate() if accuracy is None else accuracy
     cost_model = as_cost_model(surrogate)
-    # (M, n_pe_types) accuracy constants: the per-lane accuracy objective
-    # is the gather acc_matrix[model_id, pe_code] (capacity-scaled,
-    # calibration-aware)
-    acc_matrix = np.stack([accuracy.predict_per_type(m.name, m.macs,
-                                                     m.base_acc)
-                           for m in models])
+    acc_matrix = accuracy_matrix(models, accuracy)
+    walk = plan_joint_walk(models, space=space, chunk_size=chunk_size,
+                           max_points=max_points, seed=seed,
+                           mix_models=mix_models,
+                           layer_buckets=layer_buckets)
     archive = ParetoArchive(len(COEXPLORE_METRICS))
     per_model_best: dict[tuple[str, str], dict] = {}
     stats = BudgetStats() if budget is not None else None
@@ -340,31 +432,18 @@ def coexplore_front(
         lane_acc = acc_matrix[mids, codes]
         obj = _joint_objectives(res, lane_acc)
         total += len(idx)
-        if budget is not None:
-            mask, kills = budget.feasibility(res, accuracy=lane_acc)
-            stats.record(mask, kills)
-            if tr.enabled:
-                killed = len(mask) - int(np.count_nonzero(mask))
-                if killed:
-                    tr.counter("budget.killed", killed)
-                for cname, k in kills.items():
-                    if k:
-                        tr.counter(f"budget.kill.{cname}", k)
-            if not mask.all():
-                obj, idx = obj[mask], idx[mask]
-                mids, codes = mids[mask], codes[mask]
-        with tr.span("archive"):
-            archive.update(obj, idx)
-            _update_per_model_best(per_model_best, models, acc_matrix,
-                                   mids, codes, obj)
+        obj, idx, (mids, codes) = fold_budget_chunk(
+            archive, obj, idx, result=res, budget=budget, accuracy=lane_acc,
+            stats=stats, aux=(mids, codes), telemetry=tr)
+        _update_per_model_best(per_model_best, models, acc_matrix,
+                               mids, codes, obj)
 
     def _fold_flush(res, idx, aux):
         """One fully-feasible two-stage flush -> archive + aggregates."""
         obj = _joint_objectives(res, aux["accuracy"])
-        with tr.span("archive"):
-            archive.update(obj, idx)
-            _update_per_model_best(per_model_best, models, acc_matrix,
-                                   aux["mids"], aux["codes"], obj)
+        fold_budget_chunk(archive, obj, idx, telemetry=tr)
+        _update_per_model_best(per_model_best, models, acc_matrix,
+                               aux["mids"], aux["codes"], obj)
 
     def _feed(cfg, idx, workload, mids, codes, model_ids=None):
         """Route one raw chunk through the engaged walk (pruned or not)."""
@@ -388,35 +467,14 @@ def coexplore_front(
             for out in pruner.finish():
                 _fold_flush(*out)
 
-    if mix_models:
-        # group the model axis into layer-count buckets: each group gets
-        # one stacked (M_b, L_b) workload == one compiled evaluator
-        bucket_of, group_ids, stacked, local, buckets_meta = \
-            _bucket_models(models, layer_buckets)
-        for mids, cfg, idx in timed_iter(iter_joint_space_chunks(
-                space, num_models=len(models), chunk_size=chunk_size,
-                max_points=max_points, seed=seed, model_groups=group_ids),
-                tr):
-            _feed(cfg, idx, stacked[bucket_of[int(mids[0])]], mids,
-                  np.asarray(cfg.pe_type).astype(np.int64),
-                  model_ids=local[mids])
-        _finish_walk()
-        return CoexploreFront(archive=archive, models=models, space=space,
-                              metrics=COEXPLORE_METRICS,
-                              per_model_best=per_model_best,
-                              points_evaluated=total, buckets=buckets_meta,
-                              budget=budget, budget_stats=stats)
-    for m, cfg, idx in timed_iter(iter_joint_space_chunks(
-            space, num_models=len(models), chunk_size=chunk_size,
-            max_points=max_points, seed=seed, group_by_model=True), tr):
-        codes = np.asarray(cfg.pe_type).astype(np.int64)
-        _feed(cfg, idx, models[m].workload,
-              np.full(len(codes), m, np.int64), codes)
+    for _, wl, model_ids, mids, cfg, idx in timed_iter(walk.chunks(), tr):
+        _feed(cfg, idx, wl, mids,
+              np.asarray(cfg.pe_type).astype(np.int64), model_ids=model_ids)
     _finish_walk()
     return CoexploreFront(archive=archive, models=models, space=space,
                           metrics=COEXPLORE_METRICS,
                           per_model_best=per_model_best,
-                          points_evaluated=total,
+                          points_evaluated=total, buckets=walk.buckets_meta,
                           budget=budget, budget_stats=stats)
 
 
@@ -463,11 +521,8 @@ def _sharded_coexplore_front(
     """
     from repro.core import shard as _shard
     tr = as_tracer(telemetry)
-    accuracy = AccuracySurrogate() if accuracy is None else accuracy
     cost_model = as_cost_model(surrogate)
-    acc_matrix = np.stack([accuracy.predict_per_type(m.name, m.macs,
-                                                     m.base_acc)
-                           for m in models])
+    acc_matrix = accuracy_matrix(models, accuracy)
     n_shards, devs = _shard.resolve_shards(shards, devices)
     depth = _shard.DEFAULT_PIPELINE_DEPTH if pipeline_depth is None \
         else pipeline_depth
@@ -480,11 +535,10 @@ def _sharded_coexplore_front(
     stats = [BudgetStats() for _ in range(n_shards)] \
         if budget is not None else None
 
-    bucket_of = group_ids = stacked = local = None
-    buckets_meta = ()
-    if mix_models:
-        bucket_of, group_ids, stacked, local, buckets_meta = \
-            _bucket_models(models, layer_buckets)
+    walk = plan_joint_walk(models, space=space, chunk_size=chunk_size,
+                           max_points=max_points, seed=seed,
+                           mix_models=mix_models,
+                           layer_buckets=layer_buckets)
 
     ckpt = None
     cursor = 0
@@ -520,11 +574,7 @@ def _sharded_coexplore_front(
         if pruner_states is not None:
             for s, (p, st) in enumerate(zip(pruners, pruner_states)):
                 k = wl_keys[s] if wl_keys is not None else None
-                wl = None
-                if k is not None:
-                    wl = stacked[int(k)] if mix_models \
-                        else models[int(k)].workload
-                p.restore_state(st, wl)
+                p.restore_state(st, walk.workload_for(k))
     active_keys: list = list(wl_keys) if wl_keys is not None \
         else [None] * n_shards
 
@@ -532,30 +582,18 @@ def _sharded_coexplore_front(
         lane_acc = acc_matrix[mids, codes]
         obj = _joint_objectives(res, lane_acc)
         totals[s] += len(idx)
-        if budget is not None:
-            mask, kills = budget.feasibility(res, accuracy=lane_acc)
-            stats[s].record(mask, kills)
-            if tr.enabled:
-                killed = len(mask) - int(np.count_nonzero(mask))
-                if killed:
-                    tr.counter("budget.killed", killed)
-                for cname, k in kills.items():
-                    if k:
-                        tr.counter(f"budget.kill.{cname}", k)
-            if not mask.all():
-                obj, idx = obj[mask], idx[mask]
-                mids, codes = mids[mask], codes[mask]
-        with tr.span("archive"):
-            archives[s].update(obj, idx)
-            _update_per_model_best(bests[s], models, acc_matrix, mids,
-                                   codes, obj)
+        obj, idx, (mids, codes) = fold_budget_chunk(
+            archives[s], obj, idx, result=res, budget=budget,
+            accuracy=lane_acc, stats=None if stats is None else stats[s],
+            aux=(mids, codes), telemetry=tr)
+        _update_per_model_best(bests[s], models, acc_matrix, mids,
+                               codes, obj)
 
     def _fold_flush(s, res, idx, aux):
         obj = _joint_objectives(res, aux["accuracy"])
-        with tr.span("archive"):
-            archives[s].update(obj, idx)
-            _update_per_model_best(bests[s], models, acc_matrix,
-                                   aux["mids"], aux["codes"], obj)
+        fold_budget_chunk(archives[s], obj, idx, telemetry=tr)
+        _update_per_model_best(bests[s], models, acc_matrix,
+                               aux["mids"], aux["codes"], obj)
 
     def _state() -> dict:
         st = dict(cursor=cursor,
@@ -583,25 +621,6 @@ def _sharded_coexplore_front(
                                         COEXPLORE_METRICS, space=space,
                                         models=models)
 
-    def _chunks():
-        """Normalize both walk modes to (wl_key, workload, model_ids,
-        mids, cfg, idx) — identical chunk sequences to the default walk,
-        resumed at ``cursor`` by index arithmetic."""
-        if mix_models:
-            for mids, cfg, idx in iter_joint_space_chunks(
-                    space, num_models=len(models), chunk_size=chunk_size,
-                    max_points=max_points, seed=seed,
-                    model_groups=group_ids, start_chunk=start):
-                b = bucket_of[int(mids[0])]
-                yield b, stacked[b], local[mids], mids, cfg, idx
-        else:
-            for m, cfg, idx in iter_joint_space_chunks(
-                    space, num_models=len(models), chunk_size=chunk_size,
-                    max_points=max_points, seed=seed, group_by_model=True,
-                    start_chunk=start):
-                mids = np.full(len(idx), int(m), np.int64)
-                yield int(m), models[m].workload, None, mids, cfg, idx
-
     start = cursor            # cursor advances as chunks retire
     inflight: deque = deque()
     cap = max(1, n_shards * max(1, depth))
@@ -628,7 +647,7 @@ def _sharded_coexplore_front(
 
     t_disp: dict[int, int] = {}
     for c, (wl_key, wl, model_ids, mids, cfg, idx) in enumerate(
-            timed_iter(_chunks(), tr), start=start):
+            timed_iter(walk.chunks(start), tr), start=start):
         if max_chunks is not None and c - start >= max_chunks:
             completed = False
             break
@@ -681,7 +700,7 @@ def _sharded_coexplore_front(
                           space=space, metrics=COEXPLORE_METRICS,
                           per_model_best=merged_best,
                           points_evaluated=sum(totals),
-                          buckets=buckets_meta, budget=budget,
+                          buckets=walk.buckets_meta, budget=budget,
                           budget_stats=merged_stats)
 
 

@@ -318,6 +318,47 @@ class BudgetStats:
                     pruned=self.pruned, kills=dict(self.kills))
 
 
+class BudgetColumns(NamedTuple):
+    """The workload-stage result columns a ``Budget`` bound can read
+    (``accuracy`` is passed to ``feasibility`` separately, as always).
+
+    A compact host float64 view of an evaluated chunk that duck-types
+    into ``Budget.feasibility`` exactly like the full ``DseResult`` it
+    was taken from — what a replay buffer or a warm front cache keeps
+    per lane so LATER budget queries can be re-masked without paying the
+    chunk evaluation again (the frontserver's mid-sweep joins and
+    superset cache hits).  Column set = every ``_BUDGET_FIELDS`` target
+    except ``accuracy``; masking against this view is bit-identical to
+    masking against the original result because ``feasibility`` reads
+    these columns (as float64) and nothing else.
+    """
+    area_mm2: np.ndarray
+    power_mw: np.ndarray
+    latency_s: np.ndarray
+    energy_j: np.ndarray
+    utilization: np.ndarray
+
+    @classmethod
+    def from_result(cls, result) -> "BudgetColumns":
+        """Snapshot the budget-readable columns of an evaluated chunk."""
+        return cls(*[np.asarray(getattr(result, f), np.float64)
+                     for f in cls._fields])
+
+    def take(self, rows) -> "BudgetColumns":
+        """Row-gather every column (subset / reorder lanes)."""
+        rows = np.asarray(rows)
+        return BudgetColumns(*[col[rows] for col in self])
+
+    def state_dict(self) -> dict:
+        """Plain-dict form (cache entries / checkpoints)."""
+        return {f: col.copy() for f, col in zip(self._fields, self)}
+
+    @classmethod
+    def from_state(cls, state: dict) -> "BudgetColumns":
+        return cls(*[np.asarray(state[f], np.float64)
+                     for f in cls._fields])
+
+
 def mask_result(result, mask: np.ndarray):
     """Row-filter every column of a DseResult-like struct (host numpy)."""
     return type(result)(*[np.asarray(col)[mask] for col in result])

@@ -402,6 +402,98 @@ def _empty_result() -> DseResult:
                        for f in DseResult._fields])
 
 
+def chunk_dominators(obj: np.ndarray, block: int = 512):
+    """Shared strict-domination structure of one chunk's objective rows:
+    the pair ``(front, dom)`` where ``front`` holds the row indices of
+    the chunk's own non-dominated front and ``dom[k, r]`` is True when
+    row ``front[k]`` strictly dominates row r (>= in every objective,
+    > in at least one — the archive's own relation, so duplicates never
+    dominate each other).
+
+    Computed ONCE per evaluated chunk and shared across every coalesced
+    budget query reading it: a query with feasibility mask ``m`` drops
+    rows dominated by a FEASIBLE front row (``dom[m[front]].any(0)``)
+    before its archive fold.  Exact on both sides: front rows are never
+    dominated in-chunk, so a feasible front-row dominator always reaches
+    the archive and kills the dropped row there anyway; and any row the
+    prefilter leaves that a feasible non-front row dominates is still
+    removed by the archive's own reduction.  Restricting dominators to
+    the front keeps the adjacency |front| x N instead of N x N — Q
+    per-query O(N^2) in-chunk reductions become one shared front pass
+    plus Q boolean reduces.
+
+    Blocked so the (block, N, D) broadcast temporary stays bounded.
+    """
+    obj = np.asarray(obj, np.float64)
+    front = np.flatnonzero(ParetoArchive._chunk_front_mask(obj))
+    f = obj[front]
+    dom = np.empty((len(front), len(obj)), bool)
+    for lo in range(0, len(front), block):
+        blk = f[lo:lo + block, None, :]
+        dom[lo:lo + block] = (np.all(blk >= obj[None, :, :], axis=-1)
+                              & np.any(blk > obj[None, :, :], axis=-1))
+    return front, dom
+
+
+def fold_budget_chunk(archive, obj, idx, result=None, budget=None,
+                      accuracy=None, stats=None, aux=(), dom=None,
+                      telemetry=None, track=None):
+    """Mask one evaluated chunk by ``budget`` and fold the survivors into
+    ``archive`` — the per-sink fold every budget-aware walk shares
+    (single-process walks, each shard of a sharded walk, and each
+    coalesced frontserver query reading the same evaluated chunk).
+
+    ``obj``/``idx`` are the chunk's objective matrix and global flat
+    indices; ``result`` is anything ``Budget.feasibility`` can read — a
+    full ``DseResult`` or a replayed ``constraints.BudgetColumns`` view —
+    and ``accuracy`` is a joint walk's per-lane accuracy.  ``aux`` is any
+    number of extra per-lane arrays masked in lockstep (e.g. model ids /
+    PE codes feeding the best-seen aggregates).  A ``None`` budget folds
+    the chunk unmasked.
+
+    Feeding Q archives from ONE evaluated chunk via Q calls is
+    bit-identical to Q standalone constrained walks: the mask is a
+    row-wise function of the same host columns, and each archive consumes
+    the same (objectives, indices) sequence it would have seen alone.
+    ``dom`` (a shared ``chunk_dominators`` result) additionally drops
+    rows a feasible front row of the SAME chunk dominates before the
+    archive sees them — an exact prefilter (see ``chunk_dominators``)
+    that makes the per-query fold cheap when many queries share one
+    chunk.
+
+    Returns the (possibly masked) ``(obj, idx, aux)`` that reached the
+    archive.
+    """
+    tr = as_tracer(telemetry)
+    mask = None
+    if budget is not None:
+        mask, kills = budget.feasibility(result, accuracy=accuracy)
+        if stats is not None:
+            stats.record(mask, kills)
+        if tr.enabled:
+            killed = len(mask) - int(np.count_nonzero(mask))
+            if killed:
+                tr.counter("budget.killed", killed)
+            for cname, k in kills.items():
+                if k:
+                    tr.counter(f"budget.kill.{cname}", k)
+        if mask.all():
+            mask = None
+    if dom is not None:
+        front, adj = dom
+        keep = ~adj.any(axis=0) if mask is None \
+            else mask & ~adj[mask[front]].any(axis=0)
+        if not keep.all():
+            mask, (obj, idx) = None, (obj[keep], idx[keep])
+            aux = tuple(a[keep] for a in aux)
+    if mask is not None:
+        obj, idx = obj[mask], idx[mask]
+        aux = tuple(a[mask] for a in aux)
+    with tr.span("archive", track=track):
+        archive.update(obj, idx)
+    return obj, idx, aux
+
+
 class _PPAView(NamedTuple):
     """The stage-1 columns a config-stage constraint can read (duck-typed
     into ``Budget.feasibility``; accuracy is passed separately)."""

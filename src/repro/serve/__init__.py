@@ -1,2 +1,6 @@
 from repro.serve.engine import (ServeEngine, quantize_params,
                                 dequantize_params, packed_bytes)
+from repro.serve.frontserver import (DONE, EXPIRED, QUEUED, REJECTED,
+                                     RUNNING, CacheEntry, FrontCache,
+                                     FrontQuery, FrontResponse, FrontServer,
+                                     backend_signature, budget_key)

@@ -14,7 +14,8 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, List, Optional
+from collections import deque
+from typing import Any, Deque, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -101,10 +102,18 @@ def dequantize_params(qparams):
 
 
 def packed_bytes(qparams) -> int:
-    """HBM bytes of the packed representation (roofline accounting)."""
+    """HBM bytes of the packed representation (roofline accounting).
+
+    Metadata-only: size x itemsize from each leaf's shape/dtype, never
+    ``np.asarray`` — materializing a device leaf just to read ``nbytes``
+    would force a device->host transfer per weight.
+    """
     total = 0
     for leaf in jax.tree.leaves(qparams):
-        total += np.asarray(leaf).nbytes if hasattr(leaf, "nbytes") else 0
+        dt = getattr(leaf, "dtype", None)
+        if dt is None:
+            continue
+        total += int(np.size(leaf)) * np.dtype(dt).itemsize
     return total
 
 
@@ -143,7 +152,7 @@ class ServeEngine:
         self.max_len = max_len
         self.cache = mod.init_cache(cfg, batch_slots, max_len, jnp.float32)
         self.slots: List[Optional[Request]] = [None] * batch_slots
-        self.queue: List[Request] = []
+        self.queue: Deque[Request] = deque()
         self._tr = as_tracer(telemetry)
         self._decode = jax.jit(
             lambda p, t, c: mod.decode_step(p, t, cfg, c))
@@ -161,7 +170,7 @@ class ServeEngine:
     def _admit(self):
         for i in range(self.batch):
             if self.slots[i] is None and self.queue:
-                req = self.queue.pop(0)
+                req = self.queue.popleft()
                 if self._tr.enabled:
                     req.t_admit = time.perf_counter()
                     if req.t_submit:

@@ -11,7 +11,7 @@ Some CI images don't ship hypothesis; rather than skipping whole modules
 The fallback re-runs the test body over ``max_examples`` pseudo-random
 draws from a fixed seed — no shrinking, no database, but the same
 call contract for the strategies the suite uses: ``integers``,
-``sampled_from``, ``floats``, ``booleans`` and ``.map``.
+``sampled_from``, ``floats``, ``booleans``, ``lists`` and ``.map``.
 """
 
 from __future__ import annotations
@@ -61,6 +61,14 @@ class st:
     @staticmethod
     def booleans() -> _Strategy:
         return _Strategy(lambda rng: bool(rng.integers(2)))
+
+    @staticmethod
+    def lists(elements: _Strategy, min_size: int = 0,
+              max_size: int = 10) -> _Strategy:
+        def sample(rng):
+            n = int(rng.integers(min_size, max_size + 1))
+            return [elements._sample(rng) for _ in range(n)]
+        return _Strategy(sample)
 
 
 def settings(max_examples: int = 20, **_kw):
