@@ -10,9 +10,10 @@ count so the whole harness is CI-runnable in minutes; the default runs
 the full 27k paper grid (and 216k in dse_scale).  Under --fast the WARM
 rates of the unconstrained joint sweep, the constrained
 (area/power-budgeted) sweep, the tight-budget two-stage PRUNED sweep,
-the sharded multi-device sweep and the coalesced front-server query
-storm (queries/sec) are guarded against the values committed in
-BENCH_dse.json (fails on a >30% drop; BENCH_SKIP_REGRESSION=1 skips).
+the sharded multi-device sweep, the coalesced front-server query
+storm (queries/sec) and the LLM-serving (decode/MoE) joint sweep are
+guarded against the values committed in BENCH_dse.json (fails on a
+>30% drop; BENCH_SKIP_REGRESSION=1 skips).
 
 --telemetry-dir DIR turns on full sweep telemetry (benchmarks/common
 ``configure_telemetry``) and writes the observability artifacts after the
@@ -39,7 +40,7 @@ FAST_COEXPLORE_POINTS = 4500
 
 # Benches whose rows land in BENCH_dse.json.
 DSE_BENCHES = ("fig2", "fig4", "fig56", "dse_transformers", "dse_scale",
-               "coexplore", "frontserver")
+               "coexplore", "frontserver", "serving")
 
 # --fast regression guard: fail if a guarded warm rate drops more than
 # this fraction below the value committed in BENCH_dse.json.  Each entry
@@ -60,7 +61,9 @@ GUARDED_ROWS = (("coexplore", "coexplore_joint_sweep_warm",
                  "points_per_sec"),
                 ("dse_scale", "dse_scale_sharded_warm", "points_per_sec"),
                 ("frontserver", "frontserver_storm_warm",
-                 "queries_per_sec"))
+                 "queries_per_sec"),
+                ("serving", "serving_decode_sweep_warm",
+                 "points_per_sec"))
 
 
 def _warm_row_fields(rows, guarded_row: str) -> dict | None:
@@ -128,7 +131,7 @@ def main() -> None:
     from benchmarks import (coexplore, dse_scale, dse_transformers,
                             fig2_pe_spread, fig3_ppa_fit, fig4_dse,
                             fig56_pareto, frontserver, kernels_bench,
-                            roofline)
+                            roofline, serving)
     mp = FAST_DSE_POINTS if args.fast else None
     benches = {
         "fig2": lambda: fig2_pe_spread.run(max_points=mp),
@@ -145,6 +148,8 @@ def main() -> None:
         "coexplore": lambda: coexplore.run(
             max_points=FAST_COEXPLORE_POINTS if args.fast else None),
         "frontserver": lambda: frontserver.run(
+            max_points=FAST_COEXPLORE_POINTS if args.fast else None),
+        "serving": lambda: serving.run(
             max_points=FAST_COEXPLORE_POINTS if args.fast else None),
         "roofline": roofline.run,
     }

@@ -1,0 +1,134 @@
+"""LLM serving co-exploration: decode and MoE families over the JOINT space.
+
+The phase-aware layer IR's headline question: does the paper's LightPE
+Pareto-dominance claim survive serving regimes the conv/prefill
+workloads never exercise — decode attention that STREAMS the KV cache
+(memory-bound matrix-vector rows, ``kind=attn_kv``) and sparsity-gated
+MoE experts whose DRAM traffic follows the TOUCHED expert set while
+compute follows only the ACTIVE (top-k routed) MACs
+(``kind=moe_expert``)?
+
+The model axis here is serving-only: decode steps at two context
+lengths (KV-stream scaling), a decode step of a MoE checkpoint, and two
+expert-gated MoE decode members — times the 27k accelerator grid,
+streamed through the same 3-objective archive as benchmarks/coexplore.
+Cold and warm passes report ``n_compiles`` (one per layer-count bucket);
+the warm row's pts/s is the regression-guarded number in
+BENCH_dse.json.
+
+The ``membound`` rows assert the decode story statically: for each
+decode member, the attn_kv rows' DRAM time over their compute time at
+the paper's default config — >1 means the row sits past the roofline
+ridge, which is the regime the decode family exists to model.
+
+Per-family claim rows re-run ``lightpe_claim`` best-vs-best semantics on
+the serving front: one row per member plus the aggregate verdict, so
+BENCH_dse.json records whether LightPE dominance holds in decode-bound
+and sparsity-gated regimes, not just the conv/prefill ones.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, maxrss_mb, sweep_telemetry, sweep_timer
+from repro.core import (PE_TYPE_NAMES, coexplore_front, coexplore_report,
+                        llm_decode, llm_moe, make_config, model_entry,
+                        trace_count)
+from repro.core.dataflow import layer_cost
+from repro.core.workloads import KIND_ATTN_KV
+
+# Decode members at two contexts (KV-stream scaling) + a MoE checkpoint's
+# decode step + two expert-gated members; every entry carries its
+# MAC-weighted accuracy-class mix so the per-class sensitivity priors are
+# exercised end-to-end.
+SERVING_MODELS = (
+    ("qwen3-32b", lambda: llm_decode("qwen3-32b", context=4096)),
+    ("qwen3-32b-8k", lambda: llm_decode("qwen3-32b", context=8192)),
+    ("deepseek-decode", lambda: llm_decode("deepseek-moe-16b",
+                                           context=4096)),
+    ("deepseek-moe", lambda: llm_moe("deepseek-moe-16b", seq=512,
+                                     mode="decode")),
+    ("phi3.5-moe", lambda: llm_moe("phi3.5-moe-42b-a6.6b", seq=512,
+                                   mode="decode")),
+)
+
+
+def serving_model_set():
+    return [model_entry(build(), acc_classes=True)
+            for _, build in SERVING_MODELS]
+
+
+def _membound_rows(rows):
+    """cycles_memory / cycles_compute of the streamed-KV rows at the
+    default config — the static decode-bound check behind the sweep."""
+    import jax
+    cfg = make_config()
+    for name, build in SERVING_MODELS:
+        wl = build()
+        kinds = np.asarray(wl.layers.kind)
+        sel = kinds == float(KIND_ATTN_KV)
+        if not sel.any():
+            continue
+        pl = jax.vmap(layer_cost, in_axes=(0, None, None))(
+            wl.layers, cfg, np.float32(1.0))
+        ratio = (np.asarray(pl.cycles_memory)[sel]
+                 / np.asarray(pl.cycles_compute)[sel])
+        rows.append(emit(
+            f"serving_membound_{name}", 0.0,
+            f"attn_kv_rows={int(sel.sum())};"
+            f"mem_over_compute_min={ratio.min():.2f};"
+            f"mem_over_compute_max={ratio.max():.2f};"
+            f"memory_bound={bool((ratio > 1.0).all())}"))
+
+
+def run(max_points: int | None = None):
+    rows = []
+    tel = sweep_telemetry()
+    models = serving_model_set()
+    front = None
+    for phase in ("cold", "warm"):
+        c0 = trace_count()
+        with sweep_timer(f"serving_decode_sweep_{phase}") as t:
+            front = coexplore_front(models, max_points=max_points,
+                                    telemetry=tel)
+        dt = t.seconds
+        rows.append(emit(
+            f"serving_decode_sweep_{phase}", dt * 1e6,
+            f"models={len(models)};points={front.points_evaluated};"
+            f"points_per_sec={front.points_evaluated / dt:.0f};"
+            f"n_compiles={trace_count() - c0};"
+            f"buckets={'/'.join(str(b) for b, _ in front.buckets)};"
+            f"peak_rss_mb={maxrss_mb():.0f}"))
+
+    _membound_rows(rows)
+
+    rep = coexplore_report(front)
+    mix = rep["front_counts"]["by_pe_type"]
+    rows.append(emit(
+        "serving_front_mix", 0.0,
+        ";".join(f"{pe}={mix.get(pe, 0)}" for pe in PE_TYPE_NAMES)))
+    claim = rep["claim"]
+    for name, v in claim["per_model"].items():
+        lp1 = v.get("lightpe1", {})
+        rows.append(emit(
+            f"serving_{name}", 0.0,
+            f"ok={v['ok']};"
+            f"lpe1_beats_int16_bests={lp1.get('beats_int16_bests')};"
+            f"lpe1_acc_gap_pp={lp1.get('acc_gap_vs_fp32_pp', 0.0):.2f};"
+            f"front_points={rep['front_counts']['by_model'].get(name, 0)}"))
+    rows.append(emit(
+        "serving_claim", 0.0,
+        f"lightpe_beats_int16_bests_within_1pp={claim['holds']};"
+        f"indeterminate_models={claim['indeterminate']};"
+        f"paper_claim=LightPE_dominance_under_decode_and_MoE_regimes"))
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--max-points", type=int, default=None,
+                    help="subsample the joint space (CI-speed knob)")
+    args = ap.parse_args()
+    run(max_points=args.max_points)

@@ -24,8 +24,8 @@ Submodules:
   coexplore — joint accelerator x model co-exploration engine
 """
 
-from repro.core.accuracy import (AccuracySurrogate, capacity_scale,
-                                 seeded_base_accuracy)
+from repro.core.accuracy import (ACC_CLASS_SENS, AccuracySurrogate,
+                                 capacity_scale, seeded_base_accuracy)
 from repro.core.arch import (AcceleratorConfig, make_config, stack_configs,
                              concat_configs, take_config,
                              enumerate_space, iter_space_chunks, space_points,
@@ -57,14 +57,17 @@ from repro.core.dse import (TwoStagePruner, PendingChunk, chunk_dominators,
                             trace_count, ppa_trace_count, reset_trace_count,
                             DseResult, RESULT_DTYPES, DEFAULT_CHUNK_SIZE)
 from repro.core.shard import (DEFAULT_PIPELINE_DEPTH, SweepCheckpointer,
-                              export_front_csv, merge_archives,
-                              merge_budget_stats, resolve_shards,
-                              sharded_pareto_front, sharded_space_stream)
+                              export_front_csv, export_front_parquet,
+                              merge_archives, merge_budget_stats,
+                              resolve_shards, sharded_pareto_front,
+                              sharded_space_stream, workloads_signature)
 from repro.core.ppa import (fit_ppa_models, surrogate_ppa, PPAModels, r2,
                             mape)
 from repro.core.synth import synthesize, oracle_ppa, SynthResult
 from repro.core.workloads import (Workload, LayerSpec, StackedWorkload,
                                   PAPER_WORKLOADS, MODEL_FAMILIES,
+                                  LAYER_KINDS, ACC_CLASSES, acc_class_mix,
+                                  llm_decode, llm_moe, touched_experts,
                                   transformer_workload, transformer_gemm,
                                   vgg16, resnet_cifar, resnet34, resnet50,
                                   workload_macs, workload_layers,
@@ -80,7 +83,8 @@ __all__ = [
     "CONFIG_STAGE_COLUMNS", "apply_budget", "mask_result",
     "COST_MODELS", "CostModel", "OracleCostModel", "SurrogateCostModel",
     "as_cost_model", "cost_model", "register_cost_model",
-    "AccuracySurrogate", "capacity_scale", "seeded_base_accuracy",
+    "ACC_CLASS_SENS", "AccuracySurrogate", "capacity_scale",
+    "seeded_base_accuracy",
     "COEXPLORE_METRICS", "CoexploreFront", "JointDesignPoint", "JointWalk",
     "ModelEntry", "accuracy_matrix", "coexplore_front",
     "coexplore_report", "default_model_set", "lightpe_claim", "model_entry",
@@ -91,8 +95,9 @@ __all__ = [
     "fold_budget_chunk",
     "pareto_front", "pareto_front_streaming",
     "DEFAULT_PIPELINE_DEPTH", "SweepCheckpointer", "export_front_csv",
-    "merge_archives", "merge_budget_stats", "resolve_shards",
-    "sharded_pareto_front", "sharded_space_stream",
+    "export_front_parquet", "merge_archives", "merge_budget_stats",
+    "resolve_shards", "sharded_pareto_front", "sharded_space_stream",
+    "workloads_signature",
     "pareto_mask", "pareto_mask_dense", "pareto_mask_tiled", "pareto_mask_2d",
     "ParetoArchive", "normalized_report", "report_pe_types", "spread",
     "trace_count", "ppa_trace_count", "reset_trace_count",
@@ -100,7 +105,9 @@ __all__ = [
     "fit_ppa_models", "surrogate_ppa", "PPAModels", "r2", "mape",
     "synthesize", "oracle_ppa", "SynthResult",
     "Workload", "LayerSpec", "StackedWorkload", "PAPER_WORKLOADS",
-    "MODEL_FAMILIES", "transformer_workload", "transformer_gemm", "vgg16",
+    "MODEL_FAMILIES", "LAYER_KINDS", "ACC_CLASSES", "acc_class_mix",
+    "llm_decode", "llm_moe", "touched_experts",
+    "transformer_workload", "transformer_gemm", "vgg16",
     "resnet_cifar", "resnet34", "resnet50", "workload_macs",
     "workload_layers", "pad_workload", "layer_bucket", "stack_workloads",
 ]

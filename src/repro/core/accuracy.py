@@ -27,6 +27,14 @@ Provenance / calibration contract
   by ``examples/train_qat.py --mode cnn`` (``results/qat_pareto.json``).
   A measured FP32 point rebases the whole family (seeded deltas then apply
   to the measured base); a measured (model, pe) point is returned verbatim.
+* **Layer-class sensitivity** (opt-in): serving workloads tag layers with
+  ``workloads.ACC_CLASSES`` classes (attention / FFN / expert), and
+  passing their MAC-weighted ``class_mix`` to the predictors multiplies
+  the delta by ``sum(mix * ACC_CLASS_SENS)`` — attention layers are more
+  quantization-sensitive than FFN, gated experts sit in between (Hashemi
+  et al.: per-layer-class precision sensitivity).  ``class_mix=None`` or
+  an all-default mix reproduces the scalar delta EXACTLY (the default
+  class's sensitivity is 1.0), so pre-existing models are untouched.
 """
 
 from __future__ import annotations
@@ -42,6 +50,15 @@ from repro.core.pe import ACC_DELTA_BY_NAME
 # Reference capacity: ResNet-20 / CIFAR-10 forward MACs — the smallest
 # paper model, where the paper reports the largest quantization gaps.
 REF_MACS = 4.1e7
+
+# Per-layer-class quantization-sensitivity priors, aligned with
+# ``workloads.ACC_CLASSES`` = ("default", "attn", "ffn", "expert").
+# Softmax-adjacent attention GEMMs amplify quantization error (~1.3x),
+# over-parameterized FFN blocks absorb it (~0.9x), and top-k-gated
+# experts see fewer tokens per weight than dense FFNs (less averaging:
+# ~1.15x).  "default" MUST stay exactly 1.0: an untagged workload's mix
+# is all-default and its delta must equal the scalar path bit-exactly.
+ACC_CLASS_SENS = {"default": 1.0, "attn": 1.3, "ffn": 0.9, "expert": 1.15}
 
 # Published FP32 top-1 seeds for the paper's models (fractions).
 BASE_ACC_SEED = {
@@ -111,24 +128,55 @@ class AccuracySurrogate:
     ``ACC_DELTA_PP`` array in ``pe.py`` is only a derived view.
     """
 
-    def __init__(self, deltas_pp: dict[str, float] | None = None):
+    def __init__(self, deltas_pp: dict[str, float] | None = None,
+                 class_sens: dict[str, float] | None = None):
         unknown = set(deltas_pp or ()) - set(PE_TYPE_NAMES)
         if unknown:
             raise KeyError(f"unknown PE types in deltas: {sorted(unknown)}")
+        unknown = set(class_sens or ()) - set(ACC_CLASS_SENS)
+        if unknown:
+            raise KeyError(f"unknown accuracy classes in class_sens: "
+                           f"{sorted(unknown)}")
         self._deltas = dict(ACC_DELTA_BY_NAME, **(deltas_pp or {}))
+        self._class_sens = dict(ACC_CLASS_SENS, **(class_sens or {}))
         self._measured: dict[tuple[str, str], float] = {}
 
     # -- seeded prediction ---------------------------------------------------
 
-    def delta_pp(self, pe_type, macs: float | None = None) -> float:
-        """Accuracy delta vs FP32 (pp) for one PE type at a capacity."""
-        d = self._deltas[_pe_name(pe_type)]
-        return d * (1.0 if macs is None else capacity_scale(macs))
+    def class_multiplier(self, class_mix=None) -> float:
+        """Delta multiplier for a MAC-weighted ``ACC_CLASSES`` mix
+        (``workloads.acc_class_mix``): ``sum(mix * sens)``.
 
-    def delta_array(self, macs: float | None = None) -> jnp.ndarray:
+        ``None`` (untagged model) returns exactly 1.0, and so does an
+        all-default mix — the scalar-delta paths are reproduced bit-exactly
+        for every pre-existing workload."""
+        if class_mix is None:
+            return 1.0
+        from repro.core.workloads import ACC_CLASSES
+        mix = tuple(float(v) for v in class_mix)
+        if len(mix) != len(ACC_CLASSES):
+            raise ValueError(f"class_mix needs {len(ACC_CLASSES)} entries "
+                             f"({ACC_CLASSES}), got {len(mix)}")
+        if mix[0] == 1.0 and not any(mix[1:]):
+            return 1.0  # exact: no float dot product on the legacy path
+        return float(sum(m * self._class_sens[c]
+                         for m, c in zip(mix, ACC_CLASSES)))
+
+    def delta_pp(self, pe_type, macs: float | None = None,
+                 class_mix=None) -> float:
+        """Accuracy delta vs FP32 (pp) for one PE type at a capacity,
+        optionally weighted by a layer-class sensitivity mix."""
+        d = self._deltas[_pe_name(pe_type)]
+        d = d * (1.0 if macs is None else capacity_scale(macs))
+        mult = self.class_multiplier(class_mix)
+        return d if mult == 1.0 else d * mult
+
+    def delta_array(self, macs: float | None = None,
+                    class_mix=None) -> jnp.ndarray:
         """Thin positional view aligned with ``PE_TYPE_NAMES`` — the jit
         consumer form (gather by pe_type code)."""
-        return jnp.array([self.delta_pp(n, macs) for n in PE_TYPE_NAMES])
+        return jnp.array([self.delta_pp(n, macs, class_mix)
+                          for n in PE_TYPE_NAMES])
 
     # -- calibration ---------------------------------------------------------
 
@@ -153,11 +201,14 @@ class AccuracySurrogate:
 
     def predict(self, model_name: str, pe_type,
                 macs: float | None = None,
-                base_acc: float | None = None) -> float:
+                base_acc: float | None = None,
+                class_mix=None) -> float:
         """Top-1 accuracy (fraction) of ``model_name`` under ``pe_type``.
 
         Priority: measured (model, pe) point > measured FP32 base + seeded
-        delta > supplied/seeded base + seeded delta.
+        delta > supplied/seeded base + seeded delta.  ``class_mix`` (a
+        ``workloads.acc_class_mix`` tuple) weights the delta by layer-class
+        sensitivity; measured points are never reweighted.
         """
         pe = _pe_name(pe_type)
         if (model_name, pe) in self._measured:
@@ -166,12 +217,14 @@ class AccuracySurrogate:
         if base is None:
             base = (base_acc if base_acc is not None
                     else seeded_base_accuracy(model_name, macs))
-        return base + self.delta_pp(pe, macs) / 100.0
+        return base + self.delta_pp(pe, macs, class_mix) / 100.0
 
     def predict_per_type(self, model_name: str,
                          macs: float | None = None,
-                         base_acc: float | None = None) -> np.ndarray:
+                         base_acc: float | None = None,
+                         class_mix=None) -> np.ndarray:
         """Predicted accuracy for every PE type, aligned with
         ``PE_TYPE_NAMES`` (the per-model accuracy column of the joint DSE)."""
-        return np.array([self.predict(model_name, n, macs, base_acc)
+        return np.array([self.predict(model_name, n, macs, base_acc,
+                                      class_mix)
                          for n in PE_TYPE_NAMES])

@@ -64,7 +64,8 @@ from repro.core.dse import (DEFAULT_CHUNK_SIZE, ParetoArchive, TwoStagePruner,
                             finish_chunk, fold_budget_chunk)
 from repro.obs import as_tracer, timed_iter
 from repro.core.ppa import PPAModels
-from repro.core.workloads import (Workload, layer_bucket, resnet_cifar,
+from repro.core.workloads import (Workload, acc_class_mix, layer_bucket,
+                                  llm_decode, llm_moe, resnet_cifar,
                                   stack_workloads, transformer_gemm, vgg16,
                                   workload_layers, workload_macs)
 
@@ -74,40 +75,55 @@ COEXPLORE_METRICS = ("accuracy", "macs_per_s_per_mm2", "neg_energy_per_mac_pj")
 
 class ModelEntry(NamedTuple):
     """One point on the model axis: a workload plus its normalization
-    scalar (forward MACs) and FP32 base accuracy."""
+    scalar (forward MACs) and FP32 base accuracy.
+
+    ``acc_mix`` (opt-in, ``model_entry(acc_classes=True)``) is the
+    MAC-weighted ``workloads.ACC_CLASSES`` fraction tuple that weights the
+    accuracy surrogate's per-layer-class sensitivity priors; ``None``
+    keeps the scalar-delta path bit-exactly.
+    """
     name: str
     workload: Workload
     macs: float        # forward MACs of one inference (normalizer)
     base_acc: float    # FP32 top-1 (fraction; proxy for non-classifiers)
+    acc_mix: tuple | None = None   # ACC_CLASSES MAC fractions (opt-in)
 
 
 def model_entry(workload: Workload,
-                base_acc: float | None = None) -> ModelEntry:
+                base_acc: float | None = None,
+                acc_classes: bool = False) -> ModelEntry:
     """Wrap a Workload for the model axis (MACs + seeded FP32 accuracy).
 
     Capacity is per-inference (batch divided out) — accuracy is a model
-    property and must not change with batching.
+    property and must not change with batching.  ``acc_classes=True``
+    attaches the workload's layer-class mix so ``accuracy_matrix`` applies
+    the per-class sensitivity priors (serving workloads opt in; the CNN
+    zoo stays on the exact scalar path).
     """
     macs = workload_macs(workload, per_inference=True)
     if base_acc is None:
         base_acc = seeded_base_accuracy(workload.name, macs)
-    return ModelEntry(workload.name, workload, macs, float(base_acc))
+    mix = acc_class_mix(workload) if acc_classes else None
+    return ModelEntry(workload.name, workload, macs, float(base_acc), mix)
 
 
 def default_model_set(batch: int = 1) -> tuple[ModelEntry, ...]:
     """The canonical >= 8-model axis: paper CNNs, depth/width/resolution
     scaled family members (including an ImageNet-scale 224-resolution
-    ResNet), and seq-length-scaled transformer GEMMs.
+    ResNet), seq-length-scaled transformer GEMMs, and the LLM serving
+    members (decode-phase + MoE, on the phase-aware IR with layer-class
+    accuracy mixes).
 
     Growing this axis is compile-free by construction: a new member lands
     in an existing layer-count bucket (the 224-resolution ResNet has the
-    same depth as its CIFAR sibling, bucket 32), so it costs lanes in an
+    same depth as its CIFAR sibling, bucket 32; the serving members'
+    9-14 extracted GEMM rows land in bucket 16), so it costs lanes in an
     already-compiled evaluator, not an XLA compilation — the default zoo
     still collapses to the {16, 32, 64} bucket set.
     """
     tfm = dict(d_model=256, n_layers=6, n_heads=8, d_ff=1024, vocab=8192,
                batch=batch)
-    return tuple(model_entry(wl) for wl in (
+    entries = [model_entry(wl) for wl in (
         resnet_cifar(20, batch=batch),
         resnet_cifar(32, batch=batch),
         resnet_cifar(56, batch=batch),
@@ -118,7 +134,13 @@ def default_model_set(batch: int = 1) -> tuple[ModelEntry, ...]:
         vgg16("cifar10", batch=batch, width_mult=0.5),
         transformer_gemm(seq=256, **tfm),
         transformer_gemm(seq=1024, **tfm),
-    ))
+    )]
+    entries += [model_entry(wl, acc_classes=True) for wl in (
+        llm_decode("qwen3-32b", context=8192, batch=batch),
+        llm_decode("deepseek-moe-16b", context=4096, batch=batch),
+        llm_moe("phi3.5-moe-42b-a6.6b", seq=512, batch=batch, mode="decode"),
+    )]
+    return tuple(entries)
 
 
 class JointDesignPoint(NamedTuple):
@@ -230,8 +252,9 @@ def accuracy_matrix(models: Sequence[ModelEntry],
     seeded ``AccuracySurrogate``.
     """
     accuracy = AccuracySurrogate() if accuracy is None else accuracy
-    return np.stack([accuracy.predict_per_type(m.name, m.macs, m.base_acc)
-                     for m in models])
+    return np.stack([accuracy.predict_per_type(
+        m.name, m.macs, m.base_acc,
+        class_mix=getattr(m, "acc_mix", None)) for m in models])
 
 
 class JointWalk(NamedTuple):
@@ -553,7 +576,8 @@ def _sharded_coexplore_front(
                 prune=bool(engage),
                 budget=None if budget is None else budget.spec(),
                 space=_shard.space_signature(space),
-                models=[m.name for m in models]))
+                models=[m.name for m in models],
+                workloads=_shard.workloads_signature(models)))
         loaded = ckpt.load(telemetry=telemetry)
         if loaded is not None:
             cursor = int(loaded["cursor"])

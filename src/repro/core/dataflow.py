@@ -33,7 +33,7 @@ import jax.numpy as jnp
 from repro.core import energy as E
 from repro.core import pe as PE
 from repro.core.arch import AcceleratorConfig
-from repro.core.workloads import LayerSpec
+from repro.core.workloads import KIND_ATTN_KV, KIND_MOE_EXPERT, LayerSpec
 
 
 class LayerCost(NamedTuple):
@@ -58,10 +58,29 @@ def _ceil_div(a, b):
 
 def layer_cost(layer: LayerSpec, cfg: AcceleratorConfig,
                clock_ghz: jnp.ndarray) -> LayerCost:
-    """Cost of one layer on one design point at a given clock."""
+    """Cost of one layer on one design point at a given clock.
+
+    Per-operand second-operand streams (the phase-aware IR; neutral
+    fields reproduce the legacy resident-weight arithmetic bit-exactly —
+    every altered term is a ``jnp.where`` whose false branch is the
+    original expression):
+
+    * resident weights (conv/gemm): stationary, gbuf-replayed — the
+      paper's model, unchanged;
+    * streamed KV (``attn_kv``): ``stream_words`` activation-width words
+      read once per batch element with NO cross-batch reuse or replay
+      (the cache is per-sequence state, not a shared filter);
+    * gated expert weights (``moe_expert``): the layer shape carries the
+      ACTIVE top-k compute while weight DRAM/gbuf traffic is divided by
+      ``active_frac`` (= 1/touched experts) — traffic follows touched
+      experts, compute follows active MACs.
+    """
     H, W, C, K = layer.H, layer.W, layer.C, layer.K
     R, S, stride, batch = layer.R, layer.S, layer.stride, layer.batch
     count = layer.count
+    streamed = layer.kind == float(KIND_ATTN_KV)
+    gated = layer.kind == float(KIND_MOE_EXPERT)
+    active_frac = jnp.maximum(layer.active_frac, 1e-9)
     Eh = jnp.floor((H - R) / stride) + 1.0
     F = jnp.floor((W - S) / stride) + 1.0
     macs = batch * K * C * R * S * Eh * F * count
@@ -69,6 +88,9 @@ def layer_cost(layer: LayerSpec, cfg: AcceleratorConfig,
     a_bits = PE.act_bits(cfg.pe_type)
     w_bits = PE.weight_bits(cfg.pe_type)
     p_bits = PE.psum_bits(cfg.pe_type)
+    # the second operand's storage width: resident/gated weights at
+    # weight precision, a streamed KV block at activation precision
+    op2_bits = jnp.where(streamed, a_bits, w_bits)
 
     # ---- per-PE tiling limited by scratchpad capacities ----------------
     c_fit = jnp.clip(jnp.floor(cfg.spad_ifmap / S), 1.0, C)       # channels
@@ -111,38 +133,52 @@ def layer_cost(layer: LayerSpec, cfg: AcceleratorConfig,
                                   jnp.maximum(C * H * W * a_bits, 1.0)),
                         1.0, batch)
     replay_fil = _ceil_div(batch, n_if_fit)
+    # second-operand DRAM stream: resident weights replay with gbuf
+    # capacity; gated expert weights are read once per TOUCHED expert
+    # (/ active_frac); a streamed KV block is read once per batch element
+    fil_dram_bits = jnp.where(
+        streamed, layer.stream_words * a_bits * batch,
+        jnp.where(gated, fil_words * w_bits / active_frac,
+                  fil_words * w_bits * replay_fil))
     dram_bits = (if_words * a_bits * replay_if
-                 + fil_words * w_bits * replay_fil
+                 + fil_dram_bits
                  + of_words * a_bits) * count
 
     # ---- gbuf traffic ----------------------------------------------------
     if_gbuf_reads = if_words * _ceil_div(K, q_fit * repl_r)
-    fil_gbuf_reads = fil_words * fold_e * batch
+    fil_gbuf_reads = jnp.where(
+        streamed, layer.stream_words * batch,
+        jnp.where(gated, fil_words * fold_e * batch / active_frac,
+                  fil_words * fold_e * batch))
     psum_spill = 2.0 * of_words * jnp.maximum(_ceil_div(C, c_fit) - 1.0, 0.0)
-    gbuf_bits = (if_gbuf_reads * a_bits + fil_gbuf_reads * w_bits
+    gbuf_bits = (if_gbuf_reads * a_bits + fil_gbuf_reads * op2_bits
                  + psum_spill * p_bits + of_words * a_bits) * count
 
     # ---- NoC + RF traffic ------------------------------------------------
-    noc_bits = (if_gbuf_reads * a_bits + fil_gbuf_reads * w_bits
+    noc_bits = (if_gbuf_reads * a_bits + fil_gbuf_reads * op2_bits
                 + psum_spill * p_bits) * count
-    # Each MAC reads one act + one weight from the spads; partial sums
-    # accumulate in the PE's register across the S filter taps AND the
-    # c channels resident in the spads, touching the psum spad once per
-    # c*S MACs (read-modify-write).
+    # Each MAC reads one act + one second-operand word from the spads;
+    # partial sums accumulate in the PE's register across the S filter
+    # taps AND the c channels resident in the spads, touching the psum
+    # spad once per c*S MACs (read-modify-write).
     psum_rf_accesses = 2.0 * macs / jnp.maximum(S * c_fit, 1.0)
-    rf_bits = macs * (a_bits + w_bits) + psum_rf_accesses * p_bits
+    rf_bits = macs * (a_bits + op2_bits) + psum_rf_accesses * p_bits
 
     # ---- memory-bound cycles ----------------------------------------------
     bytes_per_cycle = cfg.bandwidth_gbps / jnp.maximum(clock_ghz, 1e-6)
     cycles_memory = (dram_bits / 8.0) / jnp.maximum(bytes_per_cycle, 1e-6)
-    cycles_compute = cycles_compute * count
+    # resident-weight layers keep the historical per-count serialization
+    # factor (each repeat re-stages its weights through the array);
+    # streamed-KV layers have no weights to stage, so their repeats run at
+    # the array's MAC throughput (macs above already carries count)
+    cycles_compute = cycles_compute * jnp.where(streamed, 1.0, count)
     cycles = jnp.maximum(cycles_compute, cycles_memory)
 
     # ---- energy ------------------------------------------------------------
     e_mac = macs * PE.mac_energy_pj(cfg.pe_type) \
         + cycles * active_pes * PE.PE_CTRL_ENERGY_PJ
     e_rf = (macs * E.rf_access_energy(a_bits, cfg.spad_ifmap * a_bits)
-            + macs * E.rf_access_energy(w_bits, cfg.spad_filter * w_bits)
+            + macs * E.rf_access_energy(op2_bits, cfg.spad_filter * op2_bits)
             + psum_rf_accesses * E.rf_access_energy(
                 p_bits, cfg.spad_psum * p_bits))
     e_mem = (e_rf

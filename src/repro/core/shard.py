@@ -187,6 +187,36 @@ def space_signature(space: dict | None) -> dict:
                                _space_axes(space))}
 
 
+def workloads_signature(models: Sequence) -> str:
+    """Content digest of a model axis: every ``LayerSpec`` field of every
+    workload (INCLUDING the phase-aware IR fields — kind/stream_words/
+    active_frac/acc_class) plus the per-model normalizers and accuracy
+    class mix.
+
+    Two model axes with the same names but different layer IR (e.g. a
+    decode member re-extracted at a different context length, or an MoE
+    member re-gated at a different top-k) hash differently, so checkpoint
+    resume and the frontserver cache can never serve a front computed
+    from different traffic streams under a stale name match.
+    """
+    import hashlib
+
+    from repro.core.workloads import LayerSpec
+
+    h = hashlib.sha256()
+    for m in models:
+        h.update(m.name.encode())
+        h.update(np.float64(m.macs).tobytes())
+        h.update(np.float64(m.base_acc).tobytes())
+        mix = getattr(m, "acc_mix", None)
+        h.update(b"-" if mix is None
+                 else np.asarray(mix, np.float64).tobytes())
+        for f in LayerSpec._fields:
+            h.update(np.asarray(getattr(m.workload.layers, f),
+                                np.float64).tobytes())
+    return h.hexdigest()[:16]
+
+
 def export_front_csv(path: str, archive: ParetoArchive,
                      metrics: Sequence[str], space: dict | None = None,
                      models: Sequence | None = None) -> str:
@@ -223,6 +253,56 @@ def export_front_csv(path: str, archive: ParetoArchive,
             out.append(row["pe_type_name"])
             out += [row[k] for k in AcceleratorConfig._fields]
             w.writerow(out)
+    os.replace(tmp, path)
+    return path
+
+
+def _front_columns(archive: ParetoArchive, metrics: Sequence[str],
+                   space: dict | None, models: Sequence | None) -> dict:
+    """The decoded front as name -> column list (shared by the tabular
+    exporters)."""
+    idx = archive.indices
+    obj = archive.objectives
+    if models is not None:
+        mids, cfgs = joint_space_points(idx, space, num_models=len(models))
+    else:
+        mids, cfgs = None, space_points(idx, space)
+    cols: dict[str, list] = {"index": [int(i) for i in idx]}
+    if models is not None:
+        cols["model"] = [models[int(m)].name for m in mids]
+    for j, m in enumerate(metrics):
+        cols[m] = [float(v) for v in obj[:, j]]
+    rows = list(config_rows(cfgs))
+    cols["pe_type_name"] = [r["pe_type_name"] for r in rows]
+    for k in AcceleratorConfig._fields:
+        cols[k] = [r[k] for r in rows]
+    return cols
+
+
+def export_front_parquet(path: str, archive: ParetoArchive,
+                         metrics: Sequence[str], space: dict | None = None,
+                         models: Sequence | None = None) -> str:
+    """Write the decoded front to Parquet atomically — the columnar twin
+    of ``export_front_csv`` (same columns, same row order) for fronts big
+    enough that downstream analysis wants predicate pushdown instead of
+    CSV parsing.
+
+    Optional-dependency-guarded: requires ``pyarrow`` and raises a clear
+    ``RuntimeError`` (not an ImportError deep inside a sweep) when the
+    environment lacks it.
+    """
+    try:
+        import pyarrow as pa
+        import pyarrow.parquet as pq
+    except ImportError as e:  # pragma: no cover - env-dependent
+        raise RuntimeError(
+            "export_front_parquet requires pyarrow (not installed); "
+            "use export_front_csv instead") from e
+    cols = _front_columns(archive, metrics, space, models)
+    table = pa.table({k: pa.array(v) for k, v in cols.items()})
+    tmp = f"{path}.tmp"
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    pq.write_table(table, tmp)
     os.replace(tmp, path)
     return path
 
@@ -461,7 +541,7 @@ def sharded_pareto_front(
 
 __all__ = [
     "DEFAULT_PIPELINE_DEPTH", "SweepCheckpointer", "export_front_csv",
-    "merge_archives", "merge_budget_stats", "resolve_shards",
-    "shard_device", "sharded_pareto_front", "sharded_space_stream",
-    "space_signature",
+    "export_front_parquet", "merge_archives", "merge_budget_stats",
+    "resolve_shards", "shard_device", "sharded_pareto_front",
+    "sharded_space_stream", "space_signature", "workloads_signature",
 ]

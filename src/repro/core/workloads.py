@@ -9,6 +9,31 @@ zoo (DESIGN.md §2).
 A workload is a stack of layer specs (conv or GEMM-as-1x1-conv) with a
 ``count`` multiplicity, kept as parallel jnp arrays so the dataflow cost
 model evaluates all layers of a network in one vmapped call.
+
+Phase-aware layer IR
+--------------------
+Beyond the conv shape, every layer carries operand-residency fields that
+tell the cost model how its *second* operand behaves (``LAYER_KINDS``):
+
+* ``conv`` / ``gemm`` — the second operand is a resident weight tensor:
+  stationary in the array, replayed through the gbuf (the paper's model,
+  unchanged — these two kinds cost identically);
+* ``attn_kv`` — the second operand is a per-sequence KV-cache block:
+  ``stream_words`` words are STREAMED from DRAM once per batch element at
+  activation width, with no cross-batch reuse (decode-phase attention);
+* ``moe_expert`` — the layer shape describes the ACTIVE (top-k-gated)
+  GEMM, while weight traffic follows the TOUCHED experts:
+  ``active_frac`` = active-compute fraction per weight read (1/touched
+  experts), so DRAM/gbuf weight traffic is divided by it.
+
+``acc_class`` (``ACC_CLASSES``) tags the layer's accuracy-sensitivity
+class (attention / FFN / expert) for ``accuracy.AccuracySurrogate``'s
+per-class precision priors; it never enters the cost model.
+
+All four fields default to neutral values (resident weights, fully
+active, default class) under which the cost model is BIT-IDENTICAL to
+the pre-IR conv-only model — the padding/bit-identity contracts of
+``pad_workload`` and the one-compile joint sweeps are unchanged.
 """
 
 from __future__ import annotations
@@ -18,12 +43,32 @@ from typing import NamedTuple, Sequence
 import jax.numpy as jnp
 import numpy as np
 
+# Layer kinds: how the second operand resides (codes stored as floats in
+# the stacked arrays; conv and gemm share the resident-weight cost path).
+LAYER_KINDS = ("conv", "gemm", "attn_kv", "moe_expert")
+KIND_CONV, KIND_GEMM, KIND_ATTN_KV, KIND_MOE_EXPERT = range(len(LAYER_KINDS))
+
+# Accuracy-sensitivity classes (see accuracy.ACC_CLASS_SENS for the
+# per-class quantization-sensitivity priors).
+ACC_CLASSES = ("default", "attn", "ffn", "expert")
+ACC_DEFAULT, ACC_ATTN, ACC_FFN, ACC_EXPERT = range(len(ACC_CLASSES))
+
 
 class LayerSpec(NamedTuple):
     """One conv layer: input HxWxC, K filters of RxS, given stride & batch.
 
     A GEMM (M x Kd) @ (Kd x N) is the degenerate conv
     H=1, W=M, C=Kd, K=N, R=S=stride=1  (so E=1, F=M, MACs = M*Kd*N*batch).
+
+    The trailing phase-aware IR fields (defaults = neutral / legacy):
+
+    * ``kind`` — ``LAYER_KINDS`` code (conv/gemm resident, attn_kv
+      streamed, moe_expert gated);
+    * ``stream_words`` — words of the streamed second operand per batch
+      element (attn_kv: KV-cache length x head_dim; 0 otherwise);
+    * ``active_frac`` — active-MAC fraction per weight read for gated
+      expert layers (1/touched experts; 1.0 = dense reuse);
+    * ``acc_class`` — ``ACC_CLASSES`` code for the accuracy surrogate.
     """
 
     H: jnp.ndarray
@@ -35,6 +80,10 @@ class LayerSpec(NamedTuple):
     stride: jnp.ndarray
     batch: jnp.ndarray
     count: jnp.ndarray  # multiplicity (identical repeated layers)
+    kind: jnp.ndarray = 0.0          # LAYER_KINDS code
+    stream_words: jnp.ndarray = 0.0  # streamed operand words / batch elem
+    active_frac: jnp.ndarray = 1.0   # active-MAC fraction per weight read
+    acc_class: jnp.ndarray = 0.0     # ACC_CLASSES code
 
     def out_hw(self):
         E = jnp.floor((self.H - self.R) / self.stride) + 1.0
@@ -52,9 +101,16 @@ class Workload(NamedTuple):
     layer_names: tuple
 
 
+# Neutral IR defaults, applied by _stack to row dicts that predate the
+# phase-aware fields (and by pad_workload to padding rows).
+_IR_DEFAULTS = dict(kind=float(KIND_CONV), stream_words=0.0,
+                    active_frac=1.0, acc_class=float(ACC_DEFAULT))
+
+
 def _stack(rows: Sequence[dict], name: str, names: Sequence[str]) -> Workload:
     fields = LayerSpec._fields
-    arr = {f: jnp.asarray(np.array([r[f] for r in rows], np.float64), jnp.float32)
+    arr = {f: jnp.asarray(np.array([r.get(f, _IR_DEFAULTS.get(f))
+                                    for r in rows], np.float64), jnp.float32)
            for f in fields}
     return Workload(name=name, layers=LayerSpec(**arr), layer_names=tuple(names))
 
@@ -71,9 +127,12 @@ def conv_valid(H, W, C, K, R, S=None, stride=1, batch=1, count=1):
                 count=count)
 
 
-def gemm(M, Kd, N, batch=1, count=1):
+def gemm(M, Kd, N, batch=1, count=1, kind=KIND_GEMM, stream_words=0.0,
+         active_frac=1.0, acc_class=ACC_DEFAULT):
     return dict(H=1, W=M, C=Kd, K=N, R=1, S=1, stride=1, batch=batch,
-                count=count)
+                count=count, kind=float(kind),
+                stream_words=float(stream_words),
+                active_frac=float(active_frac), acc_class=float(acc_class))
 
 
 # ---------------------------------------------------------------------------
@@ -226,46 +285,93 @@ PAPER_WORKLOADS = {
 # Beyond the paper: transformer-family GEMM extraction (assigned archs)
 # ---------------------------------------------------------------------------
 
+def touched_experts(experts: int, topk: int, routed_tokens: int) -> float:
+    """Expected number of DISTINCT experts touched by ``routed_tokens``
+    independent top-k routings over ``experts`` choices (uniform router).
+
+    The MoE traffic model's host-side constant: weight DRAM traffic
+    follows touched experts while compute follows active (token, expert)
+    pairs.  Decode (one token) touches exactly ``topk`` experts; prefill
+    with many tokens saturates toward all ``experts``.
+    """
+    if experts <= 0 or topk <= 0 or routed_tokens <= 0:
+        return 0.0
+    frac = min(float(topk) / float(experts), 1.0)
+    t = float(experts) * (1.0 - (1.0 - frac) ** float(routed_tokens))
+    return float(np.clip(t, float(min(topk, experts)), float(experts)))
+
+
 def transformer_workload(cfg, seq: int, batch: int, mode: str = "train",
                          name: str | None = None) -> Workload:
     """Extract per-layer GEMMs from a repro.configs ArchConfig-like object.
 
     mode: 'train'/'prefill' use full seq; 'decode' uses one token against a
-    seq-long KV cache (attention GEMMs become matrix-vector).
+    seq-long KV cache (attention GEMMs become matrix-vector, and the
+    score/value GEMMs are emitted as ``attn_kv`` layers: the K/V cache is
+    a per-sequence STREAMED operand, not a resident weight).
     Counts forward MACs only (training multiplies by 3 in the cost model if
     requested by the caller).
+
+    MoE configs (``cfg.moe_experts > 0``) honor ``cfg.first_dense`` /
+    ``cfg.dense_d_ff`` (leading dense layers with their own FFN width —
+    DeepSeekMoE's layer 0); routed experts are emitted as ``moe_expert``
+    layers shaped by the ACTIVE top-k compute with ``active_frac`` set
+    from the expected touched-expert count, and always-on shared experts
+    as plain resident GEMMs.
     """
     d, L = cfg.d_model, cfg.n_layers
     hq, hkv = cfg.n_heads, cfg.kv_heads
     dh = getattr(cfg, "head_dim", d // max(hq, 1))
-    tokens = 1 if mode == "decode" else seq
+    decode = mode == "decode"
+    tokens = 1 if decode else seq
     kvlen = seq
     rows, names = [], []
 
-    def add(tag, M, Kd, N, count=1):
-        rows.append(gemm(M, Kd, N, batch=batch, count=count))
+    def add(tag, M, Kd, N, count=1, **ir):
+        rows.append(gemm(M, Kd, N, batch=batch, count=count, **ir))
         names.append(tag)
 
     attn_layers = getattr(cfg, "attn_layers", L if hq > 0 else 0)
     if attn_layers:
-        add("wq", tokens, d, hq * dh, attn_layers)
-        add("wk", tokens, d, hkv * dh, attn_layers)
-        add("wv", tokens, d, hkv * dh, attn_layers)
-        add("wo", tokens, hq * dh, d, attn_layers)
-        # attention score/value GEMMs (per head, batched over heads)
-        add("qk", tokens, dh, kvlen, attn_layers * hq)
-        add("av", tokens, kvlen, dh, attn_layers * hq)
-    # FFN
-    n_dense = getattr(cfg, "dense_layers", L if cfg.moe_experts == 0 else 0)
-    n_moe = L - n_dense if cfg.moe_experts else 0
+        add("wq", tokens, d, hq * dh, attn_layers, acc_class=ACC_ATTN)
+        add("wk", tokens, d, hkv * dh, attn_layers, acc_class=ACC_ATTN)
+        add("wv", tokens, d, hkv * dh, attn_layers, acc_class=ACC_ATTN)
+        add("wo", tokens, hq * dh, d, attn_layers, acc_class=ACC_ATTN)
+        # attention score/value GEMMs (per head, batched over heads).
+        # Decode streams the KV cache (kvlen x head_dim per sequence);
+        # prefill computes K/V on the fly — resident-operand costing.
+        kv_ir = dict(kind=KIND_ATTN_KV, stream_words=float(kvlen) * dh,
+                     acc_class=ACC_ATTN) if decode \
+            else dict(acc_class=ACC_ATTN)
+        add("qk", tokens, dh, kvlen, attn_layers * hq, **kv_ir)
+        add("av", tokens, kvlen, dh, attn_layers * hq, **kv_ir)
+    # FFN: dense layers (all of them for non-MoE; cfg.first_dense leading
+    # layers at cfg.dense_d_ff width for MoE configs), then routed experts
+    if cfg.moe_experts:
+        n_dense = min(int(getattr(cfg, "first_dense", 0) or 0), L)
+        n_moe = L - n_dense
+        dense_ff = int(getattr(cfg, "dense_d_ff", 0) or 0) or cfg.d_ff
+    else:
+        n_dense, n_moe, dense_ff = L, 0, cfg.d_ff
     if n_dense:
-        add("ffn_in", tokens, d, cfg.d_ff * 2, n_dense)   # gate+up (SwiGLU)
-        add("ffn_out", tokens, cfg.d_ff, d, n_dense)
+        add("ffn_in", tokens, d, dense_ff * 2, n_dense,
+            acc_class=ACC_FFN)   # gate+up (SwiGLU)
+        add("ffn_out", tokens, dense_ff, d, n_dense, acc_class=ACC_FFN)
     if n_moe:
-        topk = cfg.moe_topk + getattr(cfg, "moe_shared", 0)
-        add("moe_in", tokens * topk, d, cfg.moe_d_ff * 2, n_moe)
-        add("moe_out", tokens * topk, cfg.moe_d_ff, d, n_moe)
-        add("router", tokens, d, cfg.moe_experts, n_moe)
+        experts, topk = cfg.moe_experts, cfg.moe_topk
+        shared = getattr(cfg, "moe_shared", 0)
+        touched = touched_experts(experts, topk, tokens * batch)
+        gated = dict(kind=KIND_MOE_EXPERT,
+                     active_frac=1.0 / max(touched, 1.0),
+                     acc_class=ACC_EXPERT)
+        add("moe_in", tokens * topk, d, cfg.moe_d_ff * 2, n_moe, **gated)
+        add("moe_out", tokens * topk, cfg.moe_d_ff, d, n_moe, **gated)
+        if shared:  # always-active shared experts: dense resident weights
+            add("moe_shared_in", tokens, d, cfg.moe_d_ff * 2,
+                n_moe * shared, acc_class=ACC_EXPERT)
+            add("moe_shared_out", tokens, cfg.moe_d_ff, d,
+                n_moe * shared, acc_class=ACC_EXPERT)
+        add("router", tokens, d, experts, n_moe, acc_class=ACC_FFN)
     # embeddings / head
     add("lm_head", tokens, d, cfg.vocab, 1)
     return _stack(rows, name or f"{cfg.name}-{mode}", names)
@@ -307,13 +413,91 @@ def transformer_gemm(seq: int = 512, d_model: int = 512, n_layers: int = 8,
         name=name or f"tfm-d{d_model}-L{n_layers}-s{seq}-{mode}")
 
 
+# ---------------------------------------------------------------------------
+# LLM serving families (ROADMAP item 3): decode-phase and MoE workloads
+# instantiated from the repro.configs registry on the phase-aware IR.
+# ---------------------------------------------------------------------------
+
+def _arch_config(arch):
+    """Resolve an ``llm_*`` family's ``arch`` argument: a CLI id / module
+    name (``repro.configs.get``) or an ArchConfig-like object passed
+    through."""
+    if isinstance(arch, str):
+        from repro.configs import get as _get
+        return _get(arch)
+    return arch
+
+
+def llm_decode(arch="qwen3-32b", context: int = 4096, batch: int = 1,
+               name: str | None = None) -> Workload:
+    """Decode-phase serving member: one generated token against a
+    ``context``-long KV cache.
+
+    The batch x context knobs span the family: per-step attention traffic
+    is KV-READ dominated (``attn_kv`` streamed operands grow linearly in
+    ``context`` while per-step compute stays matrix-vector), so long
+    contexts sit far down the arithmetic-intensity cliff — the regime
+    where the memory-bound term, not the PE array, sets latency.
+    """
+    cfg = _arch_config(arch)
+    return transformer_workload(
+        cfg, seq=context, batch=batch, mode="decode",
+        name=name or f"{cfg.name}-decode-c{context}-b{batch}")
+
+
+def llm_moe(arch="deepseek-moe-16b", experts: int | None = None,
+            topk: int | None = None, seq: int = 512, batch: int = 1,
+            mode: str = "decode", name: str | None = None) -> Workload:
+    """MoE serving member: top-k-gated expert layers on the phase-aware IR.
+
+    The expert-count x top-k knobs span the family: active MACs scale
+    with ``topk`` while expert weight traffic follows the TOUCHED experts
+    (``touched_experts``), so decode-phase members have active compute
+    far below their streamed weight bytes — the sparsity-gated regime.
+    """
+    cfg = _arch_config(arch)
+    if experts is not None or topk is not None:
+        cfg = cfg.replace(
+            moe_experts=cfg.moe_experts if experts is None else int(experts),
+            moe_topk=cfg.moe_topk if topk is None else int(topk))
+    if cfg.moe_experts <= 0 or cfg.moe_topk <= 0:
+        raise ValueError(f"llm_moe needs an MoE config (moe_experts/moe_topk"
+                         f" > 0), got {cfg.name} with "
+                         f"experts={cfg.moe_experts} topk={cfg.moe_topk}")
+    tag = (f"{cfg.name}-moe-e{cfg.moe_experts}k{cfg.moe_topk}"
+           f"-{mode}-s{seq}-b{batch}")
+    return transformer_workload(cfg, seq=seq, batch=batch, mode=mode,
+                                name=name or tag)
+
+
+def acc_class_mix(wl: Workload) -> tuple:
+    """MAC-weighted fraction of each ``ACC_CLASSES`` accuracy class.
+
+    The workload-side input to ``AccuracySurrogate``'s per-class
+    precision-sensitivity priors: ``sum(mix) == 1`` and an all-default
+    workload returns ``(1, 0, 0, ...)`` (which the surrogate maps to the
+    exact legacy scalar delta)."""
+    macs = np.asarray(wl.layers.macs(), np.float64)
+    cls = np.asarray(wl.layers.acc_class, np.float64).astype(np.int64)
+    mix = np.zeros(len(ACC_CLASSES), np.float64)
+    np.add.at(mix, np.clip(cls, 0, len(ACC_CLASSES) - 1), macs)
+    total = mix.sum()
+    if total <= 0.0:
+        return tuple(1.0 if i == ACC_DEFAULT else 0.0
+                     for i in range(len(ACC_CLASSES)))
+    return tuple(float(v) for v in mix / total)
+
+
 # family name -> constructor; each constructor's keyword grid generates the
 # model axis (depth/width/resolution for the CNNs, seq/d_model/n_layers for
-# the transformer GEMMs).
+# the transformer GEMMs, arch x batch x context / expert-count x top-k for
+# the LLM serving families).
 MODEL_FAMILIES = {
     "resnet-cifar": resnet_cifar,
     "vgg16": vgg16,
     "transformer-gemm": transformer_gemm,
+    "llm-decode": llm_decode,
+    "llm-moe": llm_moe,
 }
 
 
@@ -328,9 +512,11 @@ MODEL_FAMILIES = {
 
 # Padding row: every field at its smallest legal value, count=0.  count=0
 # zeroes MACs and every traffic/energy term exactly; the remaining fields
-# just have to keep the cost model finite (H=R=S=1 -> 1x1 output).
+# just have to keep the cost model finite (H=R=S=1 -> 1x1 output; the IR
+# fields at their neutral values keep the padding on the legacy resident-
+# weight path).
 _PAD_ROW = dict(H=1.0, W=1.0, C=1.0, K=1.0, R=1.0, S=1.0,
-                stride=1.0, batch=1.0, count=0.0)
+                stride=1.0, batch=1.0, count=0.0, **_IR_DEFAULTS)
 
 
 def workload_layers(wl: Workload) -> int:

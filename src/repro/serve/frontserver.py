@@ -85,7 +85,7 @@ from repro.core.dse import (DEFAULT_CHUNK_SIZE, ParetoArchive,
                             chunk_dominators,
                             _traced_dispatch, _traced_finish,
                             fold_budget_chunk)
-from repro.core.shard import space_signature
+from repro.core.shard import space_signature, workloads_signature
 from repro.obs import as_tracer
 
 # Query lifecycle states.
@@ -371,6 +371,10 @@ class FrontServer:
             kind="frontserver",
             space=space_signature(space),
             models=[m.name for m in self.models],
+            # content digest of every workload's layer IR (kind/stream/
+            # gating fields included): same model names re-extracted at a
+            # different context/top-k can never alias a cached front
+            workloads=workloads_signature(self.models),
             backend=backend_signature(self._model),
             accuracy=_digest(self._acc),
             metrics=list(COEXPLORE_METRICS),
