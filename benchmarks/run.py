@@ -40,7 +40,7 @@ FAST_COEXPLORE_POINTS = 4500
 
 # Benches whose rows land in BENCH_dse.json.
 DSE_BENCHES = ("fig2", "fig4", "fig56", "dse_transformers", "dse_scale",
-               "coexplore", "frontserver", "serving")
+               "coexplore", "frontserver", "serving", "search")
 
 # --fast regression guard: fail if a guarded warm rate drops more than
 # this fraction below the value committed in BENCH_dse.json.  Each entry
@@ -63,7 +63,18 @@ GUARDED_ROWS = (("coexplore", "coexplore_joint_sweep_warm",
                 ("frontserver", "frontserver_storm_warm",
                  "queries_per_sec"),
                 ("serving", "serving_decode_sweep_warm",
-                 "points_per_sec"))
+                 "points_per_sec"),
+                # the budgeted-search row guards THREE fields: warm
+                # throughput, the evals-vs-enumeration margin (0.05 /
+                # evals_fraction — the <= 5%-of-enumeration acceptance
+                # bar, so a driver that silently starts burning more
+                # evaluations fails even at unchanged pts/s) and the
+                # hypervolume ratio vs the enumerated reference front
+                # (front RECOVERY, so a degenerate driver can't pass by
+                # being fast and wrong)
+                ("search", "search_evolve_warm", "points_per_sec"),
+                ("search", "search_evolve_warm", "evals_budget_margin"),
+                ("search", "search_evolve_warm", "hv_ratio"))
 
 
 def _warm_row_fields(rows, guarded_row: str) -> dict | None:
@@ -131,7 +142,7 @@ def main() -> None:
     from benchmarks import (coexplore, dse_scale, dse_transformers,
                             fig2_pe_spread, fig3_ppa_fit, fig4_dse,
                             fig56_pareto, frontserver, kernels_bench,
-                            roofline, serving)
+                            roofline, search, serving)
     mp = FAST_DSE_POINTS if args.fast else None
     benches = {
         "fig2": lambda: fig2_pe_spread.run(max_points=mp),
@@ -150,6 +161,8 @@ def main() -> None:
         "frontserver": lambda: frontserver.run(
             max_points=FAST_COEXPLORE_POINTS if args.fast else None),
         "serving": lambda: serving.run(
+            max_points=FAST_COEXPLORE_POINTS if args.fast else None),
+        "search": lambda: search.run(
             max_points=FAST_COEXPLORE_POINTS if args.fast else None),
         "roofline": roofline.run,
     }

@@ -1,0 +1,147 @@
+"""Budgeted search vs enumeration on the mapping-extended joint space.
+
+The headline perf claim of the search drivers (ROADMAP item 4): on
+``arch.MAPPED_SPACE`` — the per-layer loop-order/tiling digit grows the
+accelerator grid 120x to 3.24M points, ~9.7M joint points over the
+3-model axis, where full enumeration is dishonest — a budgeted
+evolutionary run recovers the Pareto front at a small fraction of the
+enumerated chunk evaluations.
+
+Front recovery is measured against a REFERENCE ENUMERATED SUBGRID: the
+full default accelerator grid crossed with a spread of mapping codes
+(every split/order/divisor regime represented), swept by the enumerated
+``coexplore_front``.  The search rows report
+
+* ``evals_fraction`` — full dataflow evaluations vs enumerating the
+  whole mapped joint space (the <= 5% acceptance bar; the guarded
+  ``evals_budget_margin`` is ``0.05 / evals_fraction``, > 1 while the
+  run stays inside the bar),
+* ``hv_ratio`` — dominated-hypervolume ratio vs the reference front
+  (> 1 when the search finds mapped points the subgrid cannot express),
+* ``coverage`` — fraction of reference-front points the searched front
+  matches or dominates,
+* warm ``points_per_sec`` of full evaluations through the shared chunk
+  pipeline (population-sized batches at the SAME compiled chunk shape —
+  ``n_compiles`` stays 0 once the reference sweep warmed the buckets).
+
+``search_evolve_warm`` is the regression-guarded row (pts/s AND the
+evals-budget margin AND hv_ratio); ``search_halving_warm`` reports the
+successive-halving racer on the same budget for comparison.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import REGISTRY, emit, maxrss_mb, sweep_telemetry, \
+    sweep_timer
+from repro.core import (EvolutionaryDriver, SuccessiveHalvingDriver,
+                        coexplore_front, default_model_set, front_coverage,
+                        hypervolume, joint_space_size, search_front,
+                        trace_count)
+from repro.core.arch import DEFAULT_SPACE, MAPPED_SPACE
+
+# Reference subgrid: full default accelerator grid x a spread of mapping
+# codes covering every gbuf-split regime (mod 3), both replication
+# orders (mod 6), all c_div and most q_div levels — 27k x 6 = 162k
+# accelerator points, enumerated exactly.
+REF_MAPPING_CODES = (0.0, 17.0, 37.0, 59.0, 83.0, 101.0)
+REF_SPACE = dict(DEFAULT_SPACE, mapping=REF_MAPPING_CODES)
+
+# 3-model axis: big enough for real bucket mixing, small enough that the
+# reference enumeration stays CI-affordable.
+N_MODELS = 3
+
+# Full-eval budget of each searched front: ~0.4% of the mapped joint
+# space — an order of magnitude under the 5% acceptance bar.
+SEARCH_EVALS = 40_000
+SEED = 0
+
+
+def _quality(front, ref_obj, ref_pt):
+    hv_ref = hypervolume(ref_obj, ref_pt)
+    hv = hypervolume(front.archive.objectives, ref_pt)
+    return (hv / hv_ref if hv_ref > 0 else 0.0,
+            front_coverage(front.archive.objectives, ref_obj))
+
+
+def run(max_points: int | None = None):
+    """``max_points`` (the --fast knob) caps the reference enumeration by
+    subsampling and shrinks the search budget in proportion."""
+    rows = []
+    tel = sweep_telemetry()
+    models = default_model_set()[:N_MODELS]
+    total = joint_space_size(MAPPED_SPACE, len(models))
+    evals = SEARCH_EVALS if max_points is None \
+        else max(2048, min(SEARCH_EVALS, max_points))
+
+    c0 = trace_count()
+    with sweep_timer("search_reference_enum") as t:
+        ref = coexplore_front(models, space=REF_SPACE, max_points=max_points,
+                              seed=SEED, telemetry=tel)
+    dt = t.seconds
+    ref_obj = ref.archive.objectives
+    # common hypervolume reference point: just under the reference
+    # front's own bounding corner (deterministic per run mode)
+    ref_pt = ref_obj.min(axis=0) - 1e-3 * np.abs(ref_obj.min(axis=0)) - 1e-9
+    rows.append(emit(
+        "search_reference_enum", dt * 1e6,
+        f"models={len(models)};points={ref.points_evaluated};"
+        f"points_per_sec={ref.points_evaluated / dt:.0f};"
+        f"front={len(ref.archive)};n_compiles={trace_count() - c0};"
+        f"space={total};peak_rss_mb={maxrss_mb():.0f}"))
+
+    def _search_row(name, driver, phase_dt, front, compiles):
+        frac = front.points_evaluated / total
+        hv_ratio, cov = _quality(front, ref_obj, ref_pt)
+        return emit(
+            name, phase_dt * 1e6,
+            f"models={len(models)};points={front.points_evaluated};"
+            f"points_per_sec={front.points_evaluated / phase_dt:.0f};"
+            f"evals_fraction={frac:.5f};"
+            f"evals_budget_margin={0.05 / frac:.2f};"
+            f"hv_ratio={hv_ratio:.4f};coverage={cov:.3f};"
+            f"front={len(front.archive)};n_compiles={compiles};"
+            f"driver={driver};space={total}")
+
+    # population-sized proposal batches fill whole compiled chunks — the
+    # dispatch shapes (hence executables) match the enumerated walk's
+    evo = lambda: EvolutionaryDriver(population=4096)  # noqa: E731
+    front = None
+    for phase in ("cold", "warm"):
+        c0 = trace_count()
+        name = f"search_evolve_{phase}"
+        with sweep_timer(name) as t:
+            front = search_front(models, space=MAPPED_SPACE, driver=evo(),
+                                 max_evals=evals, seed=SEED, telemetry=tel)
+        if phase == "warm":  # guarded: best of 2 (CI allocator stalls)
+            with sweep_timer(name) as t2:
+                front = search_front(models, space=MAPPED_SPACE, driver=evo(),
+                                     max_evals=evals, seed=SEED,
+                                     telemetry=tel)
+            dt = REGISTRY.histogram(f"bench.{name}").min
+        else:
+            dt = t.seconds
+        rows.append(_search_row(name, "evolve", dt, front,
+                                trace_count() - c0))
+
+    c0 = trace_count()
+    with sweep_timer("search_halving_warm") as t:
+        hfront = search_front(models, space=MAPPED_SPACE,
+                              driver=SuccessiveHalvingDriver(eta=4,
+                                                             rung=4096),
+                              max_evals=evals, seed=SEED, telemetry=tel)
+    rows.append(_search_row("search_halving_warm", "halving", t.seconds,
+                            hfront, trace_count() - c0))
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--max-points", type=int, default=None,
+                    help="cap the reference enumeration + search budget "
+                         "(CI-speed knob)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(max_points=args.max_points)

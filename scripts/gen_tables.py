@@ -140,6 +140,42 @@ def _coexplore_tables(entries):
     return out
 
 
+# Search-driver bench columns (the `search` section): full evaluations,
+# their fraction of enumerating the whole mapped joint space (plus the
+# guarded 0.05/fraction margin), front-recovery quality vs the
+# enumerated reference (hypervolume ratio / coverage) and throughput.
+_SEARCH_COLS = ("points", "points_per_sec", "evals_fraction",
+                "evals_budget_margin", "hv_ratio", "coverage", "front",
+                "n_compiles", "driver", "space")
+
+
+def _search_tables(entries):
+    """Structured rendering of the search section: one driver table
+    (reference enumeration row included — its quality columns are blank,
+    it IS the reference), raw table for anything else."""
+    sweeps, others = [], []
+    for e in entries:
+        name, us, derived = e.split(",", 2)
+        if name.startswith("search_"):
+            sweeps.append((name, float(us), _kv_fields(derived)))
+        else:
+            others.append(e)
+    out = []
+    if sweeps:
+        out += ["| run | s/call | " + " | ".join(_SEARCH_COLS) + " | other |",
+                "|---|---:|" + "---:|" * len(_SEARCH_COLS) + "---|"]
+        for name, us, kv in sweeps:
+            cells = [kv.get(k, "") for k in _SEARCH_COLS]
+            other = ";".join(f"{k}={v}" for k, v in kv.items()
+                             if k not in _SEARCH_COLS)
+            out.append(f"| {name} | {us / 1e6:.2f} | "
+                       + " | ".join(cells) + f" | {other} |")
+        out.append("")
+    if others:
+        out += _generic_bench_table(others)
+    return out
+
+
 def _generic_bench_table(entries):
     rows = ["| name | us_per_call | derived |", "|---|---:|---|"]
     for e in entries:
@@ -162,9 +198,12 @@ def bench_dse_table(section=None, path="BENCH_dse.json"):
         if section and sec != section:
             continue
         out += [f"### {sec}", ""]
-        out += (_coexplore_tables(entries)
-                if sec in ("coexplore", "dse_scale")
-                else _generic_bench_table(entries))
+        if sec in ("coexplore", "dse_scale"):
+            out += _coexplore_tables(entries)
+        elif sec == "search":
+            out += _search_tables(entries)
+        else:
+            out += _generic_bench_table(entries)
     return out
 
 def sweep_report_table(path="telemetry/sweep_report.json"):

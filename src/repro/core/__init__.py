@@ -22,6 +22,8 @@ Submodules:
               + parameterized model families)
   accuracy  — per-(model, PE-type) accuracy surrogate with QAT calibration
   coexplore — joint accelerator x model co-exploration engine
+  search    — budgeted search drivers (evolutionary / successive-halving)
+              recovering the Pareto front at a fraction of enumeration
 """
 
 from repro.core.accuracy import (ACC_CLASS_SENS, AccuracySurrogate,
@@ -31,7 +33,8 @@ from repro.core.arch import (AcceleratorConfig, make_config, stack_configs,
                              enumerate_space, iter_space_chunks, space_points,
                              space_size, subsample_indices, joint_space_size,
                              joint_space_points, iter_joint_space_chunks,
-                             DEFAULT_SPACE, WIDE_SPACE, PE_TYPE_NAMES,
+                             DEFAULT_SPACE, WIDE_SPACE, MAPPED_SPACE,
+                             MAPPING_CHOICES, space_radices, PE_TYPE_NAMES,
                              PE_TYPE_CODES)
 from repro.core.constraints import (Budget, BudgetColumns, BudgetStats,
                                     Constraint, CONFIG_STAGE_COLUMNS,
@@ -63,6 +66,11 @@ from repro.core.shard import (DEFAULT_PIPELINE_DEPTH, SweepCheckpointer,
                               sharded_space_stream, workloads_signature)
 from repro.core.ppa import (fit_ppa_models, surrogate_ppa, PPAModels, r2,
                             mape)
+from repro.core.search import (EvolutionaryDriver, SearchContext,
+                               SearchDriver, SuccessiveHalvingDriver,
+                               front_coverage, hypervolume, joint_digits,
+                               joint_indices, joint_radices, search_driver,
+                               search_front)
 from repro.core.synth import synthesize, oracle_ppa, SynthResult
 from repro.core.workloads import (Workload, LayerSpec, StackedWorkload,
                                   PAPER_WORKLOADS, MODEL_FAMILIES,
@@ -78,7 +86,8 @@ __all__ = [
     "take_config", "enumerate_space",
     "iter_space_chunks", "space_points", "space_size", "subsample_indices",
     "joint_space_size", "joint_space_points", "iter_joint_space_chunks",
-    "DEFAULT_SPACE", "WIDE_SPACE", "PE_TYPE_NAMES", "PE_TYPE_CODES",
+    "DEFAULT_SPACE", "WIDE_SPACE", "MAPPED_SPACE", "MAPPING_CHOICES",
+    "space_radices", "PE_TYPE_NAMES", "PE_TYPE_CODES",
     "Budget", "BudgetColumns", "BudgetStats", "Constraint",
     "CONFIG_STAGE_COLUMNS", "apply_budget", "mask_result",
     "COST_MODELS", "CostModel", "OracleCostModel", "SurrogateCostModel",
@@ -102,6 +111,10 @@ __all__ = [
     "ParetoArchive", "normalized_report", "report_pe_types", "spread",
     "trace_count", "ppa_trace_count", "reset_trace_count",
     "DseResult", "RESULT_DTYPES", "DEFAULT_CHUNK_SIZE",
+    "EvolutionaryDriver", "SearchContext", "SearchDriver",
+    "SuccessiveHalvingDriver", "front_coverage", "hypervolume",
+    "joint_digits", "joint_indices", "joint_radices", "search_driver",
+    "search_front",
     "fit_ppa_models", "surrogate_ppa", "PPAModels", "r2", "mape",
     "synthesize", "oracle_ppa", "SynthResult",
     "Workload", "LayerSpec", "StackedWorkload", "PAPER_WORKLOADS",

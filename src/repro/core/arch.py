@@ -37,7 +37,17 @@ PE_TYPE_CODES = {name: code for code, name in enumerate(PE_TYPE_NAMES)}
 
 
 class AcceleratorConfig(NamedTuple):
-    """One hardware design point. All fields are scalars (vmap-friendly)."""
+    """One hardware design point. All fields are scalars (vmap-friendly).
+
+    ``mapping`` is the dataflow/mapping digit QADAM holds fixed (loop
+    order / tiling / gbuf split; Klhufek et al. on quantization x mapping
+    synergy): a code in ``[0, MAPPING_CHOICES)`` decomposed by
+    ``dataflow.layer_cost`` into tiling-cap divisors, the replication
+    order and the gbuf ifmap/filter split.  Code 0 is the legacy
+    schedule bit-exactly, and it is the TRAILING mixed-radix axis with a
+    default single-value ``(0.0,)`` grid — so every pre-existing space
+    dict keeps its exact flat indices, strides and ``space_size``.
+    """
 
     pe_rows: jnp.ndarray      # int: PEs per column of the array
     pe_cols: jnp.ndarray      # int: PEs per row of the array
@@ -47,6 +57,7 @@ class AcceleratorConfig(NamedTuple):
     spad_psum: jnp.ndarray    # int: psum scratchpad entries (words)
     pe_type: jnp.ndarray      # int: code into PE_TYPE_NAMES
     bandwidth_gbps: jnp.ndarray  # float: DRAM bandwidth (GB/s)
+    mapping: jnp.ndarray = 0.0   # float: dataflow schedule code (0 = legacy)
 
     @property
     def num_pes(self):
@@ -62,6 +73,7 @@ def make_config(
     spad_psum: int = 24,
     pe_type: str | int = "int16",
     bandwidth_gbps: float = 25.6,
+    mapping: float = 0.0,
 ) -> AcceleratorConfig:
     """Build a single design point (defaults follow Eyeriss-like values)."""
     code = PE_TYPE_CODES[pe_type] if isinstance(pe_type, str) else int(pe_type)
@@ -74,6 +86,7 @@ def make_config(
         spad_psum=jnp.asarray(spad_psum, jnp.float32),
         pe_type=jnp.asarray(code, jnp.int32),
         bandwidth_gbps=jnp.asarray(bandwidth_gbps, jnp.float32),
+        mapping=jnp.asarray(mapping, jnp.float32),
     )
 
 
@@ -134,12 +147,39 @@ WIDE_SPACE = dict(
     bandwidth_gbps=(6.4, 12.8, 25.6, 51.2, 102.4),
 )
 
+# The dataflow/mapping axis (ROADMAP item 4, first slice): one schedule
+# code per design point, decomposed by ``dataflow.layer_cost`` into
+# 3 gbuf splits x 2 replication orders x 4 channel-tile divisors x
+# 5 filter-tile divisors.  Code 0 is the legacy schedule bit-exactly.
+MAPPING_CHOICES = 120
+
+# DEFAULT_SPACE with the mapping axis opened: 27,000 x 120 = 3,240,000
+# accelerator points (120x the paper grid) — the space where enumeration
+# is dishonest and the budgeted search drivers (``repro.core.search``)
+# earn their keep.
+MAPPED_SPACE = dict(DEFAULT_SPACE,
+                    mapping=tuple(float(i) for i in range(MAPPING_CHOICES)))
+
 
 def _space_axes(space: dict | None) -> list[np.ndarray]:
-    """Per-field value axes in AcceleratorConfig field order."""
+    """Per-field value axes in AcceleratorConfig field order.
+
+    A space dict without a ``mapping`` key gets the single-value legacy
+    axis ``(0.0,)`` — a trailing radix-1 digit multiplies every stride by
+    one, so all pre-existing flat indices, chunk boundaries and
+    ``space_size`` values are unchanged.
+    """
     space = dict(DEFAULT_SPACE if space is None else space)
+    space.setdefault("mapping", (0.0,))
     return [np.asarray(space[k], np.float64)
             for k in AcceleratorConfig._fields]
+
+
+def space_radices(space: dict | None = None) -> np.ndarray:
+    """Per-field axis lengths in ``AcceleratorConfig._fields`` order — the
+    mixed-radix digit bases of ``space_points``.  The genome alphabet of
+    the evolutionary search driver (``repro.core.search``)."""
+    return np.array([len(a) for a in _space_axes(space)], np.int64)
 
 
 def space_size(space: dict | None = None) -> int:
@@ -176,6 +216,7 @@ def _cols_to_config(cols: dict) -> AcceleratorConfig:
         spad_psum=jnp.asarray(cols["spad_psum"], jnp.float32),
         pe_type=jnp.asarray(cols["pe_type"], jnp.int32),
         bandwidth_gbps=jnp.asarray(cols["bandwidth_gbps"], jnp.float32),
+        mapping=jnp.asarray(cols["mapping"], jnp.float32),
     )
 
 

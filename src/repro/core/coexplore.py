@@ -354,6 +354,7 @@ def coexplore_front(
         checkpoint_every: int = 64,
         csv_path: str | None = None,
         max_chunks: int | None = None,
+        driver=None,
         telemetry=None) -> CoexploreFront:
     """Stream the joint (model x accelerator) space into a 3-objective
     non-dominated archive.
@@ -410,10 +411,30 @@ def coexplore_front(
     decode/dispatch/device-wait/archive spans, budget kill counters,
     pruner stage split — without touching evaluated values; the front is
     bit-identical with it on or off.
+
+    ``driver`` (a ``search.SearchDriver`` or registered name like
+    ``"evolve"``/``"halving"``) replaces enumeration with BUDGETED
+    search: the driver proposes config-index batches scored through the
+    same chunked evaluators, budget masking and archive; ``max_points``
+    becomes the full-evaluation budget.  See ``search.search_front``.
     """
     models = tuple(models)
     if not models:
         raise ValueError("need at least one ModelEntry on the model axis")
+    if driver is not None:
+        # budgeted search instead of enumeration: delegate to the
+        # SearchDriver engine (same archive, objectives, budget masking
+        # and sharded dispatch; ``max_points`` becomes the eval budget)
+        from repro.core.search import search_front
+        return search_front(
+            models, space=space, driver=driver, surrogate=surrogate,
+            accuracy=accuracy, chunk_size=chunk_size,
+            max_evals=(joint_space_size(space, len(models))
+                       if max_points is None else int(max_points)),
+            seed=seed, budget=budget, layer_buckets=layer_buckets,
+            shards=shards, devices=devices, pipeline_depth=pipeline_depth,
+            checkpoint_dir=checkpoint_dir, checkpoint_every=checkpoint_every,
+            telemetry=telemetry)
     if (shards is not None or devices is not None
             or checkpoint_dir is not None or csv_path is not None
             or max_chunks is not None):

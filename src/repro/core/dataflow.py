@@ -56,6 +56,31 @@ def _ceil_div(a, b):
     return jnp.ceil(a / jnp.maximum(b, 1.0))
 
 
+def _mapping_knobs(mapping):
+    """Decompose ``cfg.mapping`` (a code in [0, arch.MAPPING_CHOICES))
+    into the schedule knobs QADAM holds fixed:
+
+      * ``fil_frac``  — gbuf capacity fraction granted to the filter
+        replay tile (the legacy model hardcodes an even 0.5/0.5 split);
+      * ``cols_first`` — replicate spare PE columns before spare rows
+        (the legacy replication order is rows-first);
+      * ``c_div`` / ``q_div`` — divisors on the channel / filter per-PE
+        tile caps (smaller tiles trade RF pressure for spill traffic).
+
+    Mixed radix 3 x 2 x 4 x 5 = 120 codes; code 0 decodes to the exact
+    legacy schedule (0.5 split, rows-first, divisors 1).
+    """
+    m = jnp.asarray(mapping, jnp.float32)
+    split_code = jnp.mod(m, 3.0)                       # 0 -> 0.5 (legacy)
+    fil_frac = jnp.where(split_code == 1.0, 0.75,
+                         jnp.where(split_code == 2.0, 0.25, 0.5))
+    cols_first = jnp.mod(jnp.floor(m / 3.0), 2.0) == 1.0
+    c_div = 2.0 ** jnp.mod(jnp.floor(m / 6.0), 4.0)    # 1, 2, 4, 8
+    q_code = jnp.mod(jnp.floor(m / 24.0), 5.0)
+    q_div = jnp.where(q_code == 4.0, 6.0, q_code + 1.0)  # 1, 2, 3, 4, 6
+    return m == 0.0, fil_frac, cols_first, c_div, q_div
+
+
 def layer_cost(layer: LayerSpec, cfg: AcceleratorConfig,
                clock_ghz: jnp.ndarray) -> LayerCost:
     """Cost of one layer on one design point at a given clock.
@@ -74,6 +99,13 @@ def layer_cost(layer: LayerSpec, cfg: AcceleratorConfig,
       ACTIVE top-k compute while weight DRAM/gbuf traffic is divided by
       ``active_frac`` (= 1/touched experts) — traffic follows touched
       experts, compute follows active MACs.
+
+    ``cfg.mapping`` prices the dataflow/mapping axis (``_mapping_knobs``):
+    nonzero codes re-tile the per-PE caps, flip the replication order and
+    re-split the gbuf.  Code 0 selects the legacy expressions through
+    ``jnp.where`` guards whose false branch is the original arithmetic
+    unchanged, so every pre-existing space (whose mapping axis is the
+    single value 0.0) prices bit-exactly as before.
     """
     H, W, C, K = layer.H, layer.W, layer.C, layer.K
     R, S, stride, batch = layer.R, layer.S, layer.stride, layer.batch
@@ -92,10 +124,19 @@ def layer_cost(layer: LayerSpec, cfg: AcceleratorConfig,
     # weight precision, a streamed KV block at activation precision
     op2_bits = jnp.where(streamed, a_bits, w_bits)
 
+    legacy, fil_frac, cols_first, c_div, q_div = _mapping_knobs(cfg.mapping)
+
     # ---- per-PE tiling limited by scratchpad capacities ----------------
-    c_fit = jnp.clip(jnp.floor(cfg.spad_ifmap / S), 1.0, C)       # channels
-    q_fit = jnp.clip(jnp.minimum(jnp.floor(cfg.spad_filter / (c_fit * S)),
-                                 cfg.spad_psum), 1.0, K)          # filters
+    # mapped codes cap the channel/filter tiles below capacity (c_div /
+    # q_div): less RF residency per PE, more replication groups and spill
+    c_fit = jnp.where(
+        legacy, jnp.clip(jnp.floor(cfg.spad_ifmap / S), 1.0, C),
+        jnp.clip(jnp.floor(cfg.spad_ifmap / (S * c_div)), 1.0, C))
+    q_cap = jnp.floor(cfg.spad_filter / (c_fit * S))
+    q_fit = jnp.where(
+        legacy, jnp.clip(jnp.minimum(q_cap, cfg.spad_psum), 1.0, K),
+        jnp.clip(jnp.minimum(jnp.floor(q_cap / q_div), cfg.spad_psum),
+                 1.0, K))
 
     # ---- spatial mapping: logical R x E grid onto pe_rows x pe_cols ----
     Pr, Pc = cfg.pe_rows, cfg.pe_cols
@@ -103,12 +144,21 @@ def layer_cost(layer: LayerSpec, cfg: AcceleratorConfig,
     cols_used = jnp.minimum(Eh, Pc)
     fold_r = _ceil_div(R, Pr)
     fold_e = _ceil_div(Eh, Pc)
-    # replication of independent (filter/channel/batch) groups onto idle PEs
+    # replication of independent (filter/channel/batch) groups onto idle
+    # PEs; the mapping's loop-order bit picks which array dimension gets
+    # first claim on the group supply (legacy: rows first)
     groups = _ceil_div(K, q_fit) * _ceil_div(C, c_fit) * batch
-    repl_r = jnp.clip(jnp.floor(Pr / jnp.maximum(rows_used, 1.0)), 1.0, groups)
-    groups_left = jnp.maximum(groups / repl_r, 1.0)
-    repl_c = jnp.clip(jnp.floor(Pc / jnp.maximum(cols_used, 1.0)), 1.0,
-                      groups_left)
+    repl_r_cap = jnp.floor(Pr / jnp.maximum(rows_used, 1.0))
+    repl_c_cap = jnp.floor(Pc / jnp.maximum(cols_used, 1.0))
+    repl_r_first = jnp.clip(repl_r_cap, 1.0, groups)
+    repl_c_rest = jnp.clip(repl_c_cap, 1.0,
+                           jnp.maximum(groups / repl_r_first, 1.0))
+    repl_c_first = jnp.clip(repl_c_cap, 1.0, groups)
+    repl_r_rest = jnp.clip(repl_r_cap, 1.0,
+                           jnp.maximum(groups / repl_c_first, 1.0))
+    use_cols = jnp.logical_and(jnp.logical_not(legacy), cols_first)
+    repl_r = jnp.where(use_cols, repl_r_rest, repl_r_first)
+    repl_c = jnp.where(use_cols, repl_c_first, repl_c_rest)
     util = (rows_used * repl_r / (fold_r * Pr)) * \
            (cols_used * repl_c / (fold_e * Pc))
     util = jnp.clip(util, 1e-3, 1.0)
@@ -123,15 +173,22 @@ def layer_cost(layer: LayerSpec, cfg: AcceleratorConfig,
 
     # ---- DRAM traffic with gbuf-capacity replay factors -----------------
     gbuf_bits_cap = cfg.gbuf_kb * 1024.0 * 8.0
-    # filters that fit in half the gbuf alongside the ifmap tile
-    k_fit_gbuf = jnp.clip(jnp.floor(0.5 * gbuf_bits_cap /
-                                    jnp.maximum(C * R * S * w_bits, 1.0)),
-                          1.0, K)
+    # filters that fit in the filter share of the gbuf alongside the
+    # ifmap tile (legacy: an even 0.5/0.5 split; mapped codes re-split)
+    k_fit_gbuf = jnp.where(
+        legacy,
+        jnp.clip(jnp.floor(0.5 * gbuf_bits_cap /
+                           jnp.maximum(C * R * S * w_bits, 1.0)), 1.0, K),
+        jnp.clip(jnp.floor(fil_frac * gbuf_bits_cap /
+                           jnp.maximum(C * R * S * w_bits, 1.0)), 1.0, K))
     replay_if = _ceil_div(K, k_fit_gbuf)
-    # ifmaps (batch granularity) that fit in the other half
-    n_if_fit = jnp.clip(jnp.floor(0.5 * gbuf_bits_cap /
-                                  jnp.maximum(C * H * W * a_bits, 1.0)),
-                        1.0, batch)
+    # ifmaps (batch granularity) that fit in the remaining share
+    n_if_fit = jnp.where(
+        legacy,
+        jnp.clip(jnp.floor(0.5 * gbuf_bits_cap /
+                           jnp.maximum(C * H * W * a_bits, 1.0)), 1.0, batch),
+        jnp.clip(jnp.floor((1.0 - fil_frac) * gbuf_bits_cap /
+                           jnp.maximum(C * H * W * a_bits, 1.0)), 1.0, batch))
     replay_fil = _ceil_div(batch, n_if_fit)
     # second-operand DRAM stream: resident weights replay with gbuf
     # capacity; gated expert weights are read once per TOUCHED expert

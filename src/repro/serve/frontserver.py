@@ -142,6 +142,29 @@ class CacheEntry:
     feas: BudgetColumns | None = None
     accuracy: np.ndarray | None = None
 
+    def state_dict(self) -> dict:
+        """Checkpoint-manager-serializable form (plain dicts + arrays)."""
+        return dict(signature=self.signature,
+                    budget_spec=self.budget_spec,
+                    archive_state=self.archive_state,
+                    points_evaluated=int(self.points_evaluated),
+                    stats=self.stats,
+                    feas=None if self.feas is None
+                    else self.feas.state_dict(),
+                    accuracy=self.accuracy)
+
+    @classmethod
+    def from_state(cls, state: dict) -> "CacheEntry":
+        return cls(signature=dict(state["signature"]),
+                   budget_spec=state.get("budget_spec"),
+                   archive_state=dict(state["archive_state"]),
+                   points_evaluated=int(state["points_evaluated"]),
+                   stats=state.get("stats"),
+                   feas=None if state.get("feas") is None
+                   else BudgetColumns.from_state(state["feas"]),
+                   accuracy=None if state.get("accuracy") is None
+                   else np.asarray(state["accuracy"]))
+
 
 class FrontCache:
     """LRU of warm front state, keyed (target signature, budget key).
@@ -234,6 +257,52 @@ class FrontCache:
         self._entries.move_to_end(key)
         while len(self._entries) > self.capacity:
             self._entries.popitem(last=False)
+
+    def save(self, ckpt_dir: str, telemetry=None) -> str:
+        """Persist every entry (LRU order preserved) through
+        ``repro.checkpoint.manager`` — warm fronts survive process
+        restarts (atomic tmp+rename, arrays sidecar'd as .npy)."""
+        from repro.checkpoint import manager as _ckpt
+        entries = [[tkey, bkey, e.state_dict()]
+                   for (tkey, bkey), e in self._entries.items()]
+        return _ckpt.save_state(
+            ckpt_dir, len(self._entries),
+            dict(kind="frontcache", capacity=int(self.capacity),
+                 entries=entries),
+            keep=1, telemetry=telemetry)
+
+    def load(self, ckpt_dir: str, telemetry=None) -> int:
+        """Restore entries saved by ``save`` into this cache (merged in
+        saved LRU order on top of anything already present; evicts past
+        ``capacity`` as usual).  Returns the number of entries restored.
+
+        Every entry is re-verified: its stored FULL signature must
+        re-digest to the key it was filed under — a corrupted or
+        hand-edited snapshot raises instead of poisoning lookups (the
+        same loud-failure contract ``lookup`` applies per hit).
+        """
+        from repro.checkpoint import manager as _ckpt
+        _step, state = _ckpt.load_state(ckpt_dir, telemetry=telemetry)
+        if state is None:
+            return 0
+        if state.get("kind") != "frontcache":
+            raise ValueError(
+                f"checkpoint at {ckpt_dir!r} is not a front cache "
+                f"(kind={state.get('kind')!r})")
+        n = 0
+        for tkey, bkey, es in state["entries"]:
+            e = CacheEntry.from_state(es)
+            if self.target_key(e.signature) != tkey:
+                raise ValueError(
+                    f"front-cache snapshot entry {tkey!r}/{bkey!r} does "
+                    f"not match its stored signature — refusing to load "
+                    f"a corrupted cache")
+            self._entries[(tkey, bkey)] = e
+            self._entries.move_to_end((tkey, bkey))
+            n += 1
+        while len(self._entries) > self.capacity:
+            self._entries.popitem(last=False)
+        return n
 
 
 class FrontResponse(NamedTuple):

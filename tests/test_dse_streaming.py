@@ -35,7 +35,8 @@ def _config_matrix(cfg: AcceleratorConfig) -> np.ndarray:
 
 class TestMixedRadixEnumeration:
     def test_matches_itertools_product(self):
-        axes = [SMALL_SPACE[k] for k in AcceleratorConfig._fields]
+        # absent fields (e.g. the mapping digit) default to a radix-1 axis
+        axes = [SMALL_SPACE.get(k, (0.0,)) for k in AcceleratorConfig._fields]
         # configs store float32 — the reference must round the same way
         ref = np.array(list(itertools.product(*axes)),
                        np.float32).astype(np.float64)

@@ -381,3 +381,70 @@ class TestTelemetry:
         # fronts are bit-identical with telemetry on
         _assert_bitident(qs[0].response, oracle_refs[2])
         _assert_bitident(qs[1].response, oracle_refs[0])
+
+
+class TestCachePersistence:
+    """FrontCache.save/load: warm fronts survive a process restart and
+    serve repeat queries with zero chunk evaluations, signature-verified."""
+
+    def test_round_trip_serves_cold_process(self, tiny_models, oracle_refs,
+                                            tmp_path):
+        d = str(tmp_path / "frontcache")
+        srv = FrontServer(tiny_models, TINY_SPACE, chunk_size=CHUNK)
+        b = BUDGET_CHOICES[2]
+        q = srv.submit(b)
+        srv.run()
+        srv.cache.save(d)
+        fresh = FrontServer(tiny_models, TINY_SPACE, chunk_size=CHUNK)
+        assert fresh.cache.load(d) == len(srv.cache)
+        resp = fresh.query(b)
+        assert resp.served_from == "cache:repeat"
+        assert fresh.chunk_evals == 0
+        _assert_bitident(resp, oracle_refs[2])
+        _assert_bitident(resp, q.response)
+
+    def test_superset_hit_after_restore(self, tiny_models, tmp_path):
+        d = str(tmp_path / "frontcache_sup")
+        srv = FrontServer(tiny_models, TINY_SPACE, chunk_size=CHUNK)
+        srv.query(None)  # stores the unconstrained superset + feas columns
+        srv.cache.save(d)
+        fresh = FrontServer(tiny_models, TINY_SPACE, chunk_size=CHUNK)
+        fresh.cache.load(d)
+        loose = Budget(area_mm2=50.0)  # every superset-front row feasible
+        resp = fresh.query(loose)
+        assert resp.served_from == "cache:superset"
+        assert fresh.chunk_evals == 0
+        ref = coexplore_front(tiny_models, TINY_SPACE, chunk_size=CHUNK,
+                              budget=loose, prune=False)
+        _assert_bitident(resp, ref)
+
+    def test_load_empty_dir_is_noop(self, tiny_models, tmp_path):
+        cache = FrontCache()
+        assert cache.load(str(tmp_path / "nothing_here")) == 0
+        assert len(cache) == 0
+
+    def test_corrupted_signature_refuses(self, tiny_models, tmp_path):
+        d = str(tmp_path / "frontcache_bad")
+        srv = FrontServer(tiny_models, TINY_SPACE, chunk_size=CHUNK)
+        srv.query(None)
+        srv.cache.save(d)
+        # tamper: re-file an entry under a key its signature can't produce
+        victim = FrontCache()
+        victim.load(d)
+        (tkey, bkey), e = next(iter(victim._entries.items()))
+        e.signature = dict(e.signature, kind="tampered")
+        victim._entries[("0" * 16, bkey)] = e
+        del victim._entries[(tkey, bkey)]
+        victim.save(d)
+        with pytest.raises(ValueError, match="corrupted"):
+            FrontCache().load(d)
+
+    def test_lru_capacity_enforced_on_load(self, tiny_models, tmp_path):
+        d = str(tmp_path / "frontcache_cap")
+        srv = FrontServer(tiny_models, TINY_SPACE, chunk_size=CHUNK)
+        for b in (None, BUDGET_CHOICES[2], BUDGET_CHOICES[3]):
+            srv.query(b)
+        srv.cache.save(d)
+        small = FrontCache(capacity=2)
+        small.load(d)
+        assert len(small) == 2

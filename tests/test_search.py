@@ -1,0 +1,318 @@
+"""Budgeted search drivers: mixed-radix genome ops round-trip against
+``space_points``, both drivers recover the enumerated ``coexplore_front``
+front exactly when the eval budget spans the space (across backends and
+pruned/unpruned enumeration, compile count staying at the layer-bucket
+count), runs are bit-reproducible under a fixed seed across shard
+counts, and driver state checkpoints/resumes through the manager."""
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # CI images without hypothesis: deterministic fallback
+    from _hypothesis_fallback import given, settings, st
+
+from repro.core import (Budget, EvolutionaryDriver, SuccessiveHalvingDriver,
+                        coexplore_front, enumerate_space, fit_ppa_models,
+                        front_coverage, hypervolume, joint_digits,
+                        joint_indices, joint_radices, joint_space_points,
+                        joint_space_size, model_entry, resnet_cifar,
+                        search_driver, search_front, space_points,
+                        trace_count, transformer_gemm)
+from repro.core.arch import MAPPED_SPACE, MAPPING_CHOICES, space_radices
+
+# 2*2*1*1*2*1*5*1 = 40 accelerator points x 3 models = 120 joint points —
+# small enough to compare against full enumeration in every test.
+TINY_SPACE = dict(
+    pe_rows=(8, 12), pe_cols=(8, 14), gbuf_kb=(54.0,), spad_ifmap=(12,),
+    spad_filter=(112, 224), spad_psum=(16,),
+    pe_type=tuple(range(5)), bandwidth_gbps=(25.6,),
+)
+CHUNK = 32
+N_MODELS = 3
+
+
+@pytest.fixture(scope="module")
+def tiny_models():
+    return (model_entry(resnet_cifar(20)),
+            model_entry(resnet_cifar(20, resolution=16)),
+            model_entry(transformer_gemm(seq=128, d_model=128, n_layers=2,
+                                         n_heads=4, d_ff=256, vocab=1024)))
+
+
+@pytest.fixture(scope="module")
+def ppa_models():
+    return fit_ppa_models(enumerate_space(max_points=500, seed=1),
+                          degrees=(1, 2), k=4)
+
+
+def _drivers():
+    return (EvolutionaryDriver(population=30),
+            SuccessiveHalvingDriver(eta=2, rung=16))
+
+
+def _assert_front_equal(got, ref):
+    """Set-equality of joint indices + per-index objective equality."""
+    gi, ri = got.archive.indices, ref.archive.indices
+    assert set(gi.tolist()) == set(ri.tolist())
+    np.testing.assert_array_equal(got.archive.objectives[np.argsort(gi)],
+                                  ref.archive.objectives[np.argsort(ri)])
+
+
+class TestGenomeOps:
+    """joint_digits/joint_indices are an exact mixed-radix bijection that
+    agrees with the space_points decode — mutation/crossover products of
+    in-bounds digits always land on valid, collision-free indices."""
+
+    @given(seed=st.integers(0, 2**31 - 1))
+    @settings(max_examples=20, deadline=None)
+    def test_round_trip_and_decode_agreement(self, seed):
+        rng = np.random.default_rng(seed)
+        rad = joint_radices(TINY_SPACE, N_MODELS)
+        n = joint_space_size(TINY_SPACE, N_MODELS)
+        idx = rng.integers(0, n, size=64, dtype=np.int64)
+        d = joint_digits(idx, rad)
+        assert (d >= 0).all() and (d < rad[None, :]).all()
+        np.testing.assert_array_equal(joint_indices(d, rad), idx)
+        # digit 0 is the model id; the rest decode through space_points
+        for i in (0, 17, 63):
+            mid, cfg = joint_space_points(int(idx[i]), TINY_SPACE, N_MODELS)
+            assert mid == d[i, 0]
+            ref = space_points(idx[i] % joint_space_size(TINY_SPACE, 1),
+                               TINY_SPACE)
+            np.testing.assert_array_equal(
+                np.asarray(cfg.pe_rows), np.asarray(ref.pe_rows))
+
+    @given(seed=st.integers(0, 2**31 - 1))
+    @settings(max_examples=20, deadline=None)
+    def test_mutated_crossed_digits_stay_valid(self, seed):
+        rng = np.random.default_rng(seed)
+        rad = joint_radices(TINY_SPACE, N_MODELS)
+        n = joint_space_size(TINY_SPACE, N_MODELS)
+        a = joint_digits(rng.integers(0, n, 32, dtype=np.int64), rad)
+        b = joint_digits(rng.integers(0, n, 32, dtype=np.int64), rad)
+        child = np.where(rng.random(a.shape) < 0.5, b, a)
+        mut = rng.random(child.shape) < 0.3
+        child = np.where(mut, rng.integers(0, rad[None, :], child.shape),
+                         child)
+        idx = joint_indices(child, rad)
+        assert ((idx >= 0) & (idx < n)).all()
+        # distinct digit vectors -> distinct indices (bijection)
+        uniq_digits = len({tuple(r) for r in child.tolist()})
+        assert len(np.unique(idx)) == uniq_digits
+
+    def test_out_of_bounds_digits_rejected(self):
+        rad = joint_radices(TINY_SPACE, N_MODELS)
+        bad = np.zeros((1, len(rad)), np.int64)
+        bad[0, 0] = N_MODELS  # one past the model axis
+        with pytest.raises(ValueError, match="out of range"):
+            joint_indices(bad, rad)
+
+    def test_mapping_axis_radices(self):
+        assert space_radices(TINY_SPACE)[-1] == 1
+        assert space_radices(MAPPED_SPACE)[-1] == MAPPING_CHOICES
+        assert (joint_space_size(MAPPED_SPACE, 1)
+                == MAPPING_CHOICES * joint_space_size(dict(MAPPED_SPACE,
+                                                           mapping=(0.0,)), 1))
+
+
+class TestFrontRecovery:
+    """With max_evals >= the joint space size, each driver's front equals
+    the enumerated coexplore_front exactly — indices and objectives —
+    on both backends, pruned and unpruned."""
+
+    @pytest.mark.parametrize("driver_name", ["evolve", "halving"])
+    def test_recovers_enumerated_front(self, tiny_models, driver_name):
+        n = joint_space_size(TINY_SPACE, len(tiny_models))
+        ref = coexplore_front(tiny_models, TINY_SPACE, chunk_size=CHUNK)
+        got = search_front(tiny_models, TINY_SPACE, driver=driver_name,
+                           chunk_size=CHUNK, max_evals=n, seed=3)
+        assert got.points_evaluated == n
+        _assert_front_equal(got, ref)
+
+    @pytest.mark.parametrize("driver_name", ["evolve", "halving"])
+    @pytest.mark.parametrize("prune", [False, True])
+    def test_budgeted_recovery_both_prune_modes(self, tiny_models,
+                                                driver_name, prune):
+        bud = Budget(area_mm2=60.0, min_accuracy=0.3)
+        n = joint_space_size(TINY_SPACE, len(tiny_models))
+        ref = coexplore_front(tiny_models, TINY_SPACE, chunk_size=CHUNK,
+                              budget=bud, prune=prune)
+        drv = search_driver(driver_name)
+        got = search_front(tiny_models, TINY_SPACE, driver=drv,
+                           chunk_size=CHUNK, max_evals=n, seed=5, budget=bud)
+        _assert_front_equal(got, ref)
+
+    @pytest.mark.parametrize("driver_name", ["evolve", "halving"])
+    def test_recovery_on_surrogate_backend(self, tiny_models, ppa_models,
+                                           driver_name):
+        n = joint_space_size(TINY_SPACE, len(tiny_models))
+        ref = coexplore_front(tiny_models, TINY_SPACE, chunk_size=CHUNK,
+                              surrogate=ppa_models)
+        got = search_front(tiny_models, TINY_SPACE, driver=driver_name,
+                           chunk_size=CHUNK, max_evals=n, seed=2,
+                           surrogate=ppa_models)
+        _assert_front_equal(got, ref)
+
+    def test_compile_count_stays_at_bucket_count(self, tiny_models):
+        n = joint_space_size(TINY_SPACE, len(tiny_models))
+        ref = coexplore_front(tiny_models, TINY_SPACE, chunk_size=CHUNK)
+        buckets = len(ref.buckets)
+        c0 = trace_count()
+        search_front(tiny_models, TINY_SPACE, driver="evolve",
+                     chunk_size=CHUNK, max_evals=n, seed=11)
+        assert trace_count() - c0 == 0  # warm: enumerated walk's executables
+        c1 = trace_count()
+        search_front(tiny_models, TINY_SPACE, driver="halving",
+                     chunk_size=CHUNK, max_evals=60, seed=12,
+                     budget=Budget(area_mm2=60.0))
+        assert trace_count() - c1 == 0
+        assert buckets >= 1
+
+    def test_partial_budget_front_is_subset_quality(self, tiny_models):
+        """A 50%-budget run yields a front whose points all lie on or
+        inside the true front's dominated region (its archive only ever
+        saw real evaluations), with sane hypervolume/coverage."""
+        n = joint_space_size(TINY_SPACE, len(tiny_models))
+        ref = coexplore_front(tiny_models, TINY_SPACE, chunk_size=CHUNK)
+        got = search_front(tiny_models, TINY_SPACE, driver="evolve",
+                           chunk_size=CHUNK, max_evals=n // 2, seed=0)
+        assert got.points_evaluated == n // 2
+        robj = ref.archive.objectives
+        ref_pt = robj.min(axis=0) - 1.0
+        hv_ref = hypervolume(robj, ref_pt)
+        hv_got = hypervolume(got.archive.objectives, ref_pt)
+        assert 0.0 < hv_got <= hv_ref + 1e-9
+        cov = front_coverage(got.archive.objectives, robj)
+        assert 0.0 < cov <= 1.0
+
+
+class TestDeterminism:
+    @pytest.mark.parametrize("driver_name", ["evolve", "halving"])
+    def test_bit_reproducible_across_shard_counts(self, tiny_models,
+                                                  driver_name):
+        runs = []
+        for shards in (None, 2, 8):
+            f = search_front(tiny_models, TINY_SPACE, driver=driver_name,
+                             chunk_size=CHUNK, max_evals=80, seed=7,
+                             budget=Budget(area_mm2=60.0), shards=shards)
+            runs.append(f)
+        for f in runs[1:]:
+            np.testing.assert_array_equal(runs[0].archive.indices,
+                                          f.archive.indices)
+            np.testing.assert_array_equal(runs[0].archive.objectives,
+                                          f.archive.objectives)
+            assert runs[0].points_evaluated == f.points_evaluated
+
+    def test_same_seed_same_front_surrogate(self, tiny_models, ppa_models):
+        a = search_front(tiny_models, TINY_SPACE, driver="evolve",
+                         chunk_size=CHUNK, max_evals=60, seed=9,
+                         surrogate=ppa_models)
+        b = search_front(tiny_models, TINY_SPACE, driver="evolve",
+                         chunk_size=CHUNK, max_evals=60, seed=9,
+                         surrogate=ppa_models)
+        np.testing.assert_array_equal(a.archive.indices, b.archive.indices)
+        np.testing.assert_array_equal(a.archive.objectives,
+                                      b.archive.objectives)
+
+    def test_coexplore_driver_kwarg_delegates(self, tiny_models):
+        n = joint_space_size(TINY_SPACE, len(tiny_models))
+        via_kwarg = coexplore_front(tiny_models, TINY_SPACE,
+                                    chunk_size=CHUNK, driver="evolve",
+                                    max_points=n, seed=3)
+        direct = search_front(tiny_models, TINY_SPACE, driver="evolve",
+                              chunk_size=CHUNK, max_evals=n, seed=3)
+        np.testing.assert_array_equal(via_kwarg.archive.indices,
+                                      direct.archive.indices)
+
+
+class TestCheckpointResume:
+    def test_resume_extends_eval_budget(self, tiny_models, tmp_path):
+        d = str(tmp_path / "search_ckpt")
+        half = search_front(tiny_models, TINY_SPACE, driver="evolve",
+                            chunk_size=CHUNK, max_evals=45, seed=5,
+                            checkpoint_dir=d, checkpoint_every=1)
+        assert half.points_evaluated == 45
+        full = search_front(tiny_models, TINY_SPACE, driver="evolve",
+                            chunk_size=CHUNK, max_evals=90, seed=5,
+                            checkpoint_dir=d, checkpoint_every=1)
+        assert full.points_evaluated == 90
+        # the resumed half never re-evaluates: its visited set carried over
+        assert set(half.archive.indices.tolist()) <= set(
+            np.arange(joint_space_size(TINY_SPACE, len(tiny_models)))
+            .tolist())
+
+    def test_finished_run_replays_without_reevaluating(self, tiny_models,
+                                                       tmp_path):
+        d = str(tmp_path / "search_done")
+        a = search_front(tiny_models, TINY_SPACE, driver="halving",
+                         chunk_size=CHUNK, max_evals=60, seed=4,
+                         checkpoint_dir=d, checkpoint_every=1)
+        c0 = trace_count()
+        b = search_front(tiny_models, TINY_SPACE, driver="halving",
+                         chunk_size=CHUNK, max_evals=60, seed=4,
+                         checkpoint_dir=d, checkpoint_every=1)
+        assert trace_count() == c0
+        assert b.points_evaluated == a.points_evaluated
+        np.testing.assert_array_equal(a.archive.indices, b.archive.indices)
+        np.testing.assert_array_equal(a.archive.objectives,
+                                      b.archive.objectives)
+
+    def test_signature_mismatch_refuses(self, tiny_models, tmp_path):
+        d = str(tmp_path / "search_sig")
+        search_front(tiny_models, TINY_SPACE, driver="evolve",
+                     chunk_size=CHUNK, max_evals=40, seed=5,
+                     checkpoint_dir=d, checkpoint_every=1)
+        with pytest.raises(ValueError, match="different sweep"):
+            search_front(tiny_models, TINY_SPACE, driver="halving",
+                         chunk_size=CHUNK, max_evals=40, seed=5,
+                         checkpoint_dir=d, checkpoint_every=1)
+
+
+class TestFrontMetrics:
+    def test_hypervolume_2d_known_value(self):
+        obj = np.array([[2.0, 1.0], [1.0, 2.0]])
+        # two unit-overlapping squares above (0, 0): 2*1 + 1*2 - 1*1 = 3
+        assert hypervolume(obj, np.zeros(2)) == pytest.approx(3.0)
+
+    def test_hypervolume_3d_known_value(self):
+        obj = np.array([[1.0, 1.0, 1.0]])
+        assert hypervolume(obj, np.zeros(3)) == pytest.approx(1.0)
+        two = np.array([[2.0, 1.0, 1.0], [1.0, 2.0, 1.0]])
+        # union of 2x1x1 and 1x2x1 boxes sharing a 1x1x1 corner
+        assert hypervolume(two, np.zeros(3)) == pytest.approx(3.0)
+
+    def test_hypervolume_ignores_points_below_ref(self):
+        obj = np.array([[1.0, 1.0, 1.0], [-1.0, 5.0, 5.0]])
+        assert hypervolume(obj, np.zeros(3)) == pytest.approx(1.0)
+
+    def test_front_coverage(self):
+        ref = np.array([[1.0, 1.0], [2.0, 0.5]])
+        assert front_coverage(ref, ref) == 1.0
+        assert front_coverage(np.array([[2.0, 1.0]]), ref) == 1.0
+        assert front_coverage(np.array([[0.5, 0.5]]), ref) == 0.0
+        assert front_coverage(np.empty((0, 2)), ref) == 0.0
+        assert front_coverage(np.empty((0, 2)), np.empty((0, 2))) == 1.0
+
+
+class TestDriverValidation:
+    def test_unknown_name(self):
+        with pytest.raises(ValueError, match="unknown search driver"):
+            search_driver("anneal")
+
+    def test_bad_params(self):
+        with pytest.raises(ValueError):
+            EvolutionaryDriver(population=0)
+        with pytest.raises(ValueError):
+            EvolutionaryDriver(mutation=0.0)
+        with pytest.raises(ValueError):
+            SuccessiveHalvingDriver(eta=1)
+
+    def test_state_dict_name_guard(self):
+        d = EvolutionaryDriver()
+        d.reset_args = None
+        from repro.core import SearchContext  # noqa: F401
+        with pytest.raises(ValueError, match="driver state"):
+            d.restore_state(dict(name="halving", generation=0,
+                                 rng={}, visited=[]))
