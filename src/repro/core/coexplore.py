@@ -417,11 +417,27 @@ def coexplore_front(
     search: the driver proposes config-index batches scored through the
     same chunked evaluators, budget masking and archive; ``max_points``
     becomes the full-evaluation budget.  See ``search.search_front``.
+    The enumeration-cursor knobs do not apply to a driver run and raise
+    rather than being silently dropped: ``csv_path``, ``max_chunks`` and
+    ``mix_models=False`` are all incompatible with ``driver=`` (a search
+    always mixes models; ``prune`` is likewise a no-op — config-stage
+    screening is the halving driver's own fidelity rung).
     """
     models = tuple(models)
     if not models:
         raise ValueError("need at least one ModelEntry on the model axis")
     if driver is not None:
+        unsupported = [kw for kw, v in (("csv_path", csv_path),
+                                        ("max_chunks", max_chunks))
+                       if v is not None]
+        if not mix_models:
+            unsupported.append("mix_models=False")
+        if unsupported:
+            raise ValueError(
+                f"driver= is incompatible with {', '.join(unsupported)}: "
+                f"a budgeted search has no enumeration cursor to stream "
+                f"or truncate and always mixes models; drop the kwarg or "
+                f"use search_front directly")
         # budgeted search instead of enumeration: delegate to the
         # SearchDriver engine (same archive, objectives, budget masking
         # and sharded dispatch; ``max_points`` becomes the eval budget)

@@ -161,56 +161,86 @@ class SearchDriver(Protocol):
 
 class _VisitedMixin:
     """Shared visited-set bookkeeping: dedup, uniform unvisited sampling
-    (rejection with an exhaustive small-remainder fallback), and the
-    visited half of ``state_dict``."""
-
-    # exhaustive-fallback bound: materializing arange(N) above this is
-    # not worth it; rejection sampling covers the sparse regime
-    _EXHAUSTIVE_MAX = 1 << 22
+    (rejection with an exact remainder fallback at any space size), and
+    the visited half of ``state_dict``."""
 
     def _reset_visited(self) -> None:
         self._visited: set[int] = set()
 
-    def _novel(self, idx: np.ndarray) -> np.ndarray:
-        """Subset of ``idx`` neither visited nor duplicated in-batch,
-        original order preserved."""
+    def _novel(self, idx: np.ndarray,
+               limit: int | None = None) -> np.ndarray:
+        """Subset of ``idx`` neither visited nor duplicated in-batch, at
+        most ``limit`` long, original order preserved.  Only the KEPT
+        indices are marked visited (the engine evaluates everything
+        proposed) — candidates past ``limit`` stay unvisited, so a
+        truncated batch never strands a point where it can neither be
+        re-proposed nor counted against the remaining space."""
         out, seen = [], self._visited
+        cap = len(idx) if limit is None else int(limit)
         for i in np.asarray(idx, np.int64):
+            if len(out) >= cap:
+                break
             v = int(i)
             if v not in seen:
-                seen.add(v)      # marked at proposal time: engine
-                out.append(v)    # evaluates everything proposed
+                seen.add(v)
+                out.append(v)
         return np.asarray(out, np.int64)
+
+    def _exact_unvisited(self, rng: np.random.Generator, k: int,
+                         n: int) -> np.ndarray:
+        """Exactly ``min(k, unvisited)`` uniform unvisited indices at ANY
+        space size (marks them visited): draw unvisited RANKS without
+        replacement, then map rank -> index by iterated searchsorted
+        correction against the sorted visited array — no ``arange(n)``,
+        memory is O(len(visited) + k)."""
+        vis = self._visited_state()
+        left = n - len(vis)
+        k = min(k, left)
+        if k <= 0:
+            return np.empty((0,), np.int64)
+        ranks = np.sort(rng.choice(left, size=k, replace=False)
+                        .astype(np.int64))
+        # the rank-r unvisited index u is the least fixed point of
+        # x = r + |visited <= x|; iterating from x = r converges to it
+        # monotonically without overshoot
+        idx = ranks
+        while True:
+            shifted = ranks + np.searchsorted(vis, idx, side="right")
+            if np.array_equal(shifted, idx):
+                break
+            idx = shifted
+        return self._novel(idx)
 
     def _sample_unvisited(self, rng: np.random.Generator, k: int,
                           n: int) -> np.ndarray:
-        """Up to ``k`` uniform unvisited indices (marks them visited)."""
+        """Exactly ``min(k, unvisited)`` uniform unvisited indices (marks
+        them visited).  Rejection sampling covers the sparse regime; the
+        dense remainder and any rejection shortfall take the exact draw,
+        so the sample never comes up short and a budgeted search never
+        ends early just because the visited fraction grew."""
         left = n - len(self._visited)
         if left <= 0 or k <= 0:
             return np.empty((0,), np.int64)
         k = min(k, left)
-        # dense-remainder regime: enumerate what's left, choose exactly —
-        # guarantees full coverage when the eval budget spans the space
-        if n <= self._EXHAUSTIVE_MAX and left <= max(4 * k, 4096):
-            pool = np.setdiff1d(np.arange(n, dtype=np.int64),
-                                np.fromiter(self._visited, np.int64,
-                                            len(self._visited)),
-                                assume_unique=True)
-            pick = pool if len(pool) <= k \
-                else rng.choice(pool, size=k, replace=False)
-            return self._novel(np.sort(pick))
+        # dense-remainder regime (triggered on remainder size, not an
+        # absolute space bound): draw exactly — guarantees full coverage
+        # when the eval budget spans the space
+        if left <= max(4 * k, 4096):
+            return self._exact_unvisited(rng, k, n)
         # sparse regime: rejection sampling with bounded retries
         out: list[np.ndarray] = []
         got = 0
         for _ in range(64):
             cand = rng.integers(0, n, size=2 * (k - got), dtype=np.int64)
-            fresh = self._novel(cand)
+            fresh = self._novel(cand, limit=k - got)
             if len(fresh):
                 out.append(fresh)
                 got += len(fresh)
             if got >= k:
                 break
-        return np.concatenate(out)[:k] if out else np.empty((0,), np.int64)
+        if got < k:  # shortfall: finish with the exact draw
+            out.append(self._exact_unvisited(rng, k - got, n))
+        return np.concatenate(out) if out else np.empty((0,), np.int64)
 
     def _visited_state(self) -> np.ndarray:
         return np.sort(np.fromiter(self._visited, np.int64,
@@ -274,7 +304,9 @@ class EvolutionaryDriver(_VisitedMixin):
             return self._sample_unvisited(rng, k, ctx.total_points)
         want = max(1, k - int(round(k * self.immigrant_frac)))
         pd = joint_digits(parents, self._radices)
-        # oversample children: dedup will thin the batch
+        # oversample children: dedup thins the batch, and ``limit`` keeps
+        # the surplus unvisited so it stays proposable in later
+        # generations (marking then truncating would strand it)
         pick = rng.integers(0, len(parents), size=(2, 2 * want))
         a, b = pd[pick[0]], pd[pick[1]]
         cross = rng.random((2 * want, len(self._radices))) < self.crossover
@@ -282,7 +314,7 @@ class EvolutionaryDriver(_VisitedMixin):
         mut = rng.random(child.shape) < self.mutation
         resample = rng.integers(0, self._radices[None, :], size=child.shape)
         child = np.where(mut, resample, child)
-        idx = self._novel(joint_indices(child, self._radices))[:want]
+        idx = self._novel(joint_indices(child, self._radices), limit=want)
         top_up = k - len(idx)
         if top_up > 0:
             extra = self._sample_unvisited(rng, top_up, ctx.total_points)

@@ -47,9 +47,18 @@ def ppa_models():
                           degrees=(1, 2), k=4)
 
 
-def _drivers():
-    return (EvolutionaryDriver(population=30),
-            SuccessiveHalvingDriver(eta=2, rung=16))
+# Recovery must hold both when generation 0 sweeps the whole 120-point
+# space (default population/rung exceed it) AND when the driver actually
+# runs multi-generation crossover / halving rounds (population and rung
+# far below the space) — the regime where child-dedup truncation once
+# stranded visited-but-never-evaluated indices.  Factories, not shared
+# instances: every test gets a fresh driver.
+_RECOVERY_DRIVERS = {
+    "evolve": lambda: "evolve",
+    "halving": lambda: "halving",
+    "evolve-pop30": lambda: EvolutionaryDriver(population=30),
+    "halving-rung16": lambda: SuccessiveHalvingDriver(eta=2, rung=16),
+}
 
 
 def _assert_front_equal(got, ref):
@@ -122,35 +131,54 @@ class TestFrontRecovery:
     the enumerated coexplore_front exactly — indices and objectives —
     on both backends, pruned and unpruned."""
 
-    @pytest.mark.parametrize("driver_name", ["evolve", "halving"])
-    def test_recovers_enumerated_front(self, tiny_models, driver_name):
+    @pytest.mark.parametrize("driver_spec", sorted(_RECOVERY_DRIVERS))
+    def test_recovers_enumerated_front(self, tiny_models, driver_spec):
         n = joint_space_size(TINY_SPACE, len(tiny_models))
         ref = coexplore_front(tiny_models, TINY_SPACE, chunk_size=CHUNK)
-        got = search_front(tiny_models, TINY_SPACE, driver=driver_name,
+        got = search_front(tiny_models, TINY_SPACE,
+                           driver=_RECOVERY_DRIVERS[driver_spec](),
                            chunk_size=CHUNK, max_evals=n, seed=3)
         assert got.points_evaluated == n
         _assert_front_equal(got, ref)
 
-    @pytest.mark.parametrize("driver_name", ["evolve", "halving"])
+    @pytest.mark.parametrize("seed", [0, 3, 4])
+    def test_small_population_exhaustive_no_stranding(self, tiny_models,
+                                                      seed):
+        """Regression: child dedup used to mark ~2x oversampled children
+        visited BEFORE truncating to the wanted batch, stranding the
+        surplus — never evaluated, yet subtracted from the remaining
+        space — so multi-generation runs stopped at 117-118/120 points
+        on these very seeds.  With population << space, generations of
+        crossover must still visit every point and equal enumeration."""
+        n = joint_space_size(TINY_SPACE, len(tiny_models))
+        ref = coexplore_front(tiny_models, TINY_SPACE, chunk_size=CHUNK)
+        got = search_front(tiny_models, TINY_SPACE,
+                           driver=EvolutionaryDriver(population=30),
+                           chunk_size=CHUNK, max_evals=n, seed=seed)
+        assert got.points_evaluated == n
+        _assert_front_equal(got, ref)
+
+    @pytest.mark.parametrize("driver_spec", sorted(_RECOVERY_DRIVERS))
     @pytest.mark.parametrize("prune", [False, True])
     def test_budgeted_recovery_both_prune_modes(self, tiny_models,
-                                                driver_name, prune):
+                                                driver_spec, prune):
         bud = Budget(area_mm2=60.0, min_accuracy=0.3)
         n = joint_space_size(TINY_SPACE, len(tiny_models))
         ref = coexplore_front(tiny_models, TINY_SPACE, chunk_size=CHUNK,
                               budget=bud, prune=prune)
-        drv = search_driver(driver_name)
+        drv = search_driver(_RECOVERY_DRIVERS[driver_spec]())
         got = search_front(tiny_models, TINY_SPACE, driver=drv,
                            chunk_size=CHUNK, max_evals=n, seed=5, budget=bud)
         _assert_front_equal(got, ref)
 
-    @pytest.mark.parametrize("driver_name", ["evolve", "halving"])
+    @pytest.mark.parametrize("driver_spec", sorted(_RECOVERY_DRIVERS))
     def test_recovery_on_surrogate_backend(self, tiny_models, ppa_models,
-                                           driver_name):
+                                           driver_spec):
         n = joint_space_size(TINY_SPACE, len(tiny_models))
         ref = coexplore_front(tiny_models, TINY_SPACE, chunk_size=CHUNK,
                               surrogate=ppa_models)
-        got = search_front(tiny_models, TINY_SPACE, driver=driver_name,
+        got = search_front(tiny_models, TINY_SPACE,
+                           driver=_RECOVERY_DRIVERS[driver_spec](),
                            chunk_size=CHUNK, max_evals=n, seed=2,
                            surrogate=ppa_models)
         _assert_front_equal(got, ref)
@@ -308,6 +336,17 @@ class TestDriverValidation:
             EvolutionaryDriver(mutation=0.0)
         with pytest.raises(ValueError):
             SuccessiveHalvingDriver(eta=1)
+
+    @pytest.mark.parametrize("kwargs", [dict(csv_path="front.csv"),
+                                        dict(max_chunks=3),
+                                        dict(mix_models=False)])
+    def test_driver_rejects_enumeration_only_kwargs(self, tiny_models,
+                                                    kwargs):
+        """coexplore_front(driver=...) must refuse the enumeration-cursor
+        knobs it cannot honor, not silently drop them."""
+        with pytest.raises(ValueError, match="incompatible"):
+            coexplore_front(tiny_models, TINY_SPACE, chunk_size=CHUNK,
+                            driver="evolve", **kwargs)
 
     def test_state_dict_name_guard(self):
         d = EvolutionaryDriver()
